@@ -1,0 +1,51 @@
+"""Fig 7 — function cost per 1K requests under standard and stress
+workloads, per platform (Google Cloud V100 $2.48/h accounting).
+
+Paper: HAS-GPU averages 10.8x cheaper than KServe and 1.72x cheaper than
+FaST-GShare (fine-grained platforms billed on fraction actually held;
+KServe billed whole-GPU).
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.workloads import standard_workload, stress_workload
+from benchmarks.fig6_slo_violations import simulate, POLICIES
+
+
+def run(archs=("olmo-1b", "qwen2.5-3b", "gemma-7b", "mamba2-2.7b",
+               "whisper-medium", "deepseek-moe-16b"),
+        duration=180.0, out=sys.stdout, seed=0):
+    workloads = {
+        "standard": (standard_workload(duration, 25.0, seed=seed), 25.0),
+        "stress": (stress_workload(duration, 50.0, seed=seed), 50.0),
+    }
+    print("# Fig7 cost per 1K requests (USD)", file=out)
+    print("workload,arch," + ",".join(POLICIES), file=out)
+    ratios_kserve, ratios_fast = [], []
+    total_cost = 0.0
+    for wname, (arr, base) in workloads.items():
+        for arch in archs:
+            costs = {}
+            for pol in POLICIES:
+                res = simulate(arch, pol, arr, base, duration)
+                costs[pol] = res.cost_per_1k
+            print(f"{wname},{arch}," +
+                  ",".join(f"{costs[p]:.5f}" for p in POLICIES), file=out)
+            if costs["has"] > 0:
+                ratios_kserve.append(costs["kserve"] / costs["has"])
+                ratios_fast.append(costs["fast"] / costs["has"])
+            total_cost += costs["has"]
+    rk = float(np.mean(ratios_kserve))
+    rk_max = float(np.max(ratios_kserve))
+    rf = float(np.mean(ratios_fast))
+    derived = (f"kserve_over_has=avg{rk:.2f}x/max{rk_max:.2f}x"
+               f"(paper:up-to-10.8x);fast_over_has={rf:.2f}x(paper:1.72x)")
+    return total_cost * 1e3, derived
+
+
+if __name__ == "__main__":
+    us, derived = run()
+    print(f"fig7_cost,{us:.2f},{derived}")

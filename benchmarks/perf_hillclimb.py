@@ -1,0 +1,122 @@
+"""§Perf hillclimb driver: baseline + optimized variants for the three
+selected (arch x shape) pairs, each a hypothesis -> change -> measure
+cycle recorded for EXPERIMENTS.md.
+
+Pairs (from the baseline roofline table):
+  1. gemma-7b x decode_32k      — worst memory (peak > HBM at baseline)
+  2. llava-next-34b x train_4k  — most collective-bound
+  3. deepseek-moe-16b x decode_32k — worst useful-compute ratio (and the
+     paper's serving-step shape: most representative of its technique)
+
+Run:  PYTHONPATH=src python -m benchmarks.perf_hillclimb
+(sets the 512-device flag itself; run standalone, not under pytest)
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import get_config, get_shape  # noqa: E402
+from repro.launch import hlo_analysis as ha  # noqa: E402
+from repro.launch.dryrun import roofline_terms  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import build_case, call_opts, lower_case  # noqa: E402
+
+
+def measure(mesh, arch, shape, opts=None, microbatches=None,
+            fsdp_params=True):
+    cfg, shp = get_config(arch), get_shape(shape)
+    case = build_case(cfg, shp, mesh, opts=opts, microbatches=microbatches,
+                      fsdp_params=fsdp_params)
+    c = lower_case(case, mesh).compile()
+    m = c.memory_analysis()
+    a = ha.analyze(c.as_text(), case.scan_trip_hints)
+    t = roofline_terms(a, mesh.devices.size)
+    return {
+        "peak_GiB": (m.argument_size_in_bytes + m.temp_size_in_bytes) / 2**30,
+        "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+        "collective_s": t["collective_s"], "dominant": t["dominant"],
+        "flops_per_dev": a.flops, "hbm_GB_per_dev": a.hbm_bytes / 1e9,
+        "coll_GB_per_dev": a.collective_bytes / 1e9,
+    }
+
+
+def show(label, r, base=None):
+    line = (f"{label:34s} peak={r['peak_GiB']:6.2f}GiB "
+            f"compute={r['compute_s']:.3e} mem={r['memory_s']:.3e} "
+            f"coll={r['collective_s']:.3e} [{r['dominant']}]")
+    if base is not None:
+        dom = base["dominant"]
+        delta = (base[dom] - r[dom]) / base[dom] * 100
+        line += f"  dominant-term delta: {delta:+.1f}%"
+    print(line, flush=True)
+    return r
+
+
+def main(out_path="results/perf_hillclimb.json"):
+    mesh = make_production_mesh()
+    log = {}
+
+    # ---- pair 1: gemma-7b x decode_32k (memory-bound, over-HBM peak) ----
+    print("\n== pair 1: gemma-7b x decode_32k ==")
+    arch, shape = "gemma-7b", "decode_32k"
+    o0 = call_opts(get_config(arch), get_shape(shape), mesh)
+    b = show("baseline (paper-faithful)", measure(mesh, arch, shape))
+    r1 = show("+ fp8 KV cache", measure(
+        mesh, arch, shape,
+        dataclasses.replace(o0, cache_dtype="float8_e4m3fn")), b)
+    r2 = show("+ fp8 + TP-only weights", measure(
+        mesh, arch, shape,
+        dataclasses.replace(o0, cache_dtype="float8_e4m3fn"),
+        fsdp_params=False), b)
+    log["gemma-7b x decode_32k"] = {"baseline": b, "fp8": r1,
+                                    "fp8+tp_weights": r2}
+
+    # ---- pair 2: llava-next-34b x train_4k (collective-bound) ----
+    print("\n== pair 2: llava-next-34b x train_4k ==")
+    arch, shape = "llava-next-34b", "train_4k"
+    b = show("baseline (M=auto=16)", measure(mesh, arch, shape))
+    r1 = show("microbatches=4 [REFUTED]", measure(mesh, arch, shape,
+                                                  microbatches=4), b)
+    o0 = call_opts(get_config(arch), get_shape(shape), mesh)
+    r2 = show("seq-shard attention [REFUTED]", measure(
+        mesh, arch, shape,
+        dataclasses.replace(o0, attn_seq_shard=(("data",), "model"))), b)
+    log["llava-next-34b x train_4k"] = {"baseline": b,
+                                        "M4_refuted": r1,
+                                        "seq_shard_refuted": r2}
+
+    # ---- pair 3: deepseek-moe-16b x decode_32k (compute-waste) ----
+    print("\n== pair 3: deepseek-moe-16b x decode_32k ==")
+    arch, shape = "deepseek-moe-16b", "decode_32k"
+    o0 = call_opts(get_config(arch), get_shape(shape), mesh)
+    b = show("baseline (per-token groups)", measure(mesh, arch, shape))
+    r1 = show("+ single routing group", measure(
+        mesh, arch, shape,
+        dataclasses.replace(o0, moe_single_group_decode=True)), b)
+    r2 = show("+ single group + fp8 cache", measure(
+        mesh, arch, shape,
+        dataclasses.replace(o0, moe_single_group_decode=True,
+                            cache_dtype="float8_e4m3fn")), b)
+    r3 = show("+ sg + fp8 + TP-only weights", measure(
+        mesh, arch, shape,
+        dataclasses.replace(o0, moe_single_group_decode=True,
+                            cache_dtype="float8_e4m3fn"),
+        fsdp_params=False), b)
+    log["deepseek-moe-16b x decode_32k"] = {
+        "baseline": b, "single_group": r1, "sg+fp8": r2,
+        "sg+fp8+tp_weights": r3}
+
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(log, f, indent=1)
+    print(f"\nwritten to {out_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Roofline analysis from the dry-run's compiled artifacts (deliverable g).
+
+Reads results/dryrun/*.json (written by repro.launch.dryrun) and emits,
+per (arch x shape x mesh): the three roofline terms in seconds, the
+dominant term, MODEL_FLOPS (6ND / 6·N_active·D for training, 2·N_active·D
+per generated/processed token for inference), the MODEL/HLO flops ratio
+(usefulness of compiled compute), and a one-line improvement note.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+from repro.configs import ARCHS, SHAPES
+
+CHIPS = {"16x16": 256, "2x16x16": 512}
+
+
+def model_flops(arch: str, shape: str) -> float:
+    cfg = ARCHS[arch]
+    shp = SHAPES[shape]
+    n_active = cfg.active_param_count()
+    if shp.kind == "train":
+        return 6.0 * n_active * shp.global_batch * shp.seq_len
+    if shp.kind == "prefill":
+        return 2.0 * n_active * shp.global_batch * shp.seq_len
+    return 2.0 * n_active * shp.global_batch  # decode: one token per seq
+
+
+def improvement_note(rec: dict) -> str:
+    dom = rec["roofline"]["dominant"]
+    if dom == "memory_s":
+        return ("reduce HBM traffic: fuse/keep activations resident, "
+                "wider tiles, avoid f32 spills")
+    if dom == "collective_s":
+        return ("cut collective bytes: reshard weights (replicate small "
+                "arrays), overlap all-gathers with compute")
+    return "raise MXU utilization: larger per-device tiles / batch"
+
+
+def load_records(path: str = "results/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def run(path: str = "results/dryrun", out=sys.stdout, mesh_filter=None):
+    recs = load_records(path)
+    if mesh_filter:
+        recs = [r for r in recs if r["mesh"] == mesh_filter]
+    if not recs:
+        print("no dry-run records found; run repro.launch.dryrun --all",
+              file=out)
+        return 0.0, "no_records"
+    print("# Roofline (per-device terms, TPU v5e: 197TF bf16, 819GB/s HBM, "
+          "50GB/s ICI)", file=out)
+    print("arch,shape,mesh,compute_s,memory_s,collective_s,dominant,"
+          "model_flops,hlo_flops_total,useful_ratio,peak_GiB,note", file=out)
+    n_dom = {"compute_s": 0, "memory_s": 0, "collective_s": 0}
+    for r in recs:
+        t = r["roofline"]
+        mf = model_flops(r["arch"], r["shape"])
+        hlo_total = r["hlo_analysis_per_device"]["flops"] * r["chips"]
+        ratio = mf / hlo_total if hlo_total else float("nan")
+        n_dom[t["dominant"]] += 1
+        print(f"{r['arch']},{r['shape']},{r['mesh']},"
+              f"{t['compute_s']:.3e},{t['memory_s']:.3e},"
+              f"{t['collective_s']:.3e},{t['dominant']},"
+              f"{mf:.3e},{hlo_total:.3e},{ratio:.3f},"
+              f"{r['memory']['peak_bytes_per_device']/2**30:.2f},"
+              f"\"{improvement_note(r)}\"", file=out)
+    derived = (f"n={len(recs)};dominant:compute={n_dom['compute_s']}"
+               f",memory={n_dom['memory_s']},coll={n_dom['collective_s']}")
+    return float(len(recs)), derived
+
+
+if __name__ == "__main__":
+    n, derived = run()
+    print(f"roofline,{n},{derived}")

@@ -1,0 +1,48 @@
+"""Benchmark harness: one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Detailed per-figure CSVs are
+written to results/bench/. Pass --full for full-fidelity (slow) runs.
+"""
+from __future__ import annotations
+
+import io
+import os
+import sys
+import time
+
+
+def main() -> None:
+    full = "--full" in sys.argv
+    os.makedirs("results/bench", exist_ok=True)
+    rows = []
+
+    from benchmarks import (ablation_kalman, fig4_latency_grid,
+                            fig5_rapp_accuracy, fig6_slo_violations,
+                            fig7_cost, multi_function, roofline)
+
+    def record(name, fn, *a, **kw):
+        buf = io.StringIO()
+        t0 = time.time()
+        out = fn(*a, out=buf, **kw)
+        us, derived = out[0], out[1]
+        with open(f"results/bench/{name}.csv", "w") as f:
+            f.write(buf.getvalue())
+        rows.append((name, us, derived))
+        print(f"{name},{us:.2f},{derived}", flush=True)
+        return out
+
+    print("name,us_per_call,derived")
+    record("fig4_latency_grid", fig4_latency_grid.run)
+    record("fig5_rapp_accuracy", fig5_rapp_accuracy.run, quick=not full)
+    record("fig6_slo_violations", fig6_slo_violations.run,
+           duration=300.0 if full else 120.0)
+    record("fig7_cost", fig7_cost.run,
+           duration=300.0 if full else 120.0)
+    record("multi_function", multi_function.run,
+           duration=180.0 if full else 90.0)
+    record("ablation_kalman", ablation_kalman.run)
+    record("roofline", roofline.run)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Config registry: the 10 assigned architectures + the 4 input shapes."""
+from repro.configs.base import ArchConfig, MoEConfig, SSMConfig, ShapeConfig, reduced
+from repro.configs.shapes import SHAPES, get_shape
+
+from repro.configs import (
+    mamba2_2p7b,
+    dbrx_132b,
+    whisper_medium,
+    qwen2p5_3b,
+    jamba_v0p1_52b,
+    llava_next_34b,
+    deepseek_moe_16b,
+    gemma_7b,
+    command_r_35b,
+    olmo_1b,
+)
+
+ARCHS = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        mamba2_2p7b,
+        dbrx_132b,
+        whisper_medium,
+        qwen2p5_3b,
+        jamba_v0p1_52b,
+        llava_next_34b,
+        deepseek_moe_16b,
+        gemma_7b,
+        command_r_35b,
+        olmo_1b,
+    )
+}
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def list_archs():
+    return sorted(ARCHS)
+
+
+def combo_is_supported(arch: str, shape: str) -> bool:
+    """Whether (arch x shape) is a supported dry-run combination.
+
+    The only principled skip: whisper-medium x long_500k (a 500k-token
+    decoder transcript has no audio analogue — DESIGN.md §Arch-applicability).
+    """
+    if shape == "long_500k" and arch == "whisper-medium":
+        return False
+    return True
+
+
+__all__ = [
+    "ArchConfig", "MoEConfig", "SSMConfig", "ShapeConfig", "reduced",
+    "SHAPES", "get_shape", "ARCHS", "get_config", "list_archs",
+    "combo_is_supported",
+]

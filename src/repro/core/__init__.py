@@ -1,0 +1,30 @@
+"""HAS-GPU core: the paper's contribution.
+
+vGPU spatio-temporal allocation, GPU Re-configurator, Kalman workload
+prediction, hybrid auto-scaling (Algorithm 1), RaPP performance
+prediction, baseline policies, and the cluster simulator.
+"""
+from repro.core.autoscaler import (AutoScalerConfig, HybridAutoScaler,
+                                   ScalingAction)
+from repro.core.baselines import (FaSTGShareLikeConfig, FaSTGShareLikePolicy,
+                                  KServeLikeConfig, KServeLikePolicy)
+from repro.core.kalman import KalmanPredictor, LastValuePredictor
+from repro.core.perf_model import (FnSpec, cost_rate, exec_time, latency,
+                                   most_efficient_config, slo_baseline,
+                                   throughput)
+from repro.core.reconfigurator import Reconfigurator
+from repro.core.simulator import ClusterSimulator, SimConfig, SimResult
+from repro.core.vgpu import (DEFAULT_WINDOW_MS, TOTAL_SLICES, Partition,
+                             PodAlloc, VirtualGPU)
+
+__all__ = [
+    "AutoScalerConfig", "HybridAutoScaler", "ScalingAction",
+    "FaSTGShareLikeConfig", "FaSTGShareLikePolicy",
+    "KServeLikeConfig", "KServeLikePolicy",
+    "KalmanPredictor", "LastValuePredictor",
+    "FnSpec", "cost_rate", "exec_time", "latency", "most_efficient_config",
+    "slo_baseline", "throughput",
+    "Reconfigurator", "ClusterSimulator", "SimConfig", "SimResult",
+    "DEFAULT_WINDOW_MS", "TOTAL_SLICES", "Partition", "PodAlloc",
+    "VirtualGPU",
+]

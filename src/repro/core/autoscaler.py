@@ -1,0 +1,261 @@
+"""Hybrid vertical + horizontal auto-scaling — paper Algorithm 1.
+
+Scale-up: vertical first (add time-quota to pods, largest-SM pods first —
+a small quota increment there buys the most throughput), then horizontal
+onto the least-occupied used GPU (HGO metric), then a fresh GPU with the
+most cost-efficient (batch, sm, quota) for the residual gap.
+Scale-down: mirrored, smallest-SM pods first, cooldown-guarded, always
+keeping one pod alive (no scale-to-zero => no cold start).
+
+The latency predictor is pluggable: the trained RaPP model or the
+roofline oracle (both expose lat(spec, batch, sm, quota) seconds).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional
+
+from repro.core import perf_model
+from repro.core.kalman import KalmanPredictor
+from repro.core.perf_model import FnSpec
+from repro.core.reconfigurator import Reconfigurator
+from repro.core.vgpu import PodAlloc, TOTAL_SLICES
+
+
+@dataclasses.dataclass
+class AutoScalerConfig:
+    alpha: float = 0.85        # scale-up trigger: R > C_f * alpha
+    beta: float = 0.55         # scale-down trigger: R < C_f * beta
+    quota_step: float = 0.1    # Delta I_q
+    min_quota: float = 0.1
+    cooldown_s: float = 20.0   # T_cooldown between scale-downs
+    r_min: float = 1.0         # minimum retained capacity (RPS)
+    default_batch: int = 8
+    default_sm: int = 4
+    cold_start_s: float = 2.5  # container + weight load on a warm chip
+    new_gpu_cold_start_s: float = 8.0   # + chip/program initialization
+    slo_multiplier: float = 1.5  # latency cap: m x whole-chip baseline
+    service_overhead_s: float = 0.02  # batching/dispatch overhead per cycle
+
+
+@dataclasses.dataclass
+class ScalingAction:
+    fn_id: str
+    pod_id: str
+    kind: str          # vup | vdown | hup | hdown
+    detail: str = ""
+
+
+class HybridAutoScaler:
+    def __init__(self, recon: Reconfigurator,
+                 predictor: Optional[Callable] = None,
+                 cfg: AutoScalerConfig = AutoScalerConfig(),
+                 window_ms: float = 100.0):
+        self.recon = recon
+        self.cfg = cfg
+        self.window_ms = window_ms
+        self.predict_latency = predictor or (
+            lambda spec, b, sm, q: perf_model.latency(
+                spec, b, sm, q, window_ms=window_ms))
+        self.kalman: Dict[str, KalmanPredictor] = {}
+        self.last_scale_down: Dict[str, float] = {}
+
+    # ---- throughput helpers ------------------------------------------------
+    def thpt(self, spec: FnSpec, batch: int, sm: int, quota: float) -> float:
+        return batch / (self.predict_latency(spec, batch, sm, quota)
+                        + self.cfg.service_overhead_s)
+
+    def pod_thpt(self, spec: FnSpec, pod: PodAlloc) -> float:
+        return self.thpt(spec, pod.batch, pod.sm, pod.quota)
+
+    def capacity(self, spec: FnSpec) -> float:
+        return sum(self.pod_thpt(spec, p)
+                   for p in self.recon.pods_of(spec.fn_id))
+
+    # ---- main entry ----------------------------------------------------------
+    def tick(self, now: float, spec: FnSpec,
+             observed_rps: float) -> List[ScalingAction]:
+        k = self.kalman.setdefault(spec.fn_id, KalmanPredictor())
+        predicted = k.update(observed_rps)
+        return self.scale(now, spec, predicted)
+
+    def scale(self, now: float, spec: FnSpec, R: float) -> List[ScalingAction]:
+        cfg = self.cfg
+        actions: List[ScalingAction] = []
+        pods = self.recon.pods_of(spec.fn_id)
+        if not pods:
+            actions += self._bootstrap(now, spec, max(R, cfg.r_min))
+            return actions
+        c_f = sum(self.pod_thpt(spec, p) for p in pods)
+
+        if R > c_f * cfg.alpha:                      # ---- scale UP
+            delta = R - c_f * cfg.alpha
+            delta, acts = self._vertical_up(spec, pods, delta)
+            actions += acts
+            if delta > 0:
+                delta, acts = self._horizontal_up_used(now, spec, delta)
+                actions += acts
+            if delta > 0:
+                actions += self._horizontal_up_new(now, spec, delta)
+        elif (R < c_f * cfg.beta and c_f > cfg.r_min
+              and now - self.last_scale_down.get(spec.fn_id, -1e18)
+              >= cfg.cooldown_s):                    # ---- scale DOWN
+            delta = c_f - max(R, cfg.r_min) / cfg.alpha
+            acts = self._scale_down(spec, pods, delta)
+            if acts:
+                self.last_scale_down[spec.fn_id] = now
+            actions += acts
+            self.recon.release_empty_gpus()
+        return actions
+
+    # ---- bootstrap -----------------------------------------------------------
+    def _bootstrap(self, now, spec, target_rps) -> List[ScalingAction]:
+        b, sm, q = perf_model.most_efficient_config(
+            spec, target_rps, predictor=self.predict_latency,
+            quota_step=self.cfg.quota_step,
+            slo_multiplier=self.cfg.slo_multiplier)
+        gpu = self._gpu_with_room(sm, q)
+        pod = PodAlloc(fn_id=spec.fn_id, sm=sm, quota=q, batch=b)
+        cold = (self.cfg.cold_start_s if gpu is not None
+                else self.cfg.new_gpu_cold_start_s)
+        self.recon.place_pod(pod, gpu.uuid if gpu else None, now=now,
+                             cold_start_s=cold)
+        return [ScalingAction(spec.fn_id, pod.pod_id, "hup",
+                              f"bootstrap b={b} sm={sm} q={q:.2f}")]
+
+    def _gpu_with_room(self, sm, q):
+        cands = [g for g in self.recon.used_gpus() if g.can_place(sm, q)]
+        if not cands:
+            return None
+        return min(cands, key=lambda g: g.hgo)
+
+    # ---- vertical scale-up (paper L3-9) ---------------------------------------
+    def _vertical_up(self, spec, pods, delta):
+        actions = []
+        for pod in sorted(pods, key=lambda p: -p.sm):
+            if delta <= 0:
+                break
+            gpu = self.recon.gpu_of_pod(pod.pod_id)
+            if gpu is None:
+                continue
+            a_q = gpu.max_avail_quota_for(pod)
+            base = self.pod_thpt(spec, pod)
+            step = self.cfg.quota_step
+            n, gained, new_q = 0, 0.0, pod.quota
+            while pod.quota + step * (n + 1) <= a_q + 1e-9 \
+                    and delta - gained > 0:
+                n += 1
+                cand_q = pod.quota + step * n
+                gained = self.thpt(spec, pod.batch, pod.sm, cand_q) - base
+                new_q = cand_q
+            if n > 0:
+                self.recon.set_quota(pod.pod_id, new_q)
+                delta -= gained
+                actions.append(ScalingAction(
+                    spec.fn_id, pod.pod_id, "vup",
+                    f"q->{new_q:.2f} (+{gained:.1f} rps)"))
+        return delta, actions
+
+    # ---- horizontal scale-up onto a used GPU (paper L10-17) --------------------
+    def _horizontal_up_used(self, now, spec, delta):
+        actions = []
+        gpu = self.recon.lowest_hgo_gpu()
+        if gpu is None:
+            return delta, actions
+        s_max, q_max = gpu.max_avail_alloc()
+        if s_max <= 0 or q_max < self.cfg.min_quota:
+            return delta, actions
+        b = self.cfg.default_batch
+        c_max = self.thpt(spec, b, s_max, q_max)
+        if c_max <= delta:
+            return delta, actions  # used GPUs can't close the gap; go new
+        q_floor = perf_model.min_quota_for_slo(
+            spec, b, s_max, self.cfg.slo_multiplier, self.cfg.quota_step,
+            self.predict_latency)
+        if q_floor is None or q_floor > q_max + 1e-9:
+            return delta, actions  # no SLO-satisfying slot on used GPUs
+        step = self.cfg.quota_step
+        n, cap = 0, 0.0
+        while step * (n + 1) <= q_max + 1e-9 and cap < delta:
+            n += 1
+            cap = self.thpt(spec, b, s_max, step * n)
+        q = max(step * max(n, 1), q_floor)
+        pod = PodAlloc(fn_id=spec.fn_id, sm=s_max, quota=q, batch=b)
+        self.recon.place_pod(pod, gpu.uuid, now=now,
+                             cold_start_s=self.cfg.cold_start_s)
+        actions.append(ScalingAction(spec.fn_id, pod.pod_id, "hup",
+                                     f"used-gpu {gpu.uuid} sm={s_max} "
+                                     f"q={q:.2f}"))
+        return delta - cap, actions
+
+    # ---- horizontal scale-up onto a new GPU (paper L18-19) ---------------------
+    def prewarm(self, spec: FnSpec, expected_rps: float):
+        """Deploy the steady-state config before traffic starts (ready
+        immediately) — models a function already deployed, as in §4."""
+        self._bootstrap(0.0, spec, expected_rps)
+        # close any residual capacity gap exactly as the algorithm would
+        for _ in range(8):
+            if self.capacity(spec) * self.cfg.alpha >= expected_rps:
+                break
+            self.scale(0.0, spec, expected_rps)
+        for pod in self.recon.pods_of(spec.fn_id):
+            pod.ready_at = 0.0
+
+    def _horizontal_up_new(self, now, spec, delta):
+        actions = []
+        while delta > 0:
+            b, sm, q = perf_model.most_efficient_config(
+                spec, delta, predictor=self.predict_latency,
+                quota_step=self.cfg.quota_step,
+                slo_multiplier=self.cfg.slo_multiplier)
+            pod = PodAlloc(fn_id=spec.fn_id, sm=sm, quota=q, batch=b)
+            try:
+                self.recon.place_pod(pod, None, now=now,
+                                     cold_start_s=self.cfg.new_gpu_cold_start_s)
+            except RuntimeError:   # cluster at capacity
+                break
+            cap = self.thpt(spec, b, sm, q)
+            actions.append(ScalingAction(spec.fn_id, pod.pod_id, "hup",
+                                         f"new-gpu sm={sm} q={q:.2f}"))
+            delta -= cap
+        return actions
+
+    # ---- scale-down (paper L20-26) ----------------------------------------------
+    def _scale_down(self, spec, pods, delta):
+        actions = []
+        # smallest-SM pods first, keep at least one pod
+        for pod in sorted(pods, key=lambda p: p.sm):
+            if delta <= 0:
+                break
+            remaining = self.recon.pods_of(spec.fn_id)
+            is_last = len(remaining) == 1
+            contrib = self.pod_thpt(spec, pod)
+            step = self.cfg.quota_step
+            if not is_last and contrib <= delta + 1e-9:
+                self.recon.remove_pod(pod.pod_id)
+                delta -= contrib
+                actions.append(ScalingAction(spec.fn_id, pod.pod_id, "hdown",
+                                             "removed"))
+                continue
+            # vertical scale-down: shed quota stepwise (never below the
+            # SLO-satisfying floor for this pod's (batch, sm))
+            q_floor = perf_model.min_quota_for_slo(
+                spec, pod.batch, pod.sm, self.cfg.slo_multiplier,
+                step, self.predict_latency) or self.cfg.min_quota
+            floor = max(self.cfg.min_quota, q_floor)
+            n = 0
+            while pod.quota - step * (n + 1) >= floor - 1e-9:
+                cand = self.thpt(spec, pod.batch, pod.sm,
+                                 pod.quota - step * (n + 1))
+                if contrib - cand > delta:
+                    break
+                n += 1
+            if n > 0:
+                new_q = pod.quota - step * n
+                shed = contrib - self.thpt(spec, pod.batch, pod.sm, new_q)
+                self.recon.set_quota(pod.pod_id, new_q)
+                delta -= shed
+                actions.append(ScalingAction(spec.fn_id, pod.pod_id, "vdown",
+                                             f"q->{new_q:.2f}"))
+        return actions

@@ -1,0 +1,162 @@
+"""Baseline scaling policies the paper compares against.
+
+* KServeLike  — mainstream serverless inference platform: one WHOLE chip
+  per pod, horizontal-only HPA on observed load, long cold starts (device
+  + runtime init), stabilization-window scale-down.
+* FaSTGShareLike — state-of-the-art spatio-temporal GPU sharing FaaS:
+  pods use a FIXED fine-grained (batch, sm, quota) chosen offline for
+  efficiency, but scaling is horizontal-only (no quota reallocation).
+
+Both run in the same simulator/cluster as HAS — only the policy differs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+from repro.core import perf_model
+from repro.core.perf_model import FnSpec
+from repro.core.reconfigurator import Reconfigurator
+from repro.core.vgpu import PodAlloc, TOTAL_SLICES
+
+
+@dataclasses.dataclass
+class KServeLikeConfig:
+    target_utilization: float = 0.7
+    min_replicas: int = 1
+    stabilization_s: float = 300.0  # k8s HPA default scale-down window
+    cold_start_s: float = 15.0     # chip init + runtime + model load
+    default_batch: int = 8
+
+
+class KServeLikePolicy:
+    def __init__(self, recon: Reconfigurator,
+                 cfg: KServeLikeConfig = KServeLikeConfig(),
+                 window_ms: float = 100.0):
+        self.recon = recon
+        self.cfg = cfg
+        self.window_ms = window_ms
+        self._below_since: Dict[str, float] = {}
+
+    def pod_thpt(self, spec: FnSpec) -> float:
+        return perf_model.throughput(spec, self.cfg.default_batch,
+                                     TOTAL_SLICES, 1.0, self.window_ms)
+
+    def prewarm(self, spec: FnSpec, expected_rps: float):
+        import math as _m
+        n = max(self.cfg.min_replicas,
+                _m.ceil(expected_rps / max(self.pod_thpt(spec)
+                                           * self.cfg.target_utilization,
+                                           1e-9)))
+        for _ in range(n):
+            pod = PodAlloc(fn_id=spec.fn_id, sm=TOTAL_SLICES, quota=1.0,
+                           batch=self.cfg.default_batch)
+            self.recon.place_pod(pod, None, now=0.0, cold_start_s=0.0)
+
+    def tick(self, now: float, spec: FnSpec, observed_rps: float):
+        pods = self.recon.pods_of(spec.fn_id)
+        cap = self.pod_thpt(spec)
+        desired = max(self.cfg.min_replicas,
+                      math.ceil(observed_rps /
+                                max(cap * self.cfg.target_utilization, 1e-9)))
+        cur = len(pods)
+        if desired > cur:
+            self._below_since.pop(spec.fn_id, None)
+            for _ in range(desired - cur):
+                pod = PodAlloc(fn_id=spec.fn_id, sm=TOTAL_SLICES, quota=1.0,
+                               batch=self.cfg.default_batch)
+                try:
+                    self.recon.place_pod(pod, None, now=now,
+                                         cold_start_s=self.cfg.cold_start_s)
+                except RuntimeError:
+                    break
+        elif desired < cur:
+            since = self._below_since.setdefault(spec.fn_id, now)
+            if now - since >= self.cfg.stabilization_s:
+                for pod in pods[: cur - desired]:
+                    self.recon.remove_pod(pod.pod_id)
+                self.recon.release_empty_gpus()
+                self._below_since.pop(spec.fn_id, None)
+        else:
+            self._below_since.pop(spec.fn_id, None)
+
+
+@dataclasses.dataclass
+class FaSTGShareLikeConfig:
+    target_utilization: float = 0.8
+    min_replicas: int = 1
+    stabilization_s: float = 30.0
+    cold_start_s: float = 5.0     # container + model load (no vertical path)
+    default_batch: int = 8
+    unit_rps: float = 20.0        # per-pod capacity the fixed config targets
+
+
+class FaSTGShareLikePolicy:
+    """Fixed most-efficient (b, sm, q) per function; horizontal-only."""
+
+    def __init__(self, recon: Reconfigurator,
+                 cfg: FaSTGShareLikeConfig = FaSTGShareLikeConfig(),
+                 window_ms: float = 100.0):
+        self.recon = recon
+        self.cfg = cfg
+        self.window_ms = window_ms
+        self._fixed: Dict[str, tuple] = {}
+        self._below_since: Dict[str, float] = {}
+
+    def fixed_config(self, spec: FnSpec) -> tuple:
+        # FaST-GShare picks the most throughput-efficient FIXED config;
+        # efficiency favors full temporal occupancy of its partition
+        # (window quantization penalizes fractional quotas), so the fixed
+        # unit is (batch, sm, quota=1.0).
+        if spec.fn_id not in self._fixed:
+            self._fixed[spec.fn_id] = perf_model.most_efficient_config(
+                spec, self.cfg.unit_rps, slo_multiplier=2.0, quota_step=1.0)
+        return self._fixed[spec.fn_id]
+
+    def prewarm(self, spec: FnSpec, expected_rps: float):
+        import math as _m
+        b, sm, q = self.fixed_config(spec)
+        cap = perf_model.throughput(spec, b, sm, q, self.window_ms)
+        n = max(self.cfg.min_replicas,
+                _m.ceil(expected_rps /
+                        max(cap * self.cfg.target_utilization, 1e-9)))
+        for _ in range(n):
+            pod = PodAlloc(fn_id=spec.fn_id, sm=sm, quota=q, batch=b)
+            gpu = None
+            cands = [g for g in self.recon.used_gpus() if g.can_place(sm, q)]
+            if cands:
+                gpu = min(cands, key=lambda g: g.hgo).uuid
+            self.recon.place_pod(pod, gpu, now=0.0, cold_start_s=0.0)
+
+    def tick(self, now: float, spec: FnSpec, observed_rps: float):
+        b, sm, q = self.fixed_config(spec)
+        cap = perf_model.throughput(spec, b, sm, q, self.window_ms)
+        pods = self.recon.pods_of(spec.fn_id)
+        desired = max(self.cfg.min_replicas,
+                      math.ceil(observed_rps /
+                                max(cap * self.cfg.target_utilization, 1e-9)))
+        cur = len(pods)
+        if desired > cur:
+            self._below_since.pop(spec.fn_id, None)
+            for _ in range(desired - cur):
+                pod = PodAlloc(fn_id=spec.fn_id, sm=sm, quota=q, batch=b)
+                gpu = None
+                cands = [g for g in self.recon.used_gpus()
+                         if g.can_place(sm, q)]
+                if cands:
+                    gpu = min(cands, key=lambda g: g.hgo).uuid
+                try:
+                    self.recon.place_pod(pod, gpu, now=now,
+                                         cold_start_s=self.cfg.cold_start_s)
+                except RuntimeError:
+                    break
+        elif desired < cur:
+            since = self._below_since.setdefault(spec.fn_id, now)
+            if now - since >= self.cfg.stabilization_s:
+                for pod in pods[: cur - desired]:
+                    self.recon.remove_pod(pod.pod_id)
+                self.recon.release_empty_gpus()
+                self._below_since.pop(spec.fn_id, None)
+        else:
+            self._below_since.pop(spec.fn_id, None)

@@ -1,0 +1,38 @@
+"""Function cost accounting (paper Fig 7).
+
+Costs use the Google Cloud V100 price ($2.48/hour). Fine-grained platforms
+(HAS, FaST-like) are charged for the fraction (sm/8 x quota) actually
+held; whole-GPU platforms (KServe-like) are charged the full chip for the
+pod's lifetime.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+GPU_PRICE_PER_HOUR = 2.48
+
+
+@dataclasses.dataclass
+class CostMeter:
+    whole_gpu: bool = False
+    total_usd: float = 0.0
+    gpu_seconds: float = 0.0
+
+    def accrue(self, recon, dt: float) -> None:
+        """Integrate cost over dt seconds given current allocations."""
+        rate = 0.0
+        if self.whole_gpu:
+            rate = len(recon.used_gpus()) * GPU_PRICE_PER_HOUR / 3600.0
+            self.gpu_seconds += len(recon.used_gpus()) * dt
+        else:
+            for g in recon.used_gpus():
+                for pod in g.pods:
+                    frac = (pod.sm / 8.0) * pod.quota
+                    rate += frac * GPU_PRICE_PER_HOUR / 3600.0
+                    self.gpu_seconds += frac * dt
+        self.total_usd += rate * dt
+
+    def per_1k_requests(self, completed: int) -> float:
+        if completed == 0:
+            return float("inf")
+        return self.total_usd / completed * 1000.0

@@ -1,0 +1,48 @@
+"""Kalman-filter short-term request-rate predictor (paper §3.3).
+
+Scalar filter with state R (requests/s):
+    R'_t = A R_{t-1},   P'_t = A P_{t-1} A + Q
+    K    = P'_t H / (H P'_t H + D)
+    R    = R'_t + K (z_t - H R'_t),   P = (1 - K H) P'_t
+
+The predictor is decoupled from the auto-scaling algorithm (paper: "the
+HAS autoscaler decouples the request prediction model"), so any object
+with ``update(observed) -> predicted`` plugs in.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class KalmanPredictor:
+    A: float = 1.0      # state transition
+    H: float = 1.0      # observation model
+    Q: float = 8.0      # process noise (workload drift)
+    D: float = 8.0      # measurement noise
+    R: float = 0.0      # state estimate (RPS)
+    P: float = 1.0      # estimate covariance
+
+    def update(self, observed_rps: float) -> float:
+        r_pred = self.A * self.R
+        p_pred = self.A * self.P * self.A + self.Q
+        k = p_pred * self.H / (self.H * p_pred * self.H + self.D)
+        self.R = r_pred + k * (observed_rps - self.H * r_pred)
+        self.P = (1.0 - k * self.H) * p_pred
+        return max(self.R, 0.0)
+
+    def predict(self) -> float:
+        return max(self.A * self.R, 0.0)
+
+
+@dataclasses.dataclass
+class LastValuePredictor:
+    """Naive baseline: predict the current observation (ablation)."""
+    R: float = 0.0
+
+    def update(self, observed_rps: float) -> float:
+        self.R = observed_rps
+        return self.R
+
+    def predict(self) -> float:
+        return self.R

@@ -1,0 +1,175 @@
+"""Roofline-grounded latency ground truth for the cluster simulator.
+
+This is the simulator's physics: the latency of one inference of function
+(arch, batch) on ``sm`` slices with quota ``q``. It is derived from the
+architecture's analytic FLOPs/bytes (validated against the dry-run's
+compiled-HLO numbers — benchmarks/roofline.py cross-checks), with:
+
+  * an MXU-efficiency curve eff(batch, sm) that saturates with batch and
+    degrades with more slices (small batches cannot feed a wide MXU) —
+    reproducing paper Fig 4's two saturation regimes;
+  * time-window quantization for quota < 1 (paper §3.1): execution only
+    proceeds while the pod holds time tokens.
+
+RaPP (core/rapp) is trained against noisy samples of this oracle WITHOUT
+seeing its functional form — it sees only jaxpr-derived features, exactly
+as the paper's RaPP sees TVM IR features of models profiled on hardware.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+
+from repro.configs import ArchConfig
+from repro.core.vgpu import TOTAL_SLICES, DEFAULT_WINDOW_MS
+
+# per-chip hardware constants (TPU v5e)
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+SEQ_PER_REQUEST = 128  # tokens processed per inference request
+
+
+@dataclasses.dataclass(frozen=True)
+class FnSpec:
+    """A serverless inference function: an architecture served at a batch."""
+    arch: ArchConfig
+    seq: int = SEQ_PER_REQUEST
+
+    @property
+    def fn_id(self) -> str:
+        return f"fn-{self.arch.name}"
+
+
+def fn_flops(spec: FnSpec, batch: int) -> float:
+    """Forward-pass FLOPs for one batched inference."""
+    cfg = spec.arch
+    tokens = batch * spec.seq
+    core = 2.0 * cfg.active_param_count() * tokens
+    # attention score+value flops (full causal over seq)
+    if not cfg.is_attention_free:
+        n_attn = sum(1 for i in range(cfg.num_layers)
+                     if cfg.layer_kind(i) == "attn")
+        core += n_attn * 4.0 * batch * spec.seq * spec.seq \
+            * cfg.num_heads * cfg.head_dim * 0.5
+    return core
+
+
+def fn_bytes(spec: FnSpec, batch: int) -> float:
+    """HBM traffic for one batched inference (weights + activations)."""
+    cfg = spec.arch
+    weight_bytes = 2.0 * cfg.active_param_count()
+    act_bytes = 2.0 * batch * spec.seq * cfg.d_model * cfg.num_layers * 4
+    return weight_bytes + act_bytes
+
+
+def mxu_efficiency(batch: int, sm: int) -> float:
+    """Fraction of peak sustained: saturating in batch, degrading in sm.
+
+    b_half: batch at which half the slice's peak is reached; wider
+    allocations need more parallel work to fill their MXUs.
+    """
+    b_half = 2.0 * sm
+    return batch / (batch + b_half)
+
+
+def exec_time(spec: FnSpec, batch: int, sm: int) -> float:
+    """Seconds of *owned* accelerator time for one inference at full quota."""
+    frac = sm / TOTAL_SLICES
+    compute = fn_flops(spec, batch) / (frac * PEAK_FLOPS
+                                       * mxu_efficiency(batch, sm))
+    memory = fn_bytes(spec, batch) / (frac * HBM_BW)
+    # small fixed dispatch overhead per inference
+    return max(compute, memory) + 0.25e-3
+
+
+def latency(spec: FnSpec, batch: int, sm: int, quota: float,
+            window_ms: float = DEFAULT_WINDOW_MS,
+            rng: Optional[np.random.Generator] = None) -> float:
+    """Wall-clock latency of one inference under (sm, quota).
+
+    The pod owns ``quota`` of each window; execution of total demand T
+    spans ceil(T / (quota*W)) windows, of which the last is partial.
+    """
+    t = exec_time(spec, batch, sm)
+    w = window_ms / 1e3
+    q = min(max(quota, 1e-3), 1.0)
+    if q >= 1.0 - 1e-9:
+        wall = t
+    else:
+        owned_per_window = q * w
+        full_windows = math.floor(t / owned_per_window)
+        rem = t - full_windows * owned_per_window
+        wall = full_windows * w + rem
+    if rng is not None:
+        wall *= float(rng.lognormal(mean=0.0, sigma=0.03))
+    return wall
+
+
+def throughput(spec: FnSpec, batch: int, sm: int, quota: float,
+               window_ms: float = DEFAULT_WINDOW_MS,
+               overhead_s: float = 0.0) -> float:
+    """Requests/second capability (paper: batch / latency). ``overhead_s``
+    models per-cycle batching/dispatch overhead for capacity planning."""
+    return batch / (latency(spec, batch, sm, quota, window_ms) + overhead_s)
+
+
+def slo_baseline(spec: FnSpec, batch: int) -> float:
+    """Paper §4.3: theoretical shortest inference time (whole chip,
+    full quota, no sharing)."""
+    return exec_time(spec, batch, TOTAL_SLICES)
+
+
+def cost_rate(sm: int, quota: float, price_per_hour: float = 2.48) -> float:
+    """$/second while holding (sm, quota) — paper Fig 7 accounting
+    (Google Cloud V100 price), charged on actual fraction held."""
+    return price_per_hour / 3600.0 * (sm / TOTAL_SLICES) * quota
+
+
+def most_efficient_config(spec: FnSpec, target_rps: float,
+                          predictor=None,
+                          batches=(1, 2, 4, 8, 16, 32),
+                          quota_step: float = 0.1,
+                          slo_multiplier: Optional[float] = 2.0) -> tuple:
+    """Paper: RaPPbyThroughput — cheapest (batch, sm, quota) meeting
+    target_rps on a fresh chip, subject to the latency SLO
+    (lat <= slo_multiplier x whole-chip baseline for that batch).
+    Falls back to the most capable SLO-satisfying config."""
+    pred = predictor or (lambda s, b, sm, q: latency(s, b, sm, q))
+    best, best_cost = None, float("inf")
+    fallback, fb_thpt = None, -1.0
+    for b in batches:
+        cap = (slo_multiplier * slo_baseline(spec, b)
+               if slo_multiplier else float("inf"))
+        for sm in range(1, TOTAL_SLICES + 1):
+            for qi in range(1, int(round(1.0 / quota_step)) + 1):
+                q = qi * quota_step
+                lat = pred(spec, b, sm, q)
+                if lat > cap:
+                    continue
+                thpt = b / lat
+                if thpt > fb_thpt:
+                    fallback, fb_thpt = (b, sm, q), thpt
+                if thpt >= target_rps:
+                    c = cost_rate(sm, q)
+                    if c < best_cost:
+                        best, best_cost = (b, sm, q), c
+    if best is None:
+        best = fallback or (batches[-1], TOTAL_SLICES, 1.0)
+    return best
+
+
+def min_quota_for_slo(spec: FnSpec, batch: int, sm: int,
+                      slo_multiplier: float = 2.0,
+                      quota_step: float = 0.1,
+                      predictor=None) -> Optional[float]:
+    """Smallest quota at which (batch, sm) meets the latency SLO."""
+    pred = predictor or (lambda s, b, sm_, q: latency(s, b, sm_, q))
+    cap = slo_multiplier * slo_baseline(spec, batch)
+    for qi in range(1, int(round(1.0 / quota_step)) + 1):
+        q = qi * quota_step
+        if pred(spec, batch, sm, q) <= cap:
+            return q
+    return None

@@ -1,0 +1,5 @@
+from repro.core.rapp.predictor import RaPPConfig, RaPPModel, init_params
+from repro.core.rapp import dataset, features, train
+
+__all__ = ["RaPPConfig", "RaPPModel", "init_params", "dataset", "features",
+           "train"]

@@ -1,0 +1,321 @@
+"""RaPP feature extraction: jaxpr -> operator graph (+ runtime profiles).
+
+The paper converts models to TVM Relay IRModule and extracts (a) static
+operator/graph features and (b) *runtime* features: per-operator latency
+profiled under a full time quota and 6 SM partitions, plus whole-graph
+latency under a full SM allocation and 5 quotas. Here the IR is the jaxpr
+of the architecture's forward pass (the JAX-native unified IR); `lax.scan`
+bodies are summarized into single nodes with trip-count-scaled features,
+keeping graphs compact for every architecture.
+
+Runtime profiles come from the op-level micro-profiler below — a
+shape-driven roofline of each operator at slice granularity with
+measurement noise, standing in for TVM's debug-executor timings. RaPP
+never sees the simulator's full-model oracle; it must learn quota/window
+effects and graph aggregation from these per-op signals, as in the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ArchConfig
+from repro.core.vgpu import TOTAL_SLICES
+
+OP_CLASSES = ("dot", "conv", "elementwise", "reduce", "gather",
+              "scan", "other")
+N_OP_CLASSES = len(OP_CLASSES)
+SM_PROFILE_POINTS = (1, 2, 3, 4, 6, 8)       # paper: six SM configurations
+QUOTA_PROFILE_POINTS = (0.2, 0.4, 0.6, 0.8, 1.0)  # paper: five quotas
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+_ELEMENTWISE = {"add", "sub", "mul", "div", "max", "min", "exp", "log",
+                "tanh", "logistic", "rsqrt", "sqrt", "pow", "integer_pow",
+                "neg", "sign", "select_n", "convert_element_type", "custom_jvp_call",
+                "erf", "abs", "floor", "ceil", "round", "clamp", "and", "or",
+                "xor", "not", "cos", "sin", "squeeze", "expand_dims"}
+_REDUCE = {"reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+           "argmax", "argmin", "cumsum", "cumprod", "cumlogsumexp",
+           "reduce_and", "reduce_or", "logsumexp", "reduce_precision"}
+_GATHER = {"gather", "scatter", "scatter-add", "scatter_add", "take",
+           "dynamic_slice", "dynamic_update_slice", "sort", "top_k",
+           "iota", "one_hot", "argsort"}
+
+
+@dataclasses.dataclass
+class OpNode:
+    op_class: int
+    flops: float
+    bytes_in: float
+    bytes_out: float
+    max_dim: float
+    contraction: float
+    trips: float
+
+
+@dataclasses.dataclass
+class OpGraph:
+    nodes: List[OpNode]
+    edges: List[Tuple[int, int]]
+    total_flops: float
+    total_bytes: float
+    class_counts: np.ndarray  # (N_OP_CLASSES,)
+
+
+def _var_bytes(v) -> float:
+    try:
+        return float(np.prod(v.aval.shape) * v.aval.dtype.itemsize)
+    except Exception:
+        return 0.0
+
+
+def _classify(prim_name: str) -> int:
+    if prim_name in ("dot_general",):
+        return OP_CLASSES.index("dot")
+    if "conv" in prim_name:
+        return OP_CLASSES.index("conv")
+    if prim_name in ("scan", "while", "fori_loop"):
+        return OP_CLASSES.index("scan")
+    if prim_name in _ELEMENTWISE:
+        return OP_CLASSES.index("elementwise")
+    if prim_name in _REDUCE or prim_name.startswith("reduce"):
+        return OP_CLASSES.index("reduce")
+    if prim_name in _GATHER:
+        return OP_CLASSES.index("gather")
+    return OP_CLASSES.index("other")
+
+
+def _eqn_flops(eqn) -> Tuple[float, float]:
+    """(flops, contraction_size) estimate for one equation."""
+    prim = eqn.primitive.name
+    out_elems = sum(float(np.prod(v.aval.shape)) for v in eqn.outvars
+                    if hasattr(v.aval, "shape"))
+    if prim == "dot_general":
+        dims = eqn.params["dimension_numbers"]
+        (lc, _), _ = dims
+        lhs_shape = eqn.invars[0].aval.shape
+        contraction = float(np.prod([lhs_shape[i] for i in lc])) if lc else 1.0
+        return 2.0 * out_elems * contraction, contraction
+    if "conv" in prim:
+        rhs = eqn.invars[1].aval.shape if len(eqn.invars) > 1 else (1,)
+        k = float(np.prod(rhs[:-1]))
+        return 2.0 * out_elems * k, k
+    if prim in _REDUCE:
+        in_elems = sum(float(np.prod(v.aval.shape)) for v in eqn.invars
+                       if hasattr(v.aval, "shape"))
+        return in_elems, 1.0
+    if prim in _ELEMENTWISE:
+        return out_elems, 1.0
+    return 0.0, 1.0
+
+
+def _walk(jaxpr, trips: float, nodes, edges, var_producer):
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim in ("scan", "while", "closed_call", "pjit", "custom_vjp_call",
+                    "custom_jvp_call", "remat", "checkpoint", "cond"):
+            # descend; scan multiplies trip count and is itself a node
+            inner_trips = trips
+            sub = None
+            if prim == "scan":
+                inner_trips = trips * eqn.params.get("length", 1)
+                sub = eqn.params["jaxpr"].jaxpr
+            elif prim in ("closed_call", "pjit", "custom_vjp_call",
+                          "custom_jvp_call", "remat", "checkpoint"):
+                j = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+                sub = j.jaxpr if hasattr(j, "jaxpr") else j
+            elif prim == "cond":
+                branches = eqn.params.get("branches", ())
+                sub = branches[0].jaxpr if branches else None
+            if sub is not None:
+                n_before = len(nodes)
+                _walk(sub, inner_trips, nodes, edges, {})
+                if prim == "scan":
+                    # connect scan region sequentially to the outer graph
+                    for v in eqn.invars:
+                        p = var_producer.get(id(v))
+                        if p is not None and n_before < len(nodes):
+                            edges.append((p, n_before))
+                for v in eqn.outvars:
+                    var_producer[id(v)] = len(nodes) - 1 if nodes else 0
+                continue
+        flops, contraction = _eqn_flops(eqn)
+        b_in = sum(_var_bytes(v) for v in eqn.invars
+                   if hasattr(v, "aval"))
+        b_out = sum(_var_bytes(v) for v in eqn.outvars)
+        dims = [d for v in eqn.outvars if hasattr(v.aval, "shape")
+                for d in v.aval.shape]
+        node = OpNode(op_class=_classify(prim), flops=flops * trips,
+                      bytes_in=b_in * trips, bytes_out=b_out * trips,
+                      max_dim=float(max(dims) if dims else 1),
+                      contraction=contraction, trips=trips)
+        idx = len(nodes)
+        nodes.append(node)
+        for v in eqn.invars:
+            p = var_producer.get(id(v))
+            if p is not None:
+                edges.append((p, idx))
+        for v in eqn.outvars:
+            var_producer[id(v)] = idx
+
+
+def extract_graph(cfg: ArchConfig, batch: int, seq: int = 128) -> OpGraph:
+    """Trace the forward pass and build the operator graph."""
+    from repro import models
+    from repro.models import CallOpts
+
+    params = jax.eval_shape(lambda r: models.init_params(r, cfg),
+                            jax.random.PRNGKey(0))
+    batch_spec = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+    if cfg.is_encoder_decoder:
+        batch_spec["frame_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.num_visual_tokens:
+        v = min(cfg.num_visual_tokens, 64)
+        batch_spec["visual_embeds"] = jax.ShapeDtypeStruct(
+            (batch, v, cfg.d_model), jnp.bfloat16)
+
+    def fwd(p, b):
+        logits, _ = models.forward(p, cfg, b, CallOpts(attn_chunk=1 << 30))
+        return logits
+
+    jaxpr = jax.make_jaxpr(fwd)(params, batch_spec)
+    nodes, edges = [], []
+    _walk(jaxpr.jaxpr, 1.0, nodes, edges, {})
+    counts = np.zeros(N_OP_CLASSES)
+    for n in nodes:
+        counts[n.op_class] += 1
+    return OpGraph(nodes=nodes, edges=edges,
+                   total_flops=sum(n.flops for n in nodes),
+                   total_bytes=sum(n.bytes_in + n.bytes_out for n in nodes),
+                   class_counts=counts)
+
+
+# ------------------------------------------------------------- runtime prof
+def op_profile(node: OpNode, rng: np.random.Generator) -> np.ndarray:
+    """Per-operator latency at full quota under the 6 SM partitions —
+    the stand-in for the paper's TVM-debug-executor Runtime Profiler."""
+    out = np.zeros(len(SM_PROFILE_POINTS), np.float32)
+    # shape-driven MXU efficiency: small contractions underfeed the MXU
+    for i, sm in enumerate(SM_PROFILE_POINTS):
+        frac = sm / TOTAL_SLICES
+        eff = min(1.0, node.contraction / (128.0 * frac * 8)) \
+            if node.op_class == OP_CLASSES.index("dot") else 1.0
+        eff = max(eff, 0.05)
+        compute = node.flops / (frac * PEAK_FLOPS * eff)
+        memory = (node.bytes_in + node.bytes_out) / (frac * HBM_BW)
+        t = max(compute, memory) + 1e-6
+        out[i] = t * rng.lognormal(0.0, 0.05)
+    return out
+
+
+def graph_quota_profile(spec, batch: int,
+                        rng: np.random.Generator) -> np.ndarray:
+    """Whole-graph latency at full SM under the 5 quota points (paper:
+    'runtime profiler evaluates the model under a full SM configuration
+    and five distinct quota configurations')."""
+    from repro.core import perf_model
+    out = np.zeros(len(QUOTA_PROFILE_POINTS), np.float32)
+    for i, q in enumerate(QUOTA_PROFILE_POINTS):
+        out[i] = perf_model.latency(spec, batch, TOTAL_SLICES, q, rng=rng)
+    return out
+
+
+# ------------------------------------------------------------- tensorize
+MAX_NODES = 160
+NODE_STATIC_F = N_OP_CLASSES + 5
+NODE_RUNTIME_F = len(SM_PROFILE_POINTS)
+NODE_F = NODE_STATIC_F + NODE_RUNTIME_F
+GLOBAL_STATIC_F = 2 + N_OP_CLASSES + 3   # totals, counts, (b, sm, q)
+GLOBAL_RUNTIME_F = len(QUOTA_PROFILE_POINTS)
+GLOBAL_F = GLOBAL_STATIC_F + GLOBAL_RUNTIME_F
+
+
+def _coarsen(graph: OpGraph, max_nodes: int) -> OpGraph:
+    """Merge low-flops nodes into their predecessors until it fits."""
+    if len(graph.nodes) <= max_nodes:
+        return graph
+    order = np.argsort([n.flops for n in graph.nodes])
+    keep = set(range(len(graph.nodes)))
+    merged_into = {}
+    for idx in order:
+        if len(keep) <= max_nodes:
+            break
+        preds = [a for a, b in graph.edges if b == idx and a in keep]
+        if not preds:
+            continue
+        tgt = preds[-1]
+        a, b = graph.nodes[tgt], graph.nodes[idx]
+        a.flops += b.flops
+        a.bytes_in += b.bytes_in
+        a.bytes_out += b.bytes_out
+        a.max_dim = max(a.max_dim, b.max_dim)
+        keep.discard(idx)
+        merged_into[idx] = tgt
+    remap = {old: new for new, old in enumerate(sorted(keep))}
+
+    def res(i):
+        while i in merged_into:
+            i = merged_into[i]
+        return remap.get(i)
+
+    new_edges = set()
+    for a, b in graph.edges:
+        ra, rb = res(a), res(b)
+        if ra is not None and rb is not None and ra != rb:
+            new_edges.add((ra, rb))
+    nodes = [graph.nodes[i] for i in sorted(keep)]
+    return OpGraph(nodes, sorted(new_edges), graph.total_flops,
+                   graph.total_bytes, graph.class_counts)
+
+
+def tensorize(graph: OpGraph, spec, batch: int, sm: int, quota: float,
+              rng: np.random.Generator, with_runtime: bool = True):
+    """-> dict of numpy arrays: node_feats (MAX_NODES, NODE_F), adj mask,
+    node mask, global feats (GLOBAL_F,)."""
+    graph = _coarsen(graph, MAX_NODES)
+    n = len(graph.nodes)
+    feats = np.zeros((MAX_NODES, NODE_F), np.float32)
+    for i, node in enumerate(graph.nodes[:MAX_NODES]):
+        onehot = np.zeros(N_OP_CLASSES, np.float32)
+        onehot[node.op_class] = 1.0
+        static = np.array([np.log1p(node.flops), np.log1p(node.bytes_in),
+                           np.log1p(node.bytes_out), np.log1p(node.max_dim),
+                           np.log1p(node.trips)], np.float32)
+        runtime = (np.log1p(op_profile(node, rng) * 1e6)
+                   if with_runtime else np.zeros(NODE_RUNTIME_F, np.float32))
+        feats[i] = np.concatenate([onehot, static, runtime])
+    adj = np.zeros((MAX_NODES, MAX_NODES), np.float32)
+    for a, b in graph.edges:
+        if a < MAX_NODES and b < MAX_NODES:
+            adj[a, b] = 1.0
+            adj[b, a] = 1.0
+    adj[np.arange(MAX_NODES), np.arange(MAX_NODES)] = 1.0
+    mask = np.zeros(MAX_NODES, np.float32)
+    mask[:min(n, MAX_NODES)] = 1.0
+    g_static = np.concatenate([
+        [np.log1p(graph.total_flops), np.log1p(graph.total_bytes)],
+        np.log1p(graph.class_counts),
+        [np.log1p(batch), sm / TOTAL_SLICES, quota]]).astype(np.float32)
+    if with_runtime:
+        prof = graph_quota_profile(spec, batch, rng)  # seconds, full SM
+        g_rt = np.log1p(prof * 1e3)
+        # closed-form prior: interpolate the quota profile at this quota,
+        # scale exec time by the slice fraction -> log-ms anchor the GNN
+        # refines (residual learning; the static-only baseline has no
+        # profile, hence prior = 0 — the paper's DIPPM handicap)
+        q_lat = float(np.interp(quota, QUOTA_PROFILE_POINTS, prof))
+        prior = np.log1p(q_lat * (TOTAL_SLICES / max(sm, 1)) * 1e3)
+    else:
+        g_rt = np.zeros(GLOBAL_RUNTIME_F, np.float32)
+        prior = 0.0
+    return {"node_feats": feats, "adj": adj, "mask": mask,
+            "global": np.concatenate([g_static, g_rt]).astype(np.float32),
+            "prior": np.float32(prior)}

@@ -1,0 +1,55 @@
+"""Graph Attention (GAT, Velickovic et al. 2018) blocks in pure JAX.
+
+Dense-adjacency formulation (graphs are padded to MAX_NODES): per head,
+e_ij = LeakyReLU(a_src . Wh_i + a_dst . Wh_j), attention is softmaxed over
+the masked neighborhood, and features aggregate as h'_i = ELU(sum_j a_ij
+Wh_j). The attention mechanism captures potential kernel-fusion affinity
+between adjacent operators (paper §3.2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def init_gat_layer(rng, in_dim: int, out_dim: int, heads: int):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    scale = 1.0 / np.sqrt(in_dim)
+    return {
+        "W": jax.random.normal(k1, (heads, in_dim, out_dim)) * scale,
+        "a_src": jax.random.normal(k2, (heads, out_dim)) * scale,
+        "a_dst": jax.random.normal(k3, (heads, out_dim)) * scale,
+    }
+
+
+def gat_layer(p, h, adj, mask):
+    """h: (N, F); adj: (N, N) 1/0; mask: (N,) 1/0 -> (N, heads*out)."""
+    hw = jnp.einsum("nf,hfo->hno", h, p["W"])          # (H, N, O)
+    src = jnp.einsum("hno,ho->hn", hw, p["a_src"])     # (H, N)
+    dst = jnp.einsum("hno,ho->hn", hw, p["a_dst"])
+    e = src[:, :, None] + dst[:, None, :]              # (H, N, N)
+    e = jax.nn.leaky_relu(e, 0.2)
+    neigh = adj * mask[None, :] * mask[:, None]
+    e = jnp.where(neigh[None] > 0, e, -1e30)
+    att = jax.nn.softmax(e, axis=-1)
+    att = jnp.where(neigh[None] > 0, att, 0.0)
+    out = jnp.einsum("hij,hjo->hio", att, hw)          # (H, N, O)
+    out = jax.nn.elu(out)
+    H, N, O = out.shape
+    return out.transpose(1, 0, 2).reshape(N, H * O) * mask[:, None]
+
+
+def init_mlp(rng, dims):
+    ks = jax.random.split(rng, len(dims) - 1)
+    return [{"W": jax.random.normal(k, (a, b)) / np.sqrt(a),
+             "b": jnp.zeros((b,))}
+            for k, a, b in zip(ks, dims[:-1], dims[1:])]
+
+
+def mlp(params, x, final_linear=True):
+    for i, layer in enumerate(params):
+        x = x @ layer["W"] + layer["b"]
+        if i < len(params) - 1 or not final_linear:
+            x = jax.nn.gelu(x)
+    return x

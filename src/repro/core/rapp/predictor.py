@@ -1,0 +1,103 @@
+"""RaPP predictor: GAT blocks over the operator graph + global-feature MLP
+-> inference latency for any (batch, SM partition, quota) configuration.
+
+DIPPM baseline (Panner Selvam & Brorsson 2023): same skeleton, but only
+STATIC features — per-op runtime profiles and the graph quota profile are
+zeroed (the paper retrofits resource configs into its static features and
+retrains; `with_runtime=False` reproduces exactly that).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rapp import features as F
+from repro.core.rapp import gat
+
+
+@dataclasses.dataclass(frozen=True)
+class RaPPConfig:
+    gat_dim: int = 32
+    gat_heads: int = 4
+    gat_layers: int = 3
+    mlp_hidden: int = 128
+    with_runtime: bool = True  # False -> DIPPM-style static-only
+
+
+def init_params(rng, cfg: RaPPConfig = RaPPConfig()):
+    ks = jax.random.split(rng, cfg.gat_layers + 3)
+    layers = []
+    in_dim = F.NODE_F
+    for i in range(cfg.gat_layers):
+        layers.append(gat.init_gat_layer(ks[i], in_dim, cfg.gat_dim,
+                                         cfg.gat_heads))
+        in_dim = cfg.gat_dim * cfg.gat_heads
+    return {
+        "gat": layers,
+        "global_mlp": gat.init_mlp(ks[-3], [F.GLOBAL_F, cfg.mlp_hidden,
+                                            cfg.mlp_hidden]),
+        "head": gat.init_mlp(ks[-2], [in_dim + cfg.mlp_hidden,
+                                      cfg.mlp_hidden, cfg.mlp_hidden // 2, 1]),
+    }
+
+
+def forward_one(params, node_feats, adj, mask, global_feats, prior=0.0):
+    """Residual head: output = prior (closed-form log-ms anchor from the
+    runtime quota profile; 0 for the static-only baseline) + GNN delta."""
+    h = node_feats
+    for layer in params["gat"]:
+        h = gat.gat_layer(layer, h, adj, mask)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    pooled = (h * mask[:, None]).sum(0) / denom      # mean pool
+    g = gat.mlp(params["global_mlp"], global_feats, final_linear=False)
+    out = gat.mlp(params["head"], jnp.concatenate([pooled, g]))
+    return prior + out[0]  # log-latency (ms)
+
+
+forward_batch = jax.vmap(forward_one, in_axes=(None, 0, 0, 0, 0, 0))
+
+
+def predict_latency_ms(params, batch_dict):
+    """batch_dict of stacked tensorized samples -> latency in ms."""
+    logl = forward_batch(params, batch_dict["node_feats"],
+                         batch_dict["adj"], batch_dict["mask"],
+                         batch_dict["global"], batch_dict["prior"])
+    return jnp.expm1(jnp.maximum(logl, 0.0)) + 1e-6
+
+
+class RaPPModel:
+    """Trained-weights wrapper exposing the autoscaler predictor protocol:
+    lat(spec, batch, sm, quota) -> seconds."""
+
+    def __init__(self, params, cfg: RaPPConfig = RaPPConfig(), seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self._graphs = {}
+        self._rng = np.random.default_rng(seed)
+        self._jit = jax.jit(forward_one)
+        self._cache = {}
+
+    def _graph(self, spec, batch):
+        key = (spec.arch.name, batch)
+        if key not in self._graphs:
+            from repro.configs import reduced
+            self._graphs[key] = F.extract_graph(spec.arch, batch,
+                                                seq=spec.seq)
+        return self._graphs[key]
+
+    def __call__(self, spec, batch, sm, quota) -> float:
+        key = (spec.arch.name, batch, sm, round(quota, 3))
+        if key in self._cache:
+            return self._cache[key]
+        g = self._graph(spec, batch)
+        t = F.tensorize(g, spec, batch, sm, quota, self._rng,
+                        with_runtime=self.cfg.with_runtime)
+        logl = self._jit(self.params, t["node_feats"], t["adj"], t["mask"],
+                         t["global"], t["prior"])
+        lat_s = float(np.expm1(max(float(logl), 0.0)) + 1e-6) / 1e3
+        self._cache[key] = lat_s
+        return lat_s

@@ -1,0 +1,96 @@
+"""GPU Re-configurator: direct cluster accelerator management.
+
+The paper's component bypasses the k8s device plugin and manages GPUs by
+UUID via NVML so the auto-scaler can target specific chips and rewrite
+pods' resource device-files at runtime. Here it owns the authoritative
+map uuid -> VirtualGPU, performs placements/removals/quota rewrites, and
+exposes the occupancy views (HGO) the auto-scaler reads.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Dict, List, Optional
+
+from repro.core.vgpu import PodAlloc, VirtualGPU
+
+_gpu_counter = itertools.count()
+
+
+class Reconfigurator:
+    def __init__(self, num_gpus: int = 0, gpus_per_node: int = 1,
+                 window_ms: float = 100.0, max_gpus: Optional[int] = None):
+        self.gpus: Dict[str, VirtualGPU] = {}
+        self.window_ms = window_ms
+        self.gpus_per_node = gpus_per_node
+        self.max_gpus = max_gpus
+        for _ in range(num_gpus):
+            self.add_gpu()
+
+    # ---- topology ----------------------------------------------------------
+    def add_gpu(self) -> VirtualGPU:
+        if self.max_gpus is not None and len(self.gpus) >= self.max_gpus:
+            raise RuntimeError("cluster at max GPU capacity")
+        i = next(_gpu_counter)
+        uuid = f"GPU-{i:04d}"
+        node = f"node-{i // self.gpus_per_node}"
+        g = VirtualGPU(uuid, node=node, window_ms=self.window_ms)
+        self.gpus[uuid] = g
+        return g
+
+    def release_empty_gpus(self, keep: int = 0) -> List[str]:
+        """Return (and drop) GPUs with no pods (paper L25-26)."""
+        empty = [u for u, g in self.gpus.items() if not g.pods]
+        released = []
+        for u in empty:
+            if len(self.gpus) <= keep:
+                break
+            del self.gpus[u]
+            released.append(u)
+        return released
+
+    # ---- views -------------------------------------------------------------
+    def used_gpus(self) -> List[VirtualGPU]:
+        return [g for g in self.gpus.values() if g.pods]
+
+    def pods_of(self, fn_id: str) -> List[PodAlloc]:
+        return [p for g in self.gpus.values() for p in g.pods
+                if p.fn_id == fn_id]
+
+    def gpu_of_pod(self, pod_id: str) -> Optional[VirtualGPU]:
+        for g in self.gpus.values():
+            if any(p.pod_id == pod_id for p in g.pods):
+                return g
+        return None
+
+    def lowest_hgo_gpu(self, exclude=()) -> Optional[VirtualGPU]:
+        used = [g for g in self.used_gpus() if g.uuid not in exclude]
+        if not used:
+            return None
+        return min(used, key=lambda g: g.hgo)
+
+    # ---- mutations ---------------------------------------------------------
+    def place_pod(self, pod: PodAlloc, gpu_uuid: Optional[str] = None,
+                  now: float = 0.0, cold_start_s: float = 0.0) -> PodAlloc:
+        if gpu_uuid is None:
+            g = self.add_gpu()
+        else:
+            g = self.gpus[gpu_uuid]
+        pod.created_at = now
+        pod.ready_at = now + cold_start_s
+        g.place(pod)
+        return pod
+
+    def remove_pod(self, pod_id: str) -> None:
+        g = self.gpu_of_pod(pod_id)
+        if g is not None:
+            g.remove(pod_id)
+
+    def set_quota(self, pod_id: str, quota: float) -> None:
+        g = self.gpu_of_pod(pod_id)
+        if g is None:
+            raise KeyError(pod_id)
+        g.set_quota(pod_id, quota)
+
+    # ---- invariants ----------------------------------------------------------
+    def invariant_ok(self) -> bool:
+        return all(g.invariant_ok() for g in self.gpus.values())

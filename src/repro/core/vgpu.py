@@ -1,0 +1,171 @@
+"""vAccelerator (paper: vGPU) — fine-grained spatio-temporal allocation.
+
+A physical chip is abstracted as a vGPU with ``TOTAL_SLICES`` equal compute
+slices (the TPU analogue of MPS SM partitions — DESIGN.md §2). Allocation
+is spatio-temporal:
+
+  * spatial:  a pod owns a *partition* of ``sm`` slices, fixed at pod
+    creation (like an MPS CUDA context's SM set);
+  * temporal: within its partition, a pod owns a *time-token quota*
+    ``q in (0, 1]`` of the scheduling window — runtime-mutable, which is
+    what makes vertical scaling cheap (paper §3.1, Fig 2).
+
+SM alignment (paper Fig 2): pods within a GPU are stacked onto aligned
+partitions — a new pod either joins an existing partition of the same size
+(sharing its time window) or carves a new partition from free slices.
+This prevents spatial fragmentation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional
+
+TOTAL_SLICES = 8          # slice granularity of one chip (1/8 .. 8/8)
+DEFAULT_WINDOW_MS = 100.0  # time-token window (cgroups-like period)
+
+_pod_counter = itertools.count()
+
+
+@dataclasses.dataclass
+class PodAlloc:
+    """One function instance and its resource allocation."""
+    fn_id: str
+    sm: int                      # slices in its partition (1..TOTAL_SLICES)
+    quota: float                 # time-token share of the partition window
+    batch: int                   # serving batch size
+    pod_id: str = ""
+    gpu_uuid: str = ""
+    created_at: float = 0.0
+    ready_at: float = 0.0        # cold start completion time
+
+    def __post_init__(self):
+        if not self.pod_id:
+            self.pod_id = f"pod-{next(_pod_counter)}"
+        self._validate()
+
+    def _validate(self):
+        if not (1 <= self.sm <= TOTAL_SLICES):
+            raise ValueError(f"sm={self.sm} out of range")
+        if not (0.0 < self.quota <= 1.0 + 1e-9):
+            raise ValueError(f"quota={self.quota} out of range")
+
+
+@dataclasses.dataclass
+class Partition:
+    """An aligned group of slices shared (in time) by its pods."""
+    sm: int
+    pods: List[PodAlloc] = dataclasses.field(default_factory=list)
+
+    @property
+    def quota_used(self) -> float:
+        return sum(p.quota for p in self.pods)
+
+    @property
+    def quota_free(self) -> float:
+        return max(0.0, 1.0 - self.quota_used)
+
+
+class VirtualGPU:
+    """One physical chip under HAS scheduling."""
+
+    def __init__(self, uuid: str, node: str = "node-0",
+                 window_ms: float = DEFAULT_WINDOW_MS):
+        self.uuid = uuid
+        self.node = node
+        self.window_ms = window_ms
+        self.partitions: List[Partition] = []
+
+    # ---- capacity queries -------------------------------------------------
+    @property
+    def slices_used(self) -> int:
+        return sum(p.sm for p in self.partitions)
+
+    @property
+    def slices_free(self) -> int:
+        return TOTAL_SLICES - self.slices_used
+
+    @property
+    def pods(self) -> List[PodAlloc]:
+        return [pod for part in self.partitions for pod in part.pods]
+
+    @property
+    def hgo(self) -> float:
+        """HAS GPU Occupancy: sum over pods of (sm/8) * quota (paper L11)."""
+        return sum((pod.sm / TOTAL_SLICES) * pod.quota for pod in self.pods)
+
+    def partition_of(self, pod_id: str) -> Optional[Partition]:
+        for part in self.partitions:
+            if any(p.pod_id == pod_id for p in part.pods):
+                return part
+        return None
+
+    def max_avail_quota_for(self, pod: PodAlloc) -> float:
+        """Paper: RetriveMaxAvailQuotaForPod — headroom in its partition."""
+        part = self.partition_of(pod.pod_id)
+        if part is None:
+            raise KeyError(pod.pod_id)
+        return pod.quota + part.quota_free
+
+    def max_avail_alloc(self) -> tuple:
+        """Paper: RetriveMaxAvailQuotaAndSM — the largest (sm, quota) a new
+        pod could get on this GPU under SM alignment."""
+        best = (0, 0.0)
+        if self.slices_free > 0:
+            best = (self.slices_free, 1.0)
+        for part in self.partitions:
+            if part.quota_free > 1e-9:
+                cand = (part.sm, part.quota_free)
+                if cand[0] * cand[1] > best[0] * best[1]:
+                    best = cand
+        return best
+
+    # ---- placement (SM-alignment enforced) --------------------------------
+    def can_place(self, sm: int, quota: float) -> bool:
+        if self.slices_free >= sm:
+            return True
+        return any(p.sm == sm and p.quota_free >= quota - 1e-9
+                   for p in self.partitions)
+
+    def place(self, pod: PodAlloc) -> Partition:
+        """Place under SM alignment: join an existing same-size partition
+        with quota headroom, else carve a new partition from free slices."""
+        for part in self.partitions:
+            if part.sm == pod.sm and part.quota_free >= pod.quota - 1e-9:
+                part.pods.append(pod)
+                pod.gpu_uuid = self.uuid
+                return part
+        if self.slices_free >= pod.sm:
+            part = Partition(sm=pod.sm, pods=[pod])
+            self.partitions.append(part)
+            pod.gpu_uuid = self.uuid
+            return part
+        raise RuntimeError(
+            f"GPU {self.uuid}: cannot place sm={pod.sm} q={pod.quota:.2f} "
+            f"(free slices {self.slices_free})")
+
+    def remove(self, pod_id: str) -> None:
+        for part in self.partitions:
+            part.pods = [p for p in part.pods if p.pod_id != pod_id]
+        self.partitions = [p for p in self.partitions if p.pods]
+
+    # ---- vertical scaling (runtime quota reallocation, paper Fig 2) -------
+    def set_quota(self, pod_id: str, quota: float) -> None:
+        part = self.partition_of(pod_id)
+        if part is None:
+            raise KeyError(pod_id)
+        pod = next(p for p in part.pods if p.pod_id == pod_id)
+        others = part.quota_used - pod.quota
+        if others + quota > 1.0 + 1e-9:
+            raise ValueError(
+                f"quota {quota:.2f} exceeds partition headroom "
+                f"({1.0 - others:.2f})")
+        if quota <= 0:
+            raise ValueError("quota must be positive; use remove() to free")
+        pod.quota = quota
+
+    def invariant_ok(self) -> bool:
+        """Conservation invariants (used by property tests)."""
+        if self.slices_used > TOTAL_SLICES:
+            return False
+        return all(p.quota_used <= 1.0 + 1e-9 for p in self.partitions)

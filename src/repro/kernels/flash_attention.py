@@ -1,0 +1,99 @@
+"""Flash attention (prefill) Pallas TPU kernel.
+
+Online-softmax attention tiled for VMEM: grid = (batch x kv_heads x
+q_groups, q_blocks, k_blocks) with the k-block axis innermost (TPU grids
+iterate sequentially, so the f32 running (m, l, acc) scratch carries
+across k blocks). Block shapes are MXU-aligned (multiples of 128 where
+the head_dim allows). GQA is expressed through the k/v index_map: query
+row bh reads kv head bh // q_groups — no KV replication in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+               scale, causal, window, block_q, block_k, n_k):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)
+    s = q @ k.T                                       # (bq, bk)
+
+    i = pl.program_id(1)
+    q_pos = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    ok = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window:
+        ok &= k_pos > q_pos - window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_sc[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_sc[...] = l_sc[...] * corr + p.sum(axis=-1)
+    acc_sc[...] = acc_sc[...] * corr[:, None] + p @ v
+    m_sc[...] = m_new
+
+    @pl.when(j == n_k - 1)
+    def _done():
+        o_ref[0] = (acc_sc[...] /
+                    jnp.maximum(l_sc[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_k=128, interpret=None):
+    """q: (B, S, K, G, hd); k, v: (B, T, K, hd) -> (B, S, K, G, hd)."""
+    B, S, K, G, hd = q.shape
+    T = k.shape[1]
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    assert S % block_q == 0 and T % block_k == 0
+    scale = 1.0 / (hd ** 0.5)
+
+    qf = q.transpose(0, 2, 3, 1, 4).reshape(B * K * G, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * K, T, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * K, T, hd)
+    n_q, n_k = S // block_q, T // block_k
+
+    out = pl.pallas_call(
+        functools.partial(_fa_kernel, scale=scale, causal=causal,
+                          window=window, block_q=block_q, block_k=block_k,
+                          n_k=n_k),
+        grid=(B * K * G, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bh, i, j, g=G: (bh // g, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bh, i, j, g=G: (bh // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * K * G, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, K, G, S, hd).transpose(0, 3, 1, 2, 4)

@@ -1,0 +1,13 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode; on TPU the
+same call sites lower through Mosaic. ``ref.py`` holds the pure-jnp
+oracles every kernel is tested against.
+"""
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.moe_gmm import expert_ffn, gmm
+from repro.kernels.ssd_scan import ssd_chunk_scan
+
+__all__ = ["decode_attention", "flash_attention", "expert_ffn", "gmm",
+           "ssd_chunk_scan"]

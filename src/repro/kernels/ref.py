@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B,S,K,G,hd); k,v: (B,T,K,hd) -> (B,S,K,G,hd). f32 softmax."""
+    B, S, K, G, hd = q.shape
+    T = k.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+    s = jnp.einsum("bskgd,btkd->bkgst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(T)[None, :]
+    ok = jnp.ones((S, T), bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window:
+        ok &= k_pos > q_pos - window
+    s = jnp.where(ok[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, valid):
+    """q: (B,1,K,G,hd); k,v: (B,T,K,hd); valid: (T,) bool -> (B,1,K,G,hd)."""
+    hd = q.shape[-1]
+    scale = 1.0 / (hd ** 0.5)
+    s = jnp.einsum("bskgd,btkd->bkgst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = jnp.where(valid[None, None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def ssd_chunk_scan_ref(xc, Bc, Cc, dtc, dAc, h0):
+    """SSD chunked scan oracle.
+
+    xc: (nc, B, Q, nh, hd); Bc/Cc: (nc, B, Q, nh, N); dtc/dAc: (nc, B, Q, nh);
+    h0: (B, nh, hd, N) f32. Returns (final_state, y (nc, B, Q, nh, hd) f32).
+    """
+    Q = xc.shape[2]
+
+    def body(h, xs_):
+        x_i, B_i, C_i, dt_i, dA_i = xs_
+        cum = jnp.cumsum(dA_i, axis=1)
+        total = cum[:, -1]
+        cb = jnp.einsum("bihn,bjhn->bhij", C_i.astype(jnp.float32),
+                        B_i.astype(jnp.float32))
+        li = cum.transpose(0, 2, 1)[:, :, :, None]
+        lj = cum.transpose(0, 2, 1)[:, :, None, :]
+        decay = jnp.exp(jnp.where(jnp.tril(jnp.ones((Q, Q), bool)),
+                                  li - lj, -1e30))
+        scores = cb * decay * dt_i.transpose(0, 2, 1)[:, :, None, :]
+        y_intra = jnp.einsum("bhij,bjhp->bihp", scores,
+                             x_i.astype(jnp.float32))
+        y_inter = jnp.einsum("bihn,bhpn->bihp",
+                             C_i.astype(jnp.float32) * jnp.exp(cum)[..., None],
+                             h)
+        w = dt_i * jnp.exp(total[:, None, :] - cum)
+        dstate = jnp.einsum("bjhp,bjhn->bhpn",
+                            x_i.astype(jnp.float32) * w[..., None],
+                            B_i.astype(jnp.float32))
+        h_new = jnp.exp(total)[:, :, None, None] * h + dstate
+        return h_new, y_intra + y_inter
+
+    final, y = jax.lax.scan(body, h0, (xc, Bc, Cc, dtc, dAc))
+    return final, y
+
+
+def gmm_ref(x, w):
+    """Grouped matmul oracle: x (E,C,K) @ w (E,K,N) -> (E,C,N), f32 acc."""
+    return jnp.einsum("eck,ekn->ecn", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+def expert_ffn_ref(xe, w_gate, w_up, w_down, act="silu"):
+    """xe: (G,E,C,d); weights (E,d,f)/(E,f,d) -> (G,E,C,d)."""
+    a = jax.nn.silu if act == "silu" else (
+        lambda t: jax.nn.gelu(t, approximate=True))
+    h = a(jnp.einsum("gecd,edf->gecf", xe, w_gate)) \
+        * jnp.einsum("gecd,edf->gecf", xe, w_up)
+    return jnp.einsum("gecf,efd->gecd", h, w_down)

@@ -1,0 +1,413 @@
+"""Post-SPMD HLO-text analyzer: exact FLOPs / bytes / collective bytes.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE regardless of trip
+count, which silently undercounts every ``lax.scan`` (layer stacks, KV
+chunks, SSD chunks). This analyzer parses ``compiled.as_text()`` (the
+per-device module after SPMD partitioning), extracts while-loop trip counts
+from their condition computations, and recursively accumulates:
+
+  * flops            — dot / convolution ops (2 * out_elems * contraction),
+                       including dots inside fusions
+  * collective_bytes — operand bytes of all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute
+  * hbm_bytes        — roofline memory-traffic model: operand + output
+                       bytes of top-level (post-fusion) instructions, with
+                       slice-aware accounting (a fusion whose parameter is
+                       only dynamic-sliced reads the slice, not the array;
+                       dynamic-update-slice traffic is 2x the update size)
+
+All numbers are PER DEVICE (the module is the per-device program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "u4": 1, "s4": 1,
+    "pred": 1, "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*?)\s*([\w\-]+)\((.*)$")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    out_type: str
+    op: str
+    rest: str  # everything after the opening paren: "args), attrs"
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    by_name: Dict[str, Instr]
+
+
+@dataclasses.dataclass
+class Analysis:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: dict = dataclasses.field(default_factory=dict)
+    while_trips: dict = dataclasses.field(default_factory=dict)
+    unknown_trip_whiles: list = dataclasses.field(default_factory=list)
+
+    def scaled(self, k: float) -> "Analysis":
+        return Analysis(self.flops * k, self.hbm_bytes * k,
+                        self.collective_bytes * k,
+                        {n: v * k for n, v in self.collectives.items()},
+                        dict(self.while_trips), list(self.unknown_trip_whiles))
+
+    def add(self, other: "Analysis"):
+        self.flops += other.flops
+        self.hbm_bytes += other.hbm_bytes
+        self.collective_bytes += other.collective_bytes
+        for n, v in other.collectives.items():
+            self.collectives[n] = self.collectives.get(n, 0.0) + v
+        self.while_trips.update(other.while_trips)
+        self.unknown_trip_whiles.extend(other.unknown_trip_whiles)
+
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "collective-broadcast",
+                "all-gather-start", "all-reduce-start",
+                "collective-permute-start")
+
+_SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "partition-id", "replica-id",
+             "all-gather-done", "all-reduce-done", "collective-permute-done",
+             "get-dimension-size"}
+
+# top-level ops whose operand+output bytes we count as HBM traffic
+_MEMORY_OPS = set(_COLLECTIVES) | {
+    "fusion", "dot", "convolution", "copy", "copy-start",
+    "dynamic-update-slice", "dynamic-slice", "gather", "scatter", "reduce",
+    "transpose", "reshape", "slice", "concatenate", "broadcast", "sort",
+    "pad", "select", "rng-bit-generator", "custom-call", "convert", "iota",
+    "add", "multiply", "subtract", "divide", "exponential", "tanh", "rsqrt",
+    "maximum", "minimum", "compare", "reduce-window", "select-and-scatter",
+    "log", "negate", "sqrt", "power", "and", "or", "xor", "clamp",
+}
+
+
+def parse_module(hlo_text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            s = line.strip()
+            if s.endswith("{") and "->" in s and ("%" in s or s.startswith("ENTRY")):
+                m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)", s)
+                if m:
+                    cur = Computation(m.group(1), [], {})
+            continue
+        if line.strip() == "}" or line.strip().startswith("} "):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            ins = Instr(m.group(1), m.group(2).strip(), m.group(3), m.group(4))
+            cur.instrs.append(ins)
+            cur.by_name[ins.name] = ins
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+def _find_entry(hlo_text: str, comps) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo_text, re.MULTILINE)
+    if m and m.group(1) in comps:
+        return m.group(1)
+    referenced = set()
+    for c in comps.values():
+        for ins in c.instrs:
+            for ref in re.findall(
+                    r"(?:calls|condition|body|to_apply|branch_computations=\{)"
+                    r"=?%?([\w.\-]+)", ins.rest):
+                referenced.add(ref)
+    for name in comps:
+        if name not in referenced:
+            return name
+    return next(iter(comps))
+
+
+def _operand_types(ins: Instr, comp: Computation) -> List[str]:
+    """Types of instruction operands (args before the closing paren)."""
+    args = _args_of(ins)
+    out = []
+    inline = re.findall(r"(\w+\[[\d,]*\](?:\{[^}]*\})?)\s+%?[\w.\-]+", args)
+    if inline:
+        return inline
+    for m in re.finditer(r"%([\w.\-]+)", args):
+        d = comp.by_name.get(m.group(1))
+        if d is not None:
+            out.append(d.out_type)
+    return out
+
+
+def _operand_names(ins: Instr) -> List[str]:
+    return re.findall(r"%([\w.\-]+)", _args_of(ins))
+
+
+def _args_of(ins: Instr) -> str:
+    """Args substring: up to the matching close paren of the op's open."""
+    depth = 1
+    for i, ch in enumerate(ins.rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return ins.rest[:i]
+    return ins.rest
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    out_elems = _shape_elems(ins.out_type)
+    ops = _operand_types(ins, comp)
+    if not ops:
+        return 0.0
+    lhs_dims = _shape_dims(ops[0])
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+    contraction = 1
+    if m and m.group(1):
+        for idx in m.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                contraction *= lhs_dims[i]
+    return 2.0 * out_elems * contraction
+
+
+def _conv_flops(ins: Instr, comp: Computation) -> float:
+    out_elems = _shape_elems(ins.out_type)
+    ops = _operand_types(ins, comp)
+    if len(ops) < 2:
+        return 0.0
+    kdims = _shape_dims(ops[1])
+    if not kdims:
+        return 0.0
+    m = re.search(r"feature_group_count=(\d+)", ins.rest)
+    fgc = int(m.group(1)) if m else 1
+    kernel_elems = 1
+    for d in kdims:
+        kernel_elems *= d
+    out_features = kdims[-1]
+    # per output element: kernel_spatial * input_channels_per_group
+    per_out = kernel_elems / max(out_features, 1)
+    return 2.0 * out_elems * max(per_out, 1.0)
+
+
+def _comp_flops(comp: Computation, comps) -> float:
+    """FLOPs of dots/convs directly inside a (fusion) computation."""
+    f = 0.0
+    for si in comp.instrs:
+        if si.op == "dot":
+            f += _dot_flops(si, comp)
+        elif si.op == "convolution":
+            f += _conv_flops(si, comp)
+    return f
+
+
+def _while_trip_count(ins: Instr, comps) -> Optional[int]:
+    m = re.search(r"condition=%?([\w.\-]+)", ins.rest)
+    if not m or m.group(1) not in comps:
+        return None
+    cond = comps[m.group(1)]
+    consts = []
+    for i in cond.instrs:
+        if i.op == "constant" and i.out_type.startswith("s32"):
+            mm = re.match(r"\s*(-?\d+)", _args_of(i))
+            if mm:
+                consts.append(int(mm.group(1)))
+    pos = [c for c in consts if c > 0]
+    if pos:
+        return max(pos)
+    return None
+
+
+def _fusion_hbm_bytes(ins: Instr, comp: Computation, comps) -> float:
+    """Slice-aware fusion traffic: params only consumed by dynamic-slice /
+    slice read the slice, not the whole array; a root dynamic-update-slice
+    writes (and reads) only the update region."""
+    args = _args_of(ins)
+    operand_names = re.findall(r"%([\w.\-]+)", args)
+    callee = None
+    mm = re.search(r"calls=%?([\w.\-]+)", ins.rest)
+    if mm and mm.group(1) in comps:
+        callee = comps[mm.group(1)]
+    total = 0.0
+    if callee is not None:
+        _PASS = ("convert", "bitcast", "copy", "reshape", "transpose",
+                 "negate")
+
+        def terminal_uses(name, depth=0):
+            """Uses of `name`, looking through element-wise pass-through
+            chains (convert/bitcast/...)."""
+            out = []
+            if depth > 6:
+                return out
+            for si in callee.instrs:
+                if name in _operand_names(si):
+                    if si.op in _PASS:
+                        out.extend(terminal_uses(si.name, depth + 1))
+                    else:
+                        out.append(si)
+            return out
+
+        dus_list = [si for si in callee.instrs
+                    if si.op == "dynamic-update-slice"]
+        dus_update_bytes = {}
+        for si in dus_list:
+            names = _operand_names(si)
+            if len(names) >= 2:
+                upd = callee.by_name.get(names[1])
+                dus_update_bytes[si.name] = (
+                    _shape_bytes(upd.out_type) if upd is not None else 0)
+        # map param index -> bytes actually read
+        param_instrs = {}
+        for si in callee.instrs:
+            if si.op == "parameter":
+                pm = re.match(r"\s*(\d+)", _args_of(si))
+                if pm:
+                    param_instrs[si.name] = int(pm.group(1))
+        reads = {}
+        for pname, pidx in param_instrs.items():
+            uses = terminal_uses(pname)
+            if uses and all(si.op in ("dynamic-slice", "slice")
+                            for si in uses):
+                # sliced reads: only the slice leaves HBM
+                reads[pidx] = sum(_shape_bytes(si.out_type) for si in uses)
+            elif uses and all(si.op == "dynamic-update-slice"
+                              for si in uses):
+                # param flows (possibly via converts) into DUS targets:
+                # aliased in place — traffic is the update region only
+                reads[pidx] = sum(dus_update_bytes.get(si.name, 0)
+                                  for si in uses)
+            else:
+                d = comp.by_name.get(operand_names[pidx]) \
+                    if pidx < len(operand_names) else None
+                if d is not None:
+                    reads[pidx] = _shape_bytes(d.out_type)
+                else:
+                    ts = _operand_types(ins, comp)
+                    reads[pidx] = _shape_bytes(ts[pidx]) if pidx < len(ts) else 0
+        total += sum(reads.values())
+        # output: if the fusion result is (a convert/bitcast of) a DUS over
+        # the full output buffer, only the update region is written
+        out_bytes = _shape_bytes(ins.out_type)
+        out_elems = _shape_elems(ins.out_type)
+        if dus_list and any(_shape_elems(si.out_type) == out_elems
+                            for si in dus_list):
+            total += sum(dus_update_bytes.values())
+        else:
+            total += out_bytes
+        return max(total, 0.0)
+    ts = _operand_types(ins, comp)
+    return sum(_shape_bytes(t) for t in ts) + _shape_bytes(ins.out_type)
+
+
+def analyze_computation(comp: Computation, comps, hints: List[int],
+                        _depth=0) -> Analysis:
+    res = Analysis()
+    for ins in comp.instrs:
+        op = ins.op
+        if op in _SKIP_OPS:
+            continue
+        if op == "while":
+            trips = _while_trip_count(ins, comps)
+            if trips is None:
+                trips = hints.pop(0) if hints else 1
+                res.unknown_trip_whiles.append(ins.name)
+            res.while_trips[ins.name] = trips
+            body_m = re.search(r"body=%?([\w.\-]+)", ins.rest)
+            if body_m and body_m.group(1) in comps:
+                body = analyze_computation(comps[body_m.group(1)], comps,
+                                           hints, _depth + 1)
+                res.add(body.scaled(trips))
+            continue
+        if op in ("call", "conditional", "async-start"):
+            for ref in re.findall(r"(?:to_apply|calls)=%?([\w.\-]+)", ins.rest):
+                if ref in comps:
+                    res.add(analyze_computation(comps[ref], comps, hints,
+                                                _depth + 1))
+            continue
+        if op == "dot":
+            res.flops += _dot_flops(ins, comp)
+        elif op == "convolution":
+            res.flops += _conv_flops(ins, comp)
+        elif op == "fusion":
+            for ref in re.findall(r"calls=%?([\w.\-]+)", ins.rest):
+                if ref in comps:
+                    res.flops += _comp_flops(comps[ref], comps)
+        if op in _COLLECTIVES:
+            b = sum(_shape_bytes(t) for t in _operand_types(ins, comp))
+            res.collective_bytes += b
+            key = op.replace("-start", "")
+            res.collectives[key] = res.collectives.get(key, 0.0) + b
+        if op in _MEMORY_OPS:
+            if op == "fusion":
+                res.hbm_bytes += _fusion_hbm_bytes(ins, comp, comps)
+            elif op == "dynamic-update-slice":
+                ts = _operand_types(ins, comp)
+                upd = _shape_bytes(ts[1]) if len(ts) >= 2 else 0
+                res.hbm_bytes += 2 * upd
+            elif op == "dynamic-slice":
+                res.hbm_bytes += 2 * _shape_bytes(ins.out_type)
+            else:
+                ts = _operand_types(ins, comp)
+                res.hbm_bytes += (sum(_shape_bytes(t) for t in ts)
+                                  + _shape_bytes(ins.out_type))
+    return res
+
+
+def analyze(hlo_text: str, trip_hints: Optional[dict] = None) -> Analysis:
+    """Analyze a compiled (post-SPMD) HLO module. Per-device totals.
+
+    trip_hints: {label: trips}, consumed in encounter order for while loops
+    whose trip count cannot be inferred from their condition.
+    """
+    comps = parse_module(hlo_text)
+    entry = _find_entry(hlo_text, comps)
+    hints = list(trip_hints.values()) if trip_hints else []
+    return analyze_computation(comps[entry], comps, hints)

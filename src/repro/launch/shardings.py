@@ -1,0 +1,183 @@
+"""Sharding rules: params, optimizer state, batches, and KV/SSM caches.
+
+Policy (single-pod mesh ("data", "model"); multi-pod adds a leading "pod"
+axis used for batch/sequence only — weights are replicated across pods):
+
+  * vocab/embedding rows, attention head projections, FFN hidden, MoE
+    experts, SSD heads           -> "model"
+  * batch                        -> ("pod","data") for training, "data"
+                                    (or ("pod","data")) for serving
+  * decode KV-cache sequence dim -> "model" (batch-heavy decode) or
+                                    ("pod","data","model") (long-context,
+                                    batch=1) — attention contractions over
+                                    the sharded axis become all-reduces.
+
+Every rule is divisibility-guarded: a dimension that does not divide the
+axis size is left unsharded (e.g. mamba2's vocab 50280 on 16 devices).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import axis_sizes
+
+MODEL = "model"
+
+
+def _fits(dim: int, mesh, axes) -> bool:
+    if axes is None:
+        return True
+    sizes = axis_sizes(mesh)
+    total = 1
+    for a in ((axes,) if isinstance(axes, str) else axes):
+        if a not in sizes:
+            return False
+        total *= sizes[a]
+    return dim % total == 0
+
+
+def _guard(spec_entries, shape, mesh):
+    """Drop axis assignments that don't divide; pad to rank."""
+    entries = list(spec_entries)
+    entries = [None] * (len(shape) - len(entries)) + entries
+    out = []
+    for dim, ax in zip(shape, entries):
+        out.append(ax if (ax is not None and _fits(dim, mesh, ax)) else None)
+    return P(*out)
+
+
+# ------------------------------------------------------------------ params
+# 2D weight sharding: tensor-parallel dim -> "model", the other matrix dim
+# -> "data" (FSDP/ZeRO-style). Optimizer moments follow their parameters,
+# so even dbrx-132b's AdamW state fits 16 GiB/chip. XLA inserts the
+# per-layer all-gathers (weight streaming) in the scan body.
+FSDP = "data"
+
+_PARAM_RULES = {
+    # name -> spec template aligned to the LAST len(template) dims
+    "embed": (MODEL, FSDP),
+    "unembed": (FSDP, MODEL),
+    "pos": (None, FSDP),
+    "pos_dec": (None, FSDP),
+    "pos_enc": (None, FSDP),
+    "wq": (FSDP, MODEL), "wk": (FSDP, MODEL), "wv": (FSDP, MODEL),
+    "bq": (MODEL,), "bk": (MODEL,), "bv": (MODEL,),
+    "wo": (MODEL, FSDP),
+    "w_gate": (FSDP, MODEL), "w_up": (FSDP, MODEL), "w_down": (MODEL, FSDP),
+    "w_in": (FSDP, MODEL), "b_in": (MODEL,),
+    "w_out": (MODEL, FSDP), "b_out": (None,),
+    "router": (None, None),
+    "in_proj": (FSDP, MODEL), "out_proj": (MODEL, FSDP),
+    "conv_w": (None, MODEL), "conv_b": (MODEL,),
+    "A_log": (MODEL,), "dt_bias": (MODEL,), "D": (MODEL,),
+    "norm_scale": (MODEL,),
+    "scale": (None,), "bias": (None,),
+    "visual_scale": (),
+}
+
+_EXPERT_WEIGHTS = {"w_gate", "w_up", "w_down"}
+_EXPERT_TEMPLATE = (MODEL, FSDP, None)  # (E, in, out): expert-parallel + FSDP
+
+
+def _leaf_name(path):
+    for p in reversed(path):
+        if hasattr(p, "key"):
+            return str(p.key)
+    return ""
+
+
+def _in_moe(path):
+    keys = [str(p.key) for p in path if hasattr(p, "key")]
+    return "moe" in keys and "shared" not in keys
+
+
+def param_specs(params, mesh, fsdp: bool = True):
+    """Pytree of PartitionSpec matching params.
+
+    fsdp=False drops the FSDP ("data") factor from weight shardings —
+    tensor-parallel only. Right for serving steps where the per-layer
+    weight all-gather would dominate decode HBM/ICI traffic and the
+    unsharded copy fits (no optimizer state at inference).
+    """
+    def drop_fsdp(template):
+        return tuple(None if a == FSDP else a for a in template)
+
+    def spec_for(path, leaf):
+        name = _leaf_name(path)
+        if _in_moe(path) and name in _EXPERT_WEIGHTS:
+            template = _EXPERT_TEMPLATE
+        else:
+            template = _PARAM_RULES.get(name, ())
+        if not fsdp:
+            template = drop_fsdp(template)
+        return _guard(template, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def opt_state_specs(opt_state, params_spec, mesh):
+    """OptState(step, mu, nu): moments shard like their parameters."""
+    from repro.training.optimizer import OptState
+    return OptState(step=P(), mu=params_spec, nu=params_spec)
+
+
+# ------------------------------------------------------------------ batch
+def batch_axes(mesh):
+    names = set(mesh.axis_names)
+    return ("pod", "data") if "pod" in names else ("data",)
+
+
+def batch_specs(batch, mesh, shape_cfg=None):
+    """tokens (B,S) / embeds (B,T,d): shard batch; embeds d on model."""
+    baxes = batch_axes(mesh)
+
+    def spec_for(path, leaf):
+        name = _leaf_name(path)
+        if name in ("frame_embeds", "visual_embeds"):
+            return _guard((baxes, None, MODEL), leaf.shape, mesh)
+        return _guard((baxes,) + (None,) * (leaf.ndim - 1), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch)
+
+
+# ------------------------------------------------------------------ cache
+def cache_specs(cache, mesh, *, long_context: bool = False):
+    """KV/SSM cache sharding.
+
+    Leaf shapes (possibly with leading stacked-layer dims):
+      k/v:   (..., B, T, K, hd)   -> B: data, T: model (or all axes if B==1)
+      conv:  (..., B, W-1, C)     -> B: data, C: model
+      state: (..., B, nh, hd, N)  -> B: data, nh: model
+    """
+    baxes = batch_axes(mesh)
+    all_axes = tuple(mesh.axis_names)
+
+    sizes = axis_sizes(mesh)
+    msz = sizes.get(MODEL, 1)
+
+    def spec_for(path, leaf):
+        name = _leaf_name(path)
+        if name in ("k", "v", "cross") or (leaf.ndim >= 4
+                                           and name != "state"):
+            if long_context:
+                return _guard((baxes, all_axes, None, None), leaf.shape, mesh)
+            # prefer sharding KV heads when they divide the model axis
+            # (no all-reduce in the decode contraction); else the seq dim
+            kv_heads = leaf.shape[-2]
+            if kv_heads % msz == 0:
+                return _guard((baxes, None, MODEL, None), leaf.shape, mesh)
+            return _guard((baxes, MODEL, None, None), leaf.shape, mesh)
+        if name == "conv":
+            return _guard((baxes, None, MODEL), leaf.shape, mesh)
+        if name == "state":
+            return _guard((baxes, MODEL, None, None), leaf.shape, mesh)
+        return _guard((), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)
+
+
+# ------------------------------------------------------------------ helpers
+def to_shardings(spec_tree, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,214 @@
+"""Dry-run case construction: ShapeDtypeStruct inputs + shardings + step fn
+for every (architecture x input-shape) combination.
+
+``input_specs`` returns weak-type-correct, shardable stand-ins (no device
+allocation); ``build_case`` packages the jittable step with its in/out
+shardings and donation config, ready for ``.lower().compile()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import models
+from repro.configs import ArchConfig, ShapeConfig, combo_is_supported
+from repro.launch import shardings as sh
+from repro.models import CallOpts
+from repro.training import optimizer as opt_mod, steps
+
+
+def call_opts(cfg: ArchConfig, shape: ShapeConfig, mesh=None,
+              **overrides) -> CallOpts:
+    window = 0
+    if shape.name == "long_500k" and not (cfg.family in ("ssm", "hybrid")):
+        window = cfg.long_context_window
+    logits_spec = None
+    act_spec = None
+    if mesh is not None:
+        baxes = sh.batch_axes(mesh)
+        if shape.kind == "train":
+            vocab_ok = cfg.vocab_size % 16 == 0
+            logits_spec = (baxes, None, "model" if vocab_ok else None)
+        if shape.global_batch > 1:
+            act_spec = (baxes, None, None)
+    base = dict(
+        remat=(shape.kind == "train"),
+        window=window,
+        capacity_factor=2.0 if shape.is_decode else 1.25,
+        attn_chunk=4096,
+        logits_spec=logits_spec,
+        act_spec=act_spec,
+    )
+    base.update(overrides)
+    return CallOpts(**base)
+
+
+def kv_len_for(cfg: ArchConfig, shape: ShapeConfig) -> int:
+    if shape.name == "long_500k" and cfg.long_context_window \
+            and cfg.family not in ("ssm", "hybrid"):
+        return cfg.long_context_window  # sliding-window ring buffer
+    return shape.seq_len
+
+
+def token_batch_specs(cfg: ArchConfig, shape: ShapeConfig):
+    """ShapeDtypeStructs for the model input batch dict (full-seq steps)."""
+    B = shape.global_batch
+    v = cfg.num_visual_tokens or 0
+    seq = shape.seq_len - v if v else shape.seq_len
+    batch = {"tokens": jax.ShapeDtypeStruct((B, seq), jnp.int32)}
+    if cfg.is_encoder_decoder:
+        batch["frame_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    if v:
+        batch["visual_embeds"] = jax.ShapeDtypeStruct(
+            (B, v, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def params_struct(cfg: ArchConfig):
+    return jax.eval_shape(lambda r: models.init_params(r, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def default_microbatches(cfg: ArchConfig, shape: ShapeConfig, mesh) -> int:
+    """Gradient-accumulation depth: target a per-device activation budget
+    of ~8k tokens scaled down for wide models."""
+    if shape.kind != "train":
+        return 1
+    sizes = sh.axis_sizes(mesh)
+    dp = sizes.get("data", 1) * sizes.get("pod", 1)
+    b_loc = max(shape.global_batch // dp, 1)
+    tokens_per_dev = b_loc * shape.seq_len
+    target = max(int(8192 * 2048 / max(cfg.d_model, 2048)), 2048)
+    m = 1
+    while tokens_per_dev // m > target and m < b_loc:
+        m *= 2
+    return m
+
+
+@dataclasses.dataclass
+class Case:
+    arch: str
+    shape: str
+    step_name: str           # train_step | prefill_step | decode_step
+    fn: Callable             # jittable
+    args: tuple              # ShapeDtypeStructs (or concrete arrays)
+    in_shardings: tuple
+    donate_argnums: tuple
+    scan_trip_hints: dict    # trip-count hints for the HLO analyzer
+    out_shardings: Any = None  # None = let XLA choose
+
+
+def _scan_hints(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """Static trip counts of every scan in the lowered program, used by the
+    HLO analyzer to multiply while-loop bodies (XLA counts them once)."""
+    from repro.models import blocks
+    _, _, n_periods = blocks.stack_pattern(cfg)
+    hints = {}
+    if shape.kind == "train":
+        hints["microbatches"] = 1  # placeholder; overwritten in build_case
+    hints["layers"] = n_periods
+    if cfg.is_encoder_decoder:
+        hints["encoder"] = cfg.encoder_layers
+        hints["decoder"] = cfg.num_layers
+    v = cfg.num_visual_tokens or 0
+    if shape.kind in ("train", "prefill"):
+        S = shape.seq_len
+        if cfg.ssm is not None:
+            hints["ssd_chunks"] = max(S // min(cfg.ssm.chunk_size, S), 1)
+        if S > 4096 and S % 4096 == 0:
+            hints["attn_chunks"] = S // 4096
+    return hints
+
+
+def build_case(cfg: ArchConfig, shape: ShapeConfig, mesh,
+               opts: Optional[CallOpts] = None,
+               adamw: Optional[opt_mod.AdamWConfig] = None,
+               microbatches: Optional[int] = None,
+               fsdp_params: bool = True) -> Case:
+    if not combo_is_supported(cfg.name, shape.name):
+        raise ValueError(f"{cfg.name} x {shape.name} is not supported "
+                         "(see DESIGN.md §Arch-applicability)")
+    opts = opts or call_opts(cfg, shape, mesh)
+    p_struct = params_struct(cfg)
+    p_spec = sh.param_specs(p_struct, mesh, fsdp=fsdp_params)
+
+    P = jax.sharding.PartitionSpec
+    if shape.kind == "train":
+        adamw = adamw or opt_mod.AdamWConfig()
+        batch = token_batch_specs(cfg, shape)
+        opt_struct = jax.eval_shape(
+            lambda p: opt_mod.init_opt_state(p, adamw.moment_dtype),
+            p_struct)
+        if microbatches is None:
+            microbatches = default_microbatches(cfg, shape, mesh)
+        fn = steps.make_train_step(cfg, adamw, opts, microbatches,
+                                   grad_specs=p_spec)
+        args = (p_struct, opt_struct, batch)
+        opt_spec = sh.opt_state_specs(opt_struct, p_spec, mesh)
+        in_sh = (p_spec, opt_spec, sh.batch_specs(batch, mesh))
+        donate = (0, 1)
+        metrics_spec = {k: P() for k in
+                        ("grad_norm", "lr", "loss", "ce", "aux")}
+        out_sh = (p_spec, opt_spec, metrics_spec)
+    elif shape.kind == "prefill":
+        kv_len = kv_len_for(cfg, shape)
+        batch = token_batch_specs(cfg, shape)
+        fn = steps.make_prefill_step(cfg, kv_len, opts)
+        args = (p_struct, batch)
+        in_sh = (p_spec, sh.batch_specs(batch, mesh))
+        donate = ()
+        # pin the freshly created KV cache to the serving cache layout
+        with mesh:
+            out_struct = jax.eval_shape(fn, *args)
+        cache_spec = sh.cache_specs(out_struct[1], mesh)
+        out_sh = (None, cache_spec)
+    else:  # decode
+        kv_len = kv_len_for(cfg, shape)
+        B = shape.global_batch
+        cache = jax.eval_shape(
+            partial(models.init_cache, cfg, B, kv_len,
+                    jnp.dtype(opts.cache_dtype)))
+        tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        fn = steps.make_decode_step(cfg, opts)
+        args = (p_struct, tokens, pos, cache)
+        long_ctx = shape.global_batch == 1
+        cache_spec = sh.cache_specs(cache, mesh, long_context=long_ctx)
+        in_sh = (p_spec, sh.batch_specs({"tokens": tokens}, mesh)["tokens"],
+                 P(), cache_spec)
+        donate = (3,)
+        out_sh = (None, cache_spec)  # output cache aliases the donated input
+
+    hints = _scan_hints(cfg, shape)
+    if shape.kind == "train":
+        hints["microbatches"] = microbatches
+    return Case(arch=cfg.name, shape=shape.name,
+                step_name=f"{shape.kind}_step", fn=fn, args=args,
+                in_shardings=in_sh, donate_argnums=donate,
+                scan_trip_hints=hints, out_shardings=out_sh)
+
+
+def _maybe_shardings(tree, mesh):
+    if tree is None:
+        return None
+    return jax.tree.map(
+        lambda s: (jax.sharding.NamedSharding(mesh, s)
+                   if isinstance(s, jax.sharding.PartitionSpec) else s),
+        tree, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)
+        or x is None)
+
+
+def lower_case(case: Case, mesh):
+    in_shardings = sh.to_shardings(case.in_shardings, mesh)
+    kwargs = {}
+    if case.out_shardings is not None:
+        kwargs["out_shardings"] = _maybe_shardings(case.out_shardings, mesh)
+    jitted = jax.jit(case.fn, in_shardings=in_shardings,
+                     donate_argnums=case.donate_argnums, **kwargs)
+    with mesh:
+        return jitted.lower(*case.args)

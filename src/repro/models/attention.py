@@ -1,0 +1,224 @@
+"""GQA attention: full-sequence (KV-chunked flash-style), cross, and decode.
+
+The full-sequence path scans over KV chunks carrying (m, l, acc) in f32 —
+the XLA analogue of flash attention, keeping the S x S score matrix out of
+HBM. The Pallas TPU kernel in ``repro.kernels.flash_attention`` implements
+the same contraction for the MXU; this module is the jnp reference and the
+path used for dry-run lowering (Pallas cannot lower on the CPU backend).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+NEG_INF = -2.0e38  # large-but-finite; avoids NaNs from (-inf) - (-inf)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+
+    @property
+    def q_groups(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+
+def dims_of(cfg) -> AttnDims:
+    return AttnDims(cfg.num_heads, cfg.num_kv_heads, cfg.head_dim)
+
+
+# ------------------------------------------------------------------ params
+def init_attention(rng, cfg, d_model: int | None = None):
+    d = d_model or cfg.d_model
+    a = dims_of(cfg)
+    dt = common.dtype_of(cfg)
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": common.dense_param(ks[0], (d, a.num_heads * a.head_dim), dt),
+        "wk": common.dense_param(ks[1], (d, a.num_kv_heads * a.head_dim), dt),
+        "wv": common.dense_param(ks[2], (d, a.num_kv_heads * a.head_dim), dt),
+        "wo": common.dense_param(ks[3], (a.num_heads * a.head_dim, d), dt, in_axis=0),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((a.num_heads * a.head_dim,), dt)
+        p["bk"] = jnp.zeros((a.num_kv_heads * a.head_dim,), dt)
+        p["bv"] = jnp.zeros((a.num_kv_heads * a.head_dim,), dt)
+    return p
+
+
+def project_qkv(cfg, p, x):
+    """x: (B, S, d) -> q (B,S,H,hd), k/v (B,S,K,hd)."""
+    a = dims_of(cfg)
+    B, S, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, a.num_heads, a.head_dim)
+    k = k.reshape(B, S, a.num_kv_heads, a.head_dim)
+    v = v.reshape(B, S, a.num_kv_heads, a.head_dim)
+    return q, k, v
+
+
+# ------------------------------------------------------------------ core SDPA
+def _direct_attention(q, k, v, bias):
+    """q: (B,S,K,G,hd); k,v: (B,T,K,hd); bias: broadcastable (B,1,1,S,T)."""
+    scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+    s = jnp.einsum("bskgd,btkd->bkgst", q, k, preferred_element_type=jnp.float32)
+    s = s * scale + bias
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", p.astype(v.dtype), v)
+    return o
+
+
+def _chunked_attention(q, k, v, q_pos, k_pos, causal, window, chunk):
+    """Flash-style online-softmax attention, scanning KV chunks.
+
+    q: (B,S,K,G,hd); k/v: (B,T,K,hd); q_pos: (S,), k_pos: (T,).
+    """
+    B, S, K, G, hd = q.shape
+    T = k.shape[1]
+    n_chunks = T // chunk
+    kc = k.reshape(B, n_chunks, chunk, K, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, K, hd).transpose(1, 0, 2, 3, 4)
+    kpc = k_pos.reshape(n_chunks, chunk)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    qf = q.astype(jnp.float32) * scale
+
+    def body(carry, xs):
+        m, l, acc = carry
+        k_i, v_i, kp_i = xs
+        s = jnp.einsum("bskgd,bckd->bkgsc", qf, k_i.astype(jnp.float32))
+        ok = jnp.ones((S, chunk), bool)
+        if causal:
+            ok &= kp_i[None, :] <= q_pos[:, None]
+        if window:
+            ok &= kp_i[None, :] > (q_pos[:, None] - window)
+        s = jnp.where(ok[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgsc,bckd->bkgsd", p, v_i.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, K, G, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G, S), jnp.float32)
+    a0 = jnp.zeros((B, K, G, S, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, kpc))
+    o = acc / jnp.maximum(l[..., None], 1e-30)
+    return o.transpose(0, 3, 1, 2, 4).astype(q.dtype)  # (B,S,K,G,hd)
+
+
+def self_attention(cfg, p, x, positions, *, causal=True, window=0,
+                   attn_chunk=2048, use_kernels=False, return_kv=False,
+                   seq_shard=None):
+    """Full-sequence self attention. x: (B,S,d) -> (B,S,d).
+
+    seq_shard: optional mesh axis spec for sharding the QUERY sequence dim
+    (with K/V replicated over it). Used when num_heads does not divide the
+    model axis — head-sharding would split heads mid-head_dim and force
+    f32 score all-reduces; sequence sharding keeps the contraction local.
+    """
+    a = dims_of(cfg)
+    B, S, _ = x.shape
+    q, k, v = project_qkv(cfg, p, x)
+    if cfg.pos_emb == "rope":
+        q = common.apply_rope(q, positions, cfg.rope_theta)
+        k = common.apply_rope(k, positions, cfg.rope_theta)
+    if seq_shard is not None:
+        P = jax.sharding.PartitionSpec
+        batch_ax = seq_shard[0]
+        model_ax = seq_shard[1]
+        q = jax.lax.with_sharding_constraint(
+            q, P(batch_ax, model_ax, None, None))
+        k = jax.lax.with_sharding_constraint(k, P(batch_ax, None, None, None))
+        v = jax.lax.with_sharding_constraint(v, P(batch_ax, None, None, None))
+    qg = q.reshape(B, S, a.num_kv_heads, a.q_groups, a.head_dim)
+    if use_kernels:
+        from repro.kernels import flash_attention as fa
+        o = fa.flash_attention(qg, k, v, causal=causal, window=window)
+    elif S <= max(attn_chunk, 2048) or S % attn_chunk != 0:
+        bias = 0.0
+        if causal or window:
+            bias = common.causal_mask_bias(positions, positions,
+                                           window if window else 0)
+            bias = jnp.maximum(bias, NEG_INF)[None, None, None]
+        o = _direct_attention(qg, k, v, bias).astype(x.dtype)
+    else:
+        o = _chunked_attention(qg, k, v, positions, positions, causal,
+                               window, attn_chunk)
+    o = o.reshape(B, S, a.num_heads * a.head_dim)
+    out = o @ p["wo"]
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def cross_attention(cfg, p, x, enc_k, enc_v):
+    """Decoder cross-attention against precomputed encoder K/V."""
+    a = dims_of(cfg)
+    B, S, _ = x.shape
+    q = x @ p["wq"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(B, S, a.num_kv_heads, a.q_groups, a.head_dim)
+    o = _direct_attention(q, enc_k, enc_v, 0.0).astype(x.dtype)
+    return o.reshape(B, S, a.num_heads * a.head_dim) @ p["wo"]
+
+
+def encode_kv(cfg, p, enc_out):
+    """Precompute cross-attention K/V from encoder output."""
+    a = dims_of(cfg)
+    B, T, _ = enc_out.shape
+    k = enc_out @ p["wk"]
+    v = enc_out @ p["wv"]
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    return (k.reshape(B, T, a.num_kv_heads, a.head_dim),
+            v.reshape(B, T, a.num_kv_heads, a.head_dim))
+
+
+# ------------------------------------------------------------------ decode
+def decode_self_attention(cfg, p, x, cache_k, cache_v, pos, *, window=0,
+                          use_kernels=False):
+    """One-token decode. x: (B,1,d); cache_k/v: (B,T,K,hd) ring buffers.
+
+    ``pos`` is the absolute position of the new token (scalar int32). Keys
+    are stored rope-applied at absolute positions, so ring-buffer reuse is
+    correct without rope recomputation. Returns (out, new_k, new_v).
+    """
+    a = dims_of(cfg)
+    B, _, _ = x.shape
+    T = cache_k.shape[1]
+    q, k, v = project_qkv(cfg, p, x)  # (B,1,H,hd), (B,1,K,hd)
+    if cfg.pos_emb == "rope":
+        ppos = jnp.full((1,), pos, jnp.int32)
+        q = common.apply_rope(q, ppos, cfg.rope_theta)
+        k = common.apply_rope(k, ppos, cfg.rope_theta)
+    slot = pos % T
+    new_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, slot, 0, 0))
+    new_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, slot, 0, 0))
+    qg = q.reshape(B, 1, a.num_kv_heads, a.q_groups, a.head_dim)
+    idx = jnp.arange(T)
+    valid = jnp.where(pos >= T, jnp.ones((T,), bool), idx <= pos)
+    # quantized caches (e.g. fp8) are converted on-chip after the HBM read
+    kr = new_k if new_k.dtype == x.dtype else new_k.astype(x.dtype)
+    vr = new_v if new_v.dtype == x.dtype else new_v.astype(x.dtype)
+    if use_kernels:
+        from repro.kernels import decode_attention as da
+        o = da.decode_attention(qg, kr, vr, valid)
+    else:
+        bias = jnp.where(valid, 0.0, NEG_INF)[None, None, None, None, :]
+        o = _direct_attention(qg, kr, vr, bias).astype(x.dtype)
+    o = o.reshape(B, 1, a.num_heads * a.head_dim)
+    return o @ p["wo"], new_k, new_v

@@ -1,0 +1,290 @@
+"""Layer-stack machinery: heterogeneous blocks as prefix + scanned periods.
+
+Architectures mix block kinds (attention vs SSM mixers; dense vs MoE FFNs;
+deepseek's dense first layer). We factor the per-layer kind sequence into a
+short unrolled *prefix* plus the smallest repeating *period*, then
+``lax.scan`` over periods with stacked parameters — keeping the HLO compact
+(fast 512-device lowering) while supporting every assigned architecture.
+
+A BlockKind is the static tuple ``(mixer, ffn, d_ff)`` with
+mixer in {'attn','ssm'}, ffn in {'dense','moe','none'}.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, common, ffn as ffn_mod, ssm as ssm_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class CallOpts:
+    """Runtime (non-architecture) options for a model call."""
+    use_kernels: bool = False
+    attn_chunk: int = 4096
+    capacity_factor: float = 1.25
+    window: int = 0  # sliding-window override for self-attention (0 = full)
+    remat: bool = False  # checkpoint the scanned period body (training)
+    # sharding hint for logits (B, S, V), e.g. (("pod","data"), None, "model");
+    # None = no constraint (single-device smoke runs)
+    logits_spec: tuple = None
+    # sharding hint for the residual stream (B, S, d). Anchors the batch to
+    # the data axis so FSDP-sharded weights are all-gathered (weight
+    # streaming) instead of XLA de-sharding the batch.
+    act_spec: tuple = None
+    # ---- beyond-paper perf levers (§Perf hillclimb) ----
+    # KV-cache element type ("bfloat16" | "float8_e4m3fn"): fp8 halves
+    # decode cache footprint and streaming bytes
+    cache_dtype: str = "bfloat16"
+    # (batch_axes, model_axis) for sequence-sharded attention — used when
+    # num_heads doesn't divide the model axis (e.g. llava's 56 heads on
+    # 16): avoids mid-head splits that force f32 score all-reduces
+    attn_seq_shard: tuple = None
+    # route decode tokens as ONE routing group instead of per-token groups:
+    # capacity shrinks from E*max(1,..) slots per token to ~k*B/E total
+    moe_single_group_decode: bool = False
+
+
+def _constrain(h, spec):
+    if spec is None:
+        return h
+    import jax
+    return jax.lax.with_sharding_constraint(
+        h, jax.sharding.PartitionSpec(*spec))
+
+
+# ------------------------------------------------------------------ pattern
+def layer_kinds(cfg):
+    kinds = []
+    for i in range(cfg.num_layers):
+        mixer = cfg.layer_kind(i)
+        if mixer == "ssm" and cfg.family == "ssm":
+            kinds.append((mixer, "none", 0))
+            continue
+        f = cfg.ffn_kind(i)
+        dff = cfg.d_ff
+        if (f == "dense" and cfg.moe is not None
+                and i < cfg.moe.first_dense and cfg.moe.d_ff_dense):
+            dff = cfg.moe.d_ff_dense
+        kinds.append((mixer, f, dff))
+    return kinds
+
+
+def stack_pattern(cfg):
+    """-> (prefix_kinds, period_kinds, n_periods)."""
+    kinds = layer_kinds(cfg)
+    L = len(kinds)
+    best = None  # (period_len, prefix_len, prefix, period, n)
+    for prefix in range(0, min(L, 4)):
+        rest = kinds[prefix:]
+        n = len(rest)
+        if n == 0:
+            continue
+        for p in range(1, n + 1):
+            if n % p == 0 and rest == rest[:p] * (n // p):
+                cand = (p, prefix, tuple(kinds[:prefix]), tuple(rest[:p]), n // p)
+                if best is None or (cand[0], cand[1]) < (best[0], best[1]):
+                    best = cand
+                break  # smallest period for this prefix
+    _, _, prefix_kinds, period_kinds, n_periods = best
+    return prefix_kinds, period_kinds, n_periods
+
+
+# ------------------------------------------------------------------ init
+def init_block(rng, cfg, kind):
+    mixer, f, dff = kind
+    ks = jax.random.split(rng, 4)
+    p = {"ln1": common.init_norm(cfg, cfg.d_model)}
+    if mixer == "attn":
+        p["attn"] = attention.init_attention(ks[0], cfg)
+    else:
+        p["ssm"] = ssm_mod.init_ssm(ks[0], cfg)
+    if f == "dense":
+        p["ln2"] = common.init_norm(cfg, cfg.d_model)
+        p["ffn"] = ffn_mod.init_dense_ffn(ks[1], cfg, d_ff=dff)
+    elif f == "moe":
+        p["ln2"] = common.init_norm(cfg, cfg.d_model)
+        p["moe"] = ffn_mod.init_moe(ks[1], cfg)
+    return p
+
+
+def init_stack(rng, cfg):
+    prefix_kinds, period_kinds, n_periods = stack_pattern(cfg)
+    k_prefix, k_periods = jax.random.split(rng)
+    prefix = [init_block(k, cfg, kind)
+              for k, kind in zip(jax.random.split(k_prefix, max(len(prefix_kinds), 1)),
+                                 prefix_kinds)]
+
+    def init_period(r):
+        rs = jax.random.split(r, len(period_kinds))
+        return tuple(init_block(rs[i], cfg, kind)
+                     for i, kind in enumerate(period_kinds))
+
+    periods = jax.vmap(init_period)(jax.random.split(k_periods, n_periods))
+    return {"prefix": prefix, "periods": periods}
+
+
+# ------------------------------------------------------------------ cache
+def init_block_cache(cfg, kind, batch, kv_len, dtype):
+    mixer = kind[0]
+    if mixer == "attn":
+        a = attention.dims_of(cfg)
+        return {"k": jnp.zeros((batch, kv_len, a.num_kv_heads, a.head_dim), dtype),
+                "v": jnp.zeros((batch, kv_len, a.num_kv_heads, a.head_dim), dtype)}
+    s = cfg.ssm
+    di, nh, conv_ch = ssm_mod.ssm_dims(cfg)
+    return {"conv": jnp.zeros((batch, s.conv_width - 1, conv_ch), dtype),
+            "state": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32)}
+
+
+def init_stack_cache(cfg, batch, kv_len, dtype=jnp.bfloat16):
+    prefix_kinds, period_kinds, n_periods = stack_pattern(cfg)
+    prefix = [init_block_cache(cfg, k, batch, kv_len, dtype) for k in prefix_kinds]
+
+    def one_period(_):
+        return tuple(init_block_cache(cfg, k, batch, kv_len, dtype)
+                     for k in period_kinds)
+
+    periods = jax.vmap(one_period)(jnp.arange(n_periods))
+    return {"prefix": prefix, "periods": periods}
+
+
+def _kv_into_ring(k, kv_len):
+    """Place full-prefill K (B,S,...) into a ring buffer of length kv_len."""
+    B, S = k.shape[:2]
+    if S <= kv_len:
+        buf = jnp.zeros((B, kv_len) + k.shape[2:], k.dtype)
+        return jax.lax.dynamic_update_slice(
+            buf, k, (0,) * k.ndim)
+    tail = k[:, -kv_len:]
+    return jnp.roll(tail, shift=(S - kv_len) % kv_len, axis=1)
+
+
+# ------------------------------------------------------------------ apply
+def apply_block_full(cfg, kind, p, h, positions, opts: CallOpts,
+                     kv_len: Optional[int] = None):
+    """Full-sequence block. Returns (h, aux_loss, cache_entry_or_None)."""
+    mixer, f, _ = kind
+    aux = jnp.zeros((), jnp.float32)
+    cache_entry = None
+    if mixer == "attn":
+        hn = common.apply_norm(cfg, p["ln1"], h)
+        if kv_len is not None:
+            o, (k, v) = attention.self_attention(
+                cfg, p["attn"], hn, positions, window=opts.window,
+                attn_chunk=opts.attn_chunk, use_kernels=opts.use_kernels,
+                return_kv=True, seq_shard=opts.attn_seq_shard)
+            cache_entry = {"k": _kv_into_ring(k, kv_len),
+                           "v": _kv_into_ring(v, kv_len)}
+        else:
+            o = attention.self_attention(
+                cfg, p["attn"], hn, positions, window=opts.window,
+                attn_chunk=opts.attn_chunk, use_kernels=opts.use_kernels,
+                seq_shard=opts.attn_seq_shard)
+        h = h + o
+    else:
+        hn = common.apply_norm(cfg, p["ln1"], h)
+        if kv_len is not None:
+            o, (conv_tail, state) = ssm_mod.ssd_forward(
+                cfg, p["ssm"], hn, return_state=True,
+                use_kernels=opts.use_kernels)
+            cache_entry = {"conv": conv_tail, "state": state}
+        else:
+            o = ssm_mod.ssd_forward(cfg, p["ssm"], hn,
+                                    use_kernels=opts.use_kernels)
+        h = h + o
+    if f == "dense":
+        h = h + ffn_mod.dense_ffn(cfg, p["ffn"],
+                                  common.apply_norm(cfg, p["ln2"], h))
+    elif f == "moe":
+        y, aux = ffn_mod.moe_ffn(cfg, p["moe"],
+                                 common.apply_norm(cfg, p["ln2"], h),
+                                 capacity_factor=opts.capacity_factor,
+                                 use_kernels=opts.use_kernels)
+        h = h + y
+    return _constrain(h, opts.act_spec), aux, cache_entry
+
+
+def apply_block_decode(cfg, kind, p, h, cache_entry, pos, opts: CallOpts):
+    """One-token decode block. Returns (h, new_cache_entry)."""
+    mixer, f, _ = kind
+    if mixer == "attn":
+        hn = common.apply_norm(cfg, p["ln1"], h)
+        o, nk, nv = attention.decode_self_attention(
+            cfg, p["attn"], hn, cache_entry["k"], cache_entry["v"], pos,
+            window=opts.window, use_kernels=opts.use_kernels)
+        new_entry = {"k": nk, "v": nv}
+        h = h + o
+    else:
+        hn = common.apply_norm(cfg, p["ln1"], h)
+        o, nconv, nstate = ssm_mod.ssd_decode_step(
+            cfg, p["ssm"], hn, cache_entry["conv"], cache_entry["state"])
+        new_entry = {"conv": nconv, "state": nstate}
+        h = h + o
+    if f == "dense":
+        h = h + ffn_mod.dense_ffn(cfg, p["ffn"],
+                                  common.apply_norm(cfg, p["ln2"], h))
+    elif f == "moe":
+        y, _ = ffn_mod.moe_ffn(cfg, p["moe"],
+                               common.apply_norm(cfg, p["ln2"], h),
+                               capacity_factor=2.0,
+                               use_kernels=opts.use_kernels,
+                               single_group=opts.moe_single_group_decode)
+        h = h + y
+    return _constrain(h, opts.act_spec), new_entry
+
+
+# ------------------------------------------------------------------ stack
+def apply_stack(cfg, stack, h, positions, opts: CallOpts,
+                kv_len: Optional[int] = None):
+    """Full-sequence stack. Returns (h, aux_total, cache_or_None)."""
+    prefix_kinds, period_kinds, _ = stack_pattern(cfg)
+    h = _constrain(h, opts.act_spec)
+    aux_total = jnp.zeros((), jnp.float32)
+    prefix_cache = []
+    for kind, p in zip(prefix_kinds, stack["prefix"]):
+        h, aux, ce = apply_block_full(cfg, kind, p, h, positions, opts, kv_len)
+        aux_total = aux_total + aux
+        prefix_cache.append(ce)
+
+    def body(carry, pp):
+        h_, aux_ = carry
+        ces = []
+        for i, kind in enumerate(period_kinds):
+            h_, a, ce = apply_block_full(cfg, kind, pp[i], h_, positions,
+                                         opts, kv_len)
+            aux_ = aux_ + a
+            ces.append(ce)
+        return (h_, aux_), tuple(ces)
+
+    if opts.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (h, aux_total), period_cache = jax.lax.scan(
+        body, (h, aux_total), stack["periods"])
+    cache = None
+    if kv_len is not None:
+        cache = {"prefix": prefix_cache, "periods": period_cache}
+    return h, aux_total, cache
+
+
+def decode_stack(cfg, stack, h, pos, cache, opts: CallOpts):
+    """One-token decode through the stack. Returns (h, new_cache)."""
+    prefix_kinds, period_kinds, _ = stack_pattern(cfg)
+    new_prefix = []
+    for kind, p, ce in zip(prefix_kinds, stack["prefix"], cache["prefix"]):
+        h, nce = apply_block_decode(cfg, kind, p, h, ce, pos, opts)
+        new_prefix.append(nce)
+
+    def body(h_, xs):
+        pp, pc = xs
+        nces = []
+        for i, kind in enumerate(period_kinds):
+            h_, nce = apply_block_decode(cfg, kind, pp[i], h_, pc[i], pos, opts)
+            nces.append(nce)
+        return h_, tuple(nces)
+
+    h, new_periods = jax.lax.scan(body, h, (stack["periods"], cache["periods"]))
+    return h, {"prefix": new_prefix, "periods": new_periods}

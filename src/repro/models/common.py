@@ -1,0 +1,86 @@
+"""Shared building blocks: norms, activations, rotary embeddings, init."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------- init
+def dense_param(rng, shape, dtype, in_axis: int = 0):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[in_axis] if in_axis < len(shape) else shape[0]
+    std = 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_param(rng, shape, dtype):
+    return (jax.random.normal(rng, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------- norms
+def init_norm(cfg, d: int):
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+    if cfg.norm == "nonparametric_ln":
+        return {}
+    raise ValueError(cfg.norm)
+
+
+def apply_norm(cfg, p, x, eps: float = 1e-5):
+    """Norms run in f32 and cast back (TPU-standard)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+        x = x * p["scale"]
+    else:  # layernorm / nonparametric_ln
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        x = (x - mu) * jax.lax.rsqrt(jnp.var(x, axis=-1, keepdims=True) + eps)
+        if cfg.norm == "layernorm":
+            x = x * p["scale"] + p["bias"]
+    return x.astype(dt)
+
+
+# ---------------------------------------------------------------- activations
+def activation(name: str):
+    if name in ("silu",):
+        return jax.nn.silu
+    if name in ("gelu", "gelu_plain"):
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------- rotary
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- misc
+def causal_mask_bias(q_pos, k_pos, window: int = 0):
+    """Additive bias (0 / -inf) for causal (+ optional sliding window) masking.
+
+    q_pos: (..., S_q), k_pos: (..., S_k) -> (..., S_q, S_k)
+    """
+    ok = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window:
+        ok &= k_pos[..., None, :] > (q_pos[..., :, None] - window)
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)

@@ -1,0 +1,177 @@
+"""Whisper-style encoder-decoder transformer.
+
+The mel-spectrogram + conv frontend is a STUB per the assignment:
+``frame_embeds`` (B, encoder_seq, d_model) arrive precomputed. This module
+implements the full transformer: bidirectional encoder, and a decoder with
+self-attention (KV-cached) + cross-attention to the encoded audio.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, common, ffn as ffn_mod
+from repro.models.blocks import CallOpts
+
+
+def _init_layer(rng, cfg, cross: bool):
+    ks = jax.random.split(rng, 3)
+    p = {
+        "ln1": common.init_norm(cfg, cfg.d_model),
+        "attn": attention.init_attention(ks[0], cfg),
+        "ln_ffn": common.init_norm(cfg, cfg.d_model),
+        "ffn": ffn_mod.init_dense_ffn(ks[1], cfg),
+    }
+    if cross:
+        p["ln_x"] = common.init_norm(cfg, cfg.d_model)
+        p["xattn"] = attention.init_attention(ks[2], cfg)
+    return p
+
+
+def init_params(rng, cfg):
+    ks = jax.random.split(rng, 6)
+    dt = common.dtype_of(cfg)
+
+    def stacked(rng_, n, cross):
+        return jax.vmap(lambda r: _init_layer(r, cfg, cross))(
+            jax.random.split(rng_, n))
+
+    return {
+        "embed": common.embed_param(ks[0], (cfg.vocab_size, cfg.d_model), dt),
+        "pos_dec": common.embed_param(ks[1], (cfg.max_learned_pos, cfg.d_model), dt),
+        "pos_enc": common.embed_param(ks[2], (cfg.encoder_seq, cfg.d_model), dt),
+        "encoder": stacked(ks[3], cfg.encoder_layers, cross=False),
+        "decoder": stacked(ks[4], cfg.num_layers, cross=True),
+        "ln_enc": common.init_norm(cfg, cfg.d_model),
+        "ln_dec": common.init_norm(cfg, cfg.d_model),
+    }
+
+
+def encode(params, cfg, frame_embeds, opts: CallOpts = CallOpts()):
+    """frame_embeds: (B, T_enc, d) stubbed conv features -> (B, T_enc, d)."""
+    T = frame_embeds.shape[1]
+    pos = jnp.arange(T, dtype=jnp.int32)
+    dt = common.dtype_of(cfg)
+    h = frame_embeds.astype(dt) + params["pos_enc"][pos].astype(dt)
+
+    def body(h_, lp):
+        hn = common.apply_norm(cfg, lp["ln1"], h_)
+        h_ = h_ + attention.self_attention(cfg, lp["attn"], hn, pos,
+                                           causal=False,
+                                           attn_chunk=opts.attn_chunk,
+                                           use_kernels=opts.use_kernels)
+        hn = common.apply_norm(cfg, lp["ln_ffn"], h_)
+        return h_ + ffn_mod.dense_ffn(cfg, lp["ffn"], hn), None
+
+    if opts.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = jax.lax.scan(body, h, params["encoder"])
+    return common.apply_norm(cfg, params["ln_enc"], h)
+
+
+def encode_cross_kv(params, cfg, enc_out):
+    """Precompute per-decoder-layer cross K/V: pytrees stacked over layers."""
+    def one(lp):
+        return attention.encode_kv(cfg, lp["xattn"], enc_out)
+    return jax.vmap(one, in_axes=0)(params["decoder"])
+
+
+def _decoder_layer_full(cfg, lp, h, pos, cross_kv, opts, kv_len):
+    hn = common.apply_norm(cfg, lp["ln1"], h)
+    if kv_len is not None:
+        o, (k, v) = attention.self_attention(
+            cfg, lp["attn"], hn, pos, attn_chunk=opts.attn_chunk,
+            use_kernels=opts.use_kernels, return_kv=True)
+        from repro.models.blocks import _kv_into_ring
+        ce = {"k": _kv_into_ring(k, kv_len), "v": _kv_into_ring(v, kv_len)}
+    else:
+        o = attention.self_attention(cfg, lp["attn"], hn, pos,
+                                     attn_chunk=opts.attn_chunk,
+                                     use_kernels=opts.use_kernels)
+        ce = None
+    h = h + o
+    hn = common.apply_norm(cfg, lp["ln_x"], h)
+    h = h + attention.cross_attention(cfg, lp["xattn"], hn, *cross_kv)
+    hn = common.apply_norm(cfg, lp["ln_ffn"], h)
+    return h + ffn_mod.dense_ffn(cfg, lp["ffn"], hn), ce
+
+
+def forward(params, cfg, tokens, frame_embeds, opts: CallOpts = CallOpts()):
+    """Teacher-forced full-sequence decoder logits (training)."""
+    enc = encode(params, cfg, frame_embeds, opts)
+    cross_kv = encode_cross_kv(params, cfg, enc)
+    S = tokens.shape[1]
+    pos = jnp.arange(S, dtype=jnp.int32)
+    h = params["embed"][tokens] + params["pos_dec"][pos].astype(common.dtype_of(cfg))
+
+    def body(h_, xs):
+        lp, ckv = xs
+        h_, _ = _decoder_layer_full(cfg, lp, h_, pos, ckv, opts, None)
+        return h_, None
+
+    if opts.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = jax.lax.scan(body, h, (params["decoder"], cross_kv))
+    h = common.apply_norm(cfg, params["ln_dec"], h)
+    logits = jnp.einsum("bsd,vd->bsv", h, params["embed"],
+                        preferred_element_type=jnp.float32)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def prefill(params, cfg, tokens, frame_embeds, kv_len,
+            opts: CallOpts = CallOpts()):
+    """Encode audio + prefill decoder. Returns (last logits, cache)."""
+    enc = encode(params, cfg, frame_embeds, opts)
+    cross_kv = encode_cross_kv(params, cfg, enc)
+    S = tokens.shape[1]
+    pos = jnp.arange(S, dtype=jnp.int32)
+    h = params["embed"][tokens] + params["pos_dec"][pos].astype(common.dtype_of(cfg))
+
+    def body(h_, xs):
+        lp, ckv = xs
+        h_, ce = _decoder_layer_full(cfg, lp, h_, pos, ckv, opts, kv_len)
+        return h_, ce
+
+    h, self_cache = jax.lax.scan(body, h, (params["decoder"], cross_kv))
+    h = common.apply_norm(cfg, params["ln_dec"], h[:, -1:])
+    logits = jnp.einsum("bsd,vd->bsv", h, params["embed"],
+                        preferred_element_type=jnp.float32)
+    return logits, {"self": self_cache, "cross": cross_kv}
+
+
+def decode_step(params, cfg, tokens, pos, cache, opts: CallOpts = CallOpts()):
+    """One decoder token. cache = {self: stacked KV, cross: stacked KV}."""
+    ppos = jnp.minimum(jnp.full((1,), pos, jnp.int32), cfg.max_learned_pos - 1)
+    h = params["embed"][tokens] + params["pos_dec"][ppos].astype(common.dtype_of(cfg))
+
+    def body(h_, xs):
+        lp, ce, ckv = xs
+        hn = common.apply_norm(cfg, lp["ln1"], h_)
+        o, nk, nv = attention.decode_self_attention(
+            cfg, lp["attn"], hn, ce["k"], ce["v"], pos,
+            use_kernels=opts.use_kernels)
+        h_ = h_ + o
+        hn = common.apply_norm(cfg, lp["ln_x"], h_)
+        h_ = h_ + attention.cross_attention(cfg, lp["xattn"], hn, *ckv)
+        hn = common.apply_norm(cfg, lp["ln_ffn"], h_)
+        h_ = h_ + ffn_mod.dense_ffn(cfg, lp["ffn"], hn)
+        return h_, {"k": nk, "v": nv}
+
+    h, new_self = jax.lax.scan(body, h,
+                               (params["decoder"], cache["self"], cache["cross"]))
+    h = common.apply_norm(cfg, params["ln_dec"], h)
+    logits = jnp.einsum("bsd,vd->bsv", h, params["embed"],
+                        preferred_element_type=jnp.float32)
+    return logits, {"self": new_self, "cross": cache["cross"]}
+
+
+def init_cache(cfg, batch, kv_len, dtype=jnp.bfloat16):
+    a = attention.dims_of(cfg)
+    L = cfg.num_layers
+
+    def kv(T):
+        return {"k": jnp.zeros((L, batch, T, a.num_kv_heads, a.head_dim), dtype),
+                "v": jnp.zeros((L, batch, T, a.num_kv_heads, a.head_dim), dtype)}
+
+    cross = kv(cfg.encoder_seq)
+    return {"self": kv(kv_len), "cross": (cross["k"], cross["v"])}

@@ -1,0 +1,121 @@
+"""Feed-forward layers: gated dense FFN and GSPMD-style einsum-dispatch MoE.
+
+The MoE uses the TPU-canonical fixed-capacity one-hot dispatch (Switch /
+GLaM / MaxText lineage): tokens are grouped, routed within groups, and
+dispatched/combined via einsums so that expert parallelism shards cleanly
+over the `model` mesh axis (XLA inserts the all-to-alls). The hot expert
+matmul has a Pallas grouped-matmul kernel in ``repro.kernels.moe_gmm``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+# ------------------------------------------------------------------ dense
+def init_dense_ffn(rng, cfg, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = common.dtype_of(cfg)
+    ks = jax.random.split(rng, 3)
+    if cfg.act == "gelu_plain":
+        return {"w_in": common.dense_param(ks[0], (d, f), dt),
+                "b_in": jnp.zeros((f,), dt),
+                "w_out": common.dense_param(ks[1], (f, d), dt),
+                "b_out": jnp.zeros((d,), dt)}
+    return {"w_gate": common.dense_param(ks[0], (d, f), dt),
+            "w_up": common.dense_param(ks[1], (d, f), dt),
+            "w_down": common.dense_param(ks[2], (f, d), dt)}
+
+
+def dense_ffn(cfg, p, x):
+    act = common.activation(cfg.act)
+    if cfg.act == "gelu_plain":
+        return act(x @ p["w_in"] + p["b_in"]) @ p["w_out"] + p["b_out"]
+    return (act(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+# ------------------------------------------------------------------ MoE
+def init_moe(rng, cfg):
+    m, d, f = cfg.moe, cfg.d_model, cfg.d_ff
+    dt = common.dtype_of(cfg)
+    ks = jax.random.split(rng, 5)
+    E = m.num_experts
+
+    def expert_stack(rng, shape_in, shape_out):
+        return common.dense_param(rng, (E, shape_in, shape_out), dt, in_axis=1)
+
+    p = {
+        "router": common.dense_param(ks[0], (d, E), jnp.float32),
+        "w_gate": expert_stack(ks[1], d, f),
+        "w_up": expert_stack(ks[2], d, f),
+        "w_down": expert_stack(ks[3], f, d),
+    }
+    if m.num_shared_experts:
+        p["shared"] = init_dense_ffn(ks[4], cfg, d_ff=f * m.num_shared_experts)
+    return p
+
+
+def _route(cfg, logits):
+    """logits (G,T,E) f32 -> weights (G,T,E) with top-k renormalized."""
+    m = cfg.moe
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_idx = jax.lax.top_k(probs, m.experts_per_token)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    weights = jnp.zeros_like(probs)
+    oh = jax.nn.one_hot(top_idx, m.num_experts, dtype=probs.dtype)  # (G,T,k,E)
+    weights = (oh * top_w[..., None]).sum(axis=-2)
+    return weights, probs
+
+
+def moe_ffn(cfg, p, x, *, capacity_factor: float = 1.25, use_kernels=False,
+            single_group: bool = False):
+    """x: (B, S, d). Groups = batch rows (or one group for single-token
+    decode when ``single_group`` — slashes per-token expert-slot waste).
+    Returns (y, aux_loss)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    E, k = m.num_experts, m.experts_per_token
+    orig_shape = None
+    if single_group and S == 1 and B > 1:
+        orig_shape = (B, S, d)
+        x = x.reshape(1, B, d)
+        B, S = 1, B
+    G, T = B, S  # group per sequence
+    C = max(1, int(-(-k * T // E) * capacity_factor))
+    C = -(-C // 8) * 8 if C > 8 else C  # MXU-align larger capacities
+    C = min(C, T)  # never exceed the group's token count
+
+    logits = jnp.einsum("gtd,de->gte", x.astype(jnp.float32), p["router"])
+    weights, probs = _route(cfg, logits)  # (G,T,E)
+    mask = (weights > 0).astype(jnp.float32)
+    # position of each token within its expert's capacity buffer
+    pos = jnp.cumsum(mask, axis=1) * mask - mask  # (G,T,E), 0-based
+    keep = (pos < C).astype(jnp.float32) * mask
+    dispatch = jax.nn.one_hot(pos.astype(jnp.int32), C,
+                              dtype=x.dtype) * keep[..., None]  # (G,T,E,C)
+    combine = dispatch.astype(jnp.float32) * weights[..., None]
+
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch, x)  # (G,E,C,d)
+    if use_kernels:
+        from repro.kernels import moe_gmm
+        ye = moe_gmm.expert_ffn(xe, p["w_gate"], p["w_up"], p["w_down"], cfg.act)
+    else:
+        act = common.activation(cfg.act)
+        h = act(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])) \
+            * jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+        ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), ye)
+
+    if m.num_shared_experts:
+        y = y + dense_ffn(cfg, p["shared"], x)
+
+    # Switch-style load-balance aux loss
+    frac_tokens = mask.mean(axis=1)          # (G,E) fraction routed
+    frac_probs = probs.mean(axis=1)          # (G,E) mean router prob
+    aux = E * jnp.mean(jnp.sum(frac_tokens * frac_probs, axis=-1))
+    out = y.astype(x.dtype)
+    if orig_shape is not None:
+        out = out.reshape(orig_shape)
+    return out, aux

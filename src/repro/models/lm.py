@@ -1,0 +1,90 @@
+"""Decoder-only LM covering dense / MoE / SSM / hybrid / VLM families."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks, common
+from repro.models.blocks import CallOpts
+
+
+def init_params(rng, cfg):
+    ks = jax.random.split(rng, 4)
+    dt = common.dtype_of(cfg)
+    p = {
+        "embed": common.embed_param(ks[0], (cfg.vocab_size, cfg.d_model), dt),
+        "stack": blocks.init_stack(ks[1], cfg),
+        "ln_f": common.init_norm(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = common.dense_param(ks[2], (cfg.d_model, cfg.vocab_size), dt)
+    if cfg.pos_emb == "learned":
+        p["pos"] = common.embed_param(ks[3], (cfg.max_learned_pos, cfg.d_model), dt)
+    if cfg.num_visual_tokens:
+        # projector bias stand-in: stubbed vision tower emits d_model embeds
+        p["visual_scale"] = jnp.ones((), jnp.float32)
+    return p
+
+
+def _embed(cfg, p, tokens, positions, visual_embeds=None):
+    h = p["embed"][tokens]
+    if cfg.name.startswith("gemma"):
+        h = (h.astype(jnp.float32) * jnp.sqrt(float(cfg.d_model))).astype(h.dtype)
+    if visual_embeds is not None:
+        ve = (visual_embeds.astype(jnp.float32) * p["visual_scale"])
+        h = jnp.concatenate([ve.astype(h.dtype), h], axis=1)
+    if cfg.pos_emb == "learned":
+        h = h + p["pos"][positions]
+    return h
+
+
+def _unembed(cfg, p, h):
+    w = p["embed"].T if cfg.tie_embeddings else p["unembed"]
+    return jnp.einsum("bsd,dv->bsv", h, w, preferred_element_type=jnp.float32)
+
+
+def forward(params, cfg, tokens, *, visual_embeds=None,
+            opts: CallOpts = CallOpts()):
+    """Full-sequence logits. tokens: (B, S_text); visual_embeds: (B, V, d)."""
+    B, S_text = tokens.shape
+    S = S_text + (visual_embeds.shape[1] if visual_embeds is not None else 0)
+    positions = jnp.arange(S, dtype=jnp.int32)
+    h = _embed(cfg, params, tokens, positions, visual_embeds)
+    h, aux, _ = blocks.apply_stack(cfg, params["stack"], h, positions, opts)
+    h = common.apply_norm(cfg, params["ln_f"], h)
+    return _unembed(cfg, params, h), aux
+
+
+def prefill(params, cfg, tokens, kv_len: int, *, visual_embeds=None,
+            opts: CallOpts = CallOpts()):
+    """Prefill: returns (last-token logits, cache)."""
+    B, S_text = tokens.shape
+    S = S_text + (visual_embeds.shape[1] if visual_embeds is not None else 0)
+    positions = jnp.arange(S, dtype=jnp.int32)
+    h = _embed(cfg, params, tokens, positions, visual_embeds)
+    h, aux, cache = blocks.apply_stack(cfg, params["stack"], h, positions,
+                                       opts, kv_len=kv_len)
+    h = common.apply_norm(cfg, params["ln_f"], h[:, -1:])
+    return _unembed(cfg, params, h), cache
+
+
+def decode_step(params, cfg, tokens, pos, cache, *, opts: CallOpts = CallOpts()):
+    """One decode step. tokens: (B, 1); pos: scalar absolute position.
+
+    Returns (logits (B,1,V), new_cache).
+    """
+    positions = jnp.full((1,), pos, jnp.int32)
+    h = params["embed"][tokens]
+    if cfg.name.startswith("gemma"):
+        h = (h.astype(jnp.float32) * jnp.sqrt(float(cfg.d_model))).astype(h.dtype)
+    if cfg.pos_emb == "learned":
+        h = h + params["pos"][jnp.minimum(positions, cfg.max_learned_pos - 1)]
+    h, new_cache = blocks.decode_stack(cfg, params["stack"], h, pos, cache, opts)
+    h = common.apply_norm(cfg, params["ln_f"], h)
+    return _unembed(cfg, params, h), new_cache
+
+
+def init_cache(cfg, batch, kv_len, dtype=jnp.bfloat16):
+    return blocks.init_stack_cache(cfg, batch, kv_len, dtype)

@@ -1,0 +1,41 @@
+"""Gateway: request entry point + throughput-weighted load balancing
+across a function's pod engines (paper: 'the load balancer is updated with
+request distribution information according to the throughput capability of
+different function pods')."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core.perf_model import FnSpec, throughput
+from repro.serving.batcher import InferenceRequest
+from repro.serving.engine import PodEngine
+
+
+class Gateway:
+    def __init__(self):
+        self.engines: Dict[str, List[PodEngine]] = {}
+
+    def register(self, fn_id: str, engine: PodEngine) -> None:
+        self.engines.setdefault(fn_id, []).append(engine)
+
+    def deregister(self, fn_id: str, pod_id: str) -> None:
+        self.engines[fn_id] = [e for e in self.engines.get(fn_id, [])
+                               if e.pod.pod_id != pod_id]
+
+    def route(self, fn_id: str, req: InferenceRequest) -> PodEngine:
+        pods = self.engines.get(fn_id, [])
+        if not pods:
+            raise KeyError(f"no pods for {fn_id}")
+        # least normalized backlog: queue / predicted throughput
+        def score(e: PodEngine) -> float:
+            cap = throughput(e.spec, e.pod.batch, e.pod.sm, e.pod.quota)
+            return len(e.batcher.queue) / max(cap, 1e-9)
+        eng = min(pods, key=score)
+        eng.submit(req)
+        return eng
+
+    def pump(self, fn_id: str) -> List[InferenceRequest]:
+        done = []
+        for e in self.engines.get(fn_id, []):
+            done.extend(e.step())
+        return done

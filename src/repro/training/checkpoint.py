@@ -1,0 +1,66 @@
+"""Flat-npz checkpointing for arbitrary pytrees (params + optimizer state).
+
+Keys are '/'-joined tree paths; restore rebuilds into a reference pytree
+structure, so sharded device arrays round-trip through host numpy. Atomic
+via write-to-temp + rename.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype not in (np.float32, np.float64, np.int32, np.int64,
+                             np.uint32, np.bool_, np.int8, np.uint8,
+                             np.float16):
+            arr = arr.astype(np.float32)  # bf16 etc. stored widened
+        flat[key] = arr
+    return flat
+
+
+def _path_str(p):
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save(path: str, tree) -> None:
+    flat = _flatten(tree)
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp.npz")
+    os.close(fd)
+    try:
+        np.savez(tmp, **flat)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def restore(path: str, like):
+    """Restore into the structure of `like` (a reference pytree)."""
+    with np.load(path) as z:
+        loaded = dict(z)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path_, leaf in leaves:
+        key = "/".join(_path_str(p) for p in path_)
+        if key not in loaded:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = loaded[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        out.append(np.asarray(jax.numpy.asarray(arr).astype(leaf.dtype)))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,5 @@
+from repro.workloads.azure import (TraceConfig, arrivals, rate_series,
+                                   standard_workload, stress_workload)
+
+__all__ = ["TraceConfig", "arrivals", "rate_series", "standard_workload",
+           "stress_workload"]

@@ -1,0 +1,74 @@
+"""Azure-Functions-trace-style workload synthesis (paper §4: Azure Trace
+[Zhang et al., SOSP'21] replayed through Grafana k6).
+
+The public trace's per-function invocation series are well modeled by a
+diurnal base rate + Poisson arrivals + heavy-tailed bursts + idle gaps.
+Generators are deterministic per seed. Rates are per-second.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class TraceConfig:
+    duration_s: float = 300.0
+    base_rps: float = 20.0
+    diurnal_amplitude: float = 0.5    # relative swing of the slow wave
+    diurnal_period_s: float = 240.0
+    burst_rate_per_min: float = 1.5   # Poisson rate of burst onsets
+    burst_multiplier: float = 4.0     # peak rate multiple during a burst
+    burst_duration_s: float = 12.0
+    idle_prob: float = 0.08           # chance a 30s block goes near-idle
+    seed: int = 0
+
+
+def rate_series(cfg: TraceConfig, dt: float = 1.0) -> np.ndarray:
+    """Target request rate lambda(t) sampled every dt seconds."""
+    rng = np.random.default_rng(cfg.seed)
+    t = np.arange(0.0, cfg.duration_s, dt)
+    lam = cfg.base_rps * (1.0 + cfg.diurnal_amplitude *
+                          np.sin(2 * np.pi * t / cfg.diurnal_period_s))
+    # bursts (non-stacking: overlapping bursts take the max multiplier)
+    burst_mult = np.ones_like(lam)
+    n_bursts = rng.poisson(cfg.burst_rate_per_min * cfg.duration_s / 60.0)
+    for _ in range(n_bursts):
+        onset = rng.uniform(0, cfg.duration_s)
+        dur = rng.exponential(cfg.burst_duration_s)
+        mult = 1.0 + rng.exponential(cfg.burst_multiplier - 1.0)
+        mask = (t >= onset) & (t < onset + dur)
+        burst_mult[mask] = np.maximum(burst_mult[mask], mult)
+    lam = lam * burst_mult
+    # idle blocks
+    block = 30.0
+    for b0 in np.arange(0, cfg.duration_s, block):
+        if rng.uniform() < cfg.idle_prob:
+            lam[(t >= b0) & (t < b0 + block)] *= 0.05
+    return np.maximum(lam, 0.0)
+
+
+def arrivals(cfg: TraceConfig, dt: float = 1.0) -> np.ndarray:
+    """Poisson arrival times following rate_series (thinning per bin)."""
+    rng = np.random.default_rng(cfg.seed + 1)
+    lam = rate_series(cfg, dt)
+    times = []
+    for i, l in enumerate(lam):
+        n = rng.poisson(l * dt)
+        times.append(rng.uniform(i * dt, (i + 1) * dt, size=n))
+    out = np.sort(np.concatenate(times)) if times else np.array([])
+    return out
+
+
+def standard_workload(duration_s=300.0, base_rps=20.0, seed=0) -> np.ndarray:
+    return arrivals(TraceConfig(duration_s=duration_s, base_rps=base_rps,
+                                seed=seed))
+
+
+def stress_workload(duration_s=300.0, base_rps=40.0, seed=0) -> np.ndarray:
+    """Paper Fig 7 'stress': higher base, more and bigger bursts."""
+    return arrivals(TraceConfig(
+        duration_s=duration_s, base_rps=base_rps, diurnal_amplitude=0.7,
+        burst_rate_per_min=3.0, burst_multiplier=5.0, burst_duration_s=20.0,
+        idle_prob=0.03, seed=seed))

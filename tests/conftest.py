@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests run on the single CPU device (the dry-run sets its own XLA_FLAGS
+# in-process and is exercised via subprocess in test_dryrun.py)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,143 @@
+"""Property-based tests (hypothesis) for the HAS-GPU core invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS
+from repro.core import (FnSpec, HybridAutoScaler, KalmanPredictor, PodAlloc,
+                        Reconfigurator, TOTAL_SLICES, VirtualGPU, latency,
+                        throughput)
+from repro.core.scheduler import TokenLedger
+
+SPEC = FnSpec(ARCHS["olmo-1b"])
+
+
+# ---------------------------------------------------------------- vGPU
+@given(st.lists(st.tuples(st.integers(1, 8),
+                          st.floats(0.1, 1.0)), min_size=1, max_size=12))
+@settings(max_examples=100, deadline=None)
+def test_vgpu_placement_never_oversubscribes(allocs):
+    """Whatever placements succeed, slices<=8 and per-partition quota<=1."""
+    g = VirtualGPU("G")
+    for sm, q in allocs:
+        pod = PodAlloc(fn_id="f", sm=sm, quota=round(q, 2), batch=1)
+        if g.can_place(pod.sm, pod.quota):
+            try:
+                g.place(pod)
+            except RuntimeError:
+                pass
+    assert g.invariant_ok()
+    assert 0.0 <= g.hgo <= 1.0 + 1e-9
+
+
+@given(st.integers(1, 8), st.floats(0.1, 1.0), st.floats(0.1, 1.0))
+@settings(max_examples=50, deadline=None)
+def test_vertical_scaling_respects_partition(sm, q1, q2):
+    g = VirtualGPU("G")
+    p1 = PodAlloc(fn_id="f", sm=sm, quota=round(q1, 2), batch=1)
+    g.place(p1)
+    new_q = round(q2, 2)
+    if new_q <= 1.0:
+        g.set_quota(p1.pod_id, new_q)
+        assert g.invariant_ok()
+    part = g.partition_of(p1.pod_id)
+    assert part.quota_used <= 1.0 + 1e-9
+
+
+def test_sm_alignment_no_fragmentation():
+    """Same-size pods share a partition instead of fragmenting slices."""
+    g = VirtualGPU("G")
+    g.place(PodAlloc(fn_id="a", sm=4, quota=0.5, batch=1))
+    g.place(PodAlloc(fn_id="b", sm=4, quota=0.4, batch=1))
+    assert len(g.partitions) == 1 and g.slices_used == 4
+    g.place(PodAlloc(fn_id="c", sm=4, quota=0.5, batch=1))
+    assert g.slices_used == 8 and len(g.partitions) == 2
+
+
+# ---------------------------------------------------------------- latency
+@given(st.integers(1, 32), st.integers(1, 8),
+       st.floats(0.1, 1.0), st.floats(0.1, 1.0))
+@settings(max_examples=80, deadline=None)
+def test_latency_monotonic_in_quota_and_sm(batch, sm, qa, qb):
+    qa, qb = round(qa, 2), round(qb, 2)
+    la = latency(SPEC, batch, sm, qa)
+    lb = latency(SPEC, batch, sm, qb)
+    if qa < qb:
+        assert la >= lb - 1e-9  # more quota never slower
+    if sm < TOTAL_SLICES:
+        assert latency(SPEC, batch, sm + 1, qa) <= \
+            latency(SPEC, batch, sm, qa) + 1e-9
+
+
+@given(st.integers(1, 32))
+@settings(max_examples=30, deadline=None)
+def test_full_allocation_equals_exec_time(batch):
+    from repro.core.perf_model import exec_time
+    assert latency(SPEC, batch, TOTAL_SLICES, 1.0) == \
+        pytest.approx(exec_time(SPEC, batch, TOTAL_SLICES))
+
+
+# ---------------------------------------------------------------- ledger
+@given(st.floats(0.1, 1.0), st.lists(st.floats(1e-4, 0.2), min_size=1,
+                                     max_size=10))
+@settings(max_examples=60, deadline=None)
+def test_token_ledger_rate_bound(quota, costs):
+    """Over any horizon, granted execution time <= quota * elapsed + W."""
+    quota = round(quota, 2)
+    g = VirtualGPU("G", window_ms=100.0)
+    pod = PodAlloc(fn_id="f", sm=8, quota=quota, batch=1)
+    g.place(pod)
+    ledger = TokenLedger(g)
+    t = 0.0
+    total_cost = sum(costs)
+    for c in costs:
+        t = ledger.acquire(pod.pod_id, c, t)
+    # wall time must be at least total_cost / quota - one window of slack
+    assert t >= total_cost / quota - ledger.window_s - 1e-9
+    # and the schedule is feasible (can't finish faster than the work)
+    assert t >= total_cost - 1e-9
+
+
+# ---------------------------------------------------------------- kalman
+@given(st.floats(0.0, 500.0))
+@settings(max_examples=30, deadline=None)
+def test_kalman_converges_to_constant(level):
+    k = KalmanPredictor()
+    for _ in range(60):
+        pred = k.update(level)
+    assert pred == pytest.approx(level, rel=0.02, abs=0.5)
+
+
+# ---------------------------------------------------------------- autoscaler
+@given(st.floats(5.0, 300.0), st.integers(0, 3))
+@settings(max_examples=25, deadline=None)
+def test_autoscaler_reaches_capacity_and_keeps_invariants(rps, seed):
+    recon = Reconfigurator(num_gpus=0, max_gpus=64)
+    scaler = HybridAutoScaler(recon)
+    for i in range(12):
+        scaler.scale(float(i) * 31.0, SPEC, rps)  # beyond cooldown each time
+        assert recon.invariant_ok()
+    cap = scaler.capacity(SPEC)
+    assert cap * scaler.cfg.alpha >= rps * 0.95  # capacity covers demand
+    # at least one pod always retained
+    assert len(recon.pods_of(SPEC.fn_id)) >= 1
+
+
+@given(st.floats(300.0, 800.0))
+@settings(max_examples=15, deadline=None)
+def test_autoscaler_scales_down_after_peak(rps):
+    recon = Reconfigurator(num_gpus=0, max_gpus=64)
+    scaler = HybridAutoScaler(recon)
+    for i in range(6):
+        scaler.scale(float(i), SPEC, rps)
+    cap_peak = scaler.capacity(SPEC)
+    n_peak = len(recon.pods_of(SPEC.fn_id))
+    t = 1000.0
+    for i in range(10):
+        scaler.scale(t + i * 40.0, SPEC, 1.0)  # demand collapses
+    cap_end = scaler.capacity(SPEC)
+    n_end = len(recon.pods_of(SPEC.fn_id))
+    # capacity shrinks unless already at the single-pod SLO floor
+    assert cap_end < cap_peak or n_peak == 1
+    assert n_end <= n_peak and n_end >= 1
+    assert recon.invariant_ok()
