@@ -14,26 +14,56 @@ import numpy as np
 from repro.configs import ARCHS
 from repro.core import (ClusterSimulator, FaSTGShareLikePolicy, FnSpec,
                         HybridAutoScaler, KServeLikePolicy, Reconfigurator,
-                        SimConfig)
+                        SimConfig, TickClusterSimulator)
 from repro.workloads import standard_workload
 
 MULTIPLIERS = [round(1.0 + 0.25 * i, 2) for i in range(37)]
 TIGHT = (1.5, 2.0, 2.5)
 POLICIES = ("has", "kserve", "fast")
+ENGINES = {"event": ClusterSimulator, "tick": TickClusterSimulator}
 
 
 def simulate(arch: str, policy: str, arr, base_rps: float, duration: float,
-             seed: int = 1):
+             seed: int = 1, engine: str = "event"):
     spec = FnSpec(ARCHS[arch])
     recon = Reconfigurator(num_gpus=0, max_gpus=64)
     pol = {"has": HybridAutoScaler, "kserve": KServeLikePolicy,
            "fast": FaSTGShareLikePolicy}[policy](recon)
     pol.prewarm(spec, base_rps)
-    sim = ClusterSimulator(spec, pol, recon, arr,
-                           SimConfig(duration_s=duration,
-                                     whole_gpu_cost=policy == "kserve",
-                                     seed=seed))
+    sim = ENGINES[engine](spec, pol, recon, arr,
+                          SimConfig(duration_s=duration,
+                                    whole_gpu_cost=policy == "kserve",
+                                    seed=seed))
     return sim.run()
+
+
+def compare_engines(archs=("olmo-1b",), duration=180.0, base_rps=25.0,
+                    out=sys.stdout, seed=0):
+    """Run the fig6 grid on both engines: per-policy violation deltas at
+    the tight multipliers plus the wall-clock speedup."""
+    import time
+    arr = standard_workload(duration, base_rps, seed=seed)
+    walls = {}
+    res = {}
+    for engine in ("tick", "event"):
+        t0 = time.perf_counter()
+        for arch in archs:
+            for pol in POLICIES:
+                res[(engine, arch, pol)] = simulate(arch, pol, arr, base_rps,
+                                                    duration, engine=engine)
+        walls[engine] = time.perf_counter() - t0
+    print("# tick-vs-event engine comparison", file=out)
+    print("arch,policy,mult,viol_tick,viol_event", file=out)
+    for arch in archs:
+        for pol in POLICIES:
+            vt = res[("tick", arch, pol)].violations(TIGHT)
+            ve = res[("event", arch, pol)].violations(TIGHT)
+            for m in TIGHT:
+                print(f"{arch},{pol},{m},{vt[m]:.4f},{ve[m]:.4f}", file=out)
+    speedup = walls["tick"] / max(walls["event"], 1e-9)
+    print(f"tick_wall={walls['tick']:.2f}s event_wall={walls['event']:.2f}s "
+          f"speedup={speedup:.1f}x", file=out)
+    return speedup
 
 
 def run(archs=("olmo-1b", "gemma-7b", "qwen2.5-3b"), duration=180.0,
@@ -70,5 +100,8 @@ def run(archs=("olmo-1b", "gemma-7b", "qwen2.5-3b"), duration=180.0,
 
 
 if __name__ == "__main__":
-    us, derived, _ = run()
-    print(f"fig6_slo_violations,{us:.1f},{derived}")
+    if "--compare-tick" in sys.argv:
+        compare_engines()
+    else:
+        us, derived, _ = run()
+        print(f"fig6_slo_violations,{us:.1f},{derived}")

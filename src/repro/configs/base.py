@@ -8,6 +8,7 @@ via the dry-run (ShapeDtypeStruct, no allocation); smoke tests use
 from __future__ import annotations
 
 import dataclasses
+import functools
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -108,8 +109,12 @@ class ArchConfig:
             return "moe"
         return "dense"
 
+    @functools.lru_cache(maxsize=None)
     def param_count(self) -> int:
-        """Approximate total parameter count (embeddings included)."""
+        """Approximate total parameter count (embeddings included).
+
+        Memoized (the config is frozen): the perf model and RaPP feature
+        extraction evaluate this in per-event hot loops."""
         d, f = self.d_model, self.d_ff
         hd = self.head_dim
         attn = d * (self.num_heads * hd) + 2 * d * (self.num_kv_heads * hd) \
@@ -147,6 +152,7 @@ class ArchConfig:
             total += self.num_layers * attn  # cross-attention
         return total
 
+    @functools.lru_cache(maxsize=None)
     def active_param_count(self) -> int:
         """Params touched per token (MoE: routed top-k + shared only)."""
         if self.moe is None:

@@ -12,8 +12,10 @@ from repro.core.kalman import KalmanPredictor, LastValuePredictor
 from repro.core.perf_model import (FnSpec, cost_rate, exec_time, latency,
                                    most_efficient_config, slo_baseline,
                                    throughput)
+from repro.core.events import EventEngine, FunctionState
 from repro.core.reconfigurator import Reconfigurator
 from repro.core.simulator import ClusterSimulator, SimConfig, SimResult
+from repro.core.simulator_tick import TickClusterSimulator
 from repro.core.vgpu import (DEFAULT_WINDOW_MS, TOTAL_SLICES, Partition,
                              PodAlloc, VirtualGPU)
 
@@ -25,6 +27,7 @@ __all__ = [
     "FnSpec", "cost_rate", "exec_time", "latency", "most_efficient_config",
     "slo_baseline", "throughput",
     "Reconfigurator", "ClusterSimulator", "SimConfig", "SimResult",
+    "EventEngine", "FunctionState", "TickClusterSimulator",
     "DEFAULT_WINDOW_MS", "TOTAL_SLICES", "Partition", "PodAlloc",
     "VirtualGPU",
 ]

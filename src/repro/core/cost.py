@@ -18,19 +18,25 @@ class CostMeter:
     total_usd: float = 0.0
     gpu_seconds: float = 0.0
 
+    def rates(self, recon) -> tuple:
+        """(usd/s, gpu-fraction) rates for the current allocation. The
+        rate only changes when a policy mutates the cluster, so callers
+        integrating between events can sample it once per mutation."""
+        if self.whole_gpu:
+            frac = float(len(recon.used_gpus()))
+        else:
+            frac = sum((pod.sm / 8.0) * pod.quota
+                       for g in recon.used_gpus() for pod in g.pods)
+        return frac * GPU_PRICE_PER_HOUR / 3600.0, frac
+
+    def accrue_rates(self, rates: tuple, dt: float) -> None:
+        """Integrate a pre-sampled (usd/s, gpu-fraction) rate over dt."""
+        self.total_usd += rates[0] * dt
+        self.gpu_seconds += rates[1] * dt
+
     def accrue(self, recon, dt: float) -> None:
         """Integrate cost over dt seconds given current allocations."""
-        rate = 0.0
-        if self.whole_gpu:
-            rate = len(recon.used_gpus()) * GPU_PRICE_PER_HOUR / 3600.0
-            self.gpu_seconds += len(recon.used_gpus()) * dt
-        else:
-            for g in recon.used_gpus():
-                for pod in g.pods:
-                    frac = (pod.sm / 8.0) * pod.quota
-                    rate += frac * GPU_PRICE_PER_HOUR / 3600.0
-                    self.gpu_seconds += frac * dt
-        self.total_usd += rate * dt
+        self.accrue_rates(self.rates(recon), dt)
 
     def per_1k_requests(self, completed: int) -> float:
         if completed == 0:

@@ -1,0 +1,332 @@
+"""Discrete-event engine for the cluster simulators.
+
+One `heapq` event queue drives N co-located functions against a shared
+Reconfigurator: request arrivals, batch-timeout wakeups, pod-free
+(service completion) wakeups, pod-ready (cold-start completion) wakeups,
+and per-function autoscale timers. `ClusterSimulator` (N=1) and
+`MultiFunctionSimulator` (N>1) are thin wrappers over this engine.
+
+Semantics are those of the reference tick engine
+(`core/simulator_tick.py`), continuous in time instead of quantized to a
+20 ms tick:
+
+  * pull-based dispatch — idle ready pods pull up to `batch` requests
+    from their function's FIFO, highest-throughput pods first;
+  * batch formation — a pod runs when the queue can fill its batch or
+    the head request has waited `batch_wait_s`;
+  * drop-after-aging — queued requests older than `drop_after_s` are
+    shed (and count as violations);
+  * autoscaling — every `autoscale_interval_s` the policy sees the 5 s
+    observed arrival rate plus backlog drain demand;
+  * cost — integrated exactly between events; the $/s rate only changes
+    when a policy mutates the cluster, so it is re-sampled after each
+    autoscale event rather than every tick.
+
+Invariant: between two consecutive autoscale events of a function, its
+pod set and every pod's (sm, quota) are immutable — policies are the
+only mutators and they run inside autoscale events. The engine exploits
+this by caching each function's throughput-sorted pod order, per-config
+service times (deterministic part; noise is drawn per batch), and the
+cluster cost rate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from collections import deque
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import perf_model
+from repro.core.cost import CostMeter
+from repro.core.perf_model import FnSpec
+from repro.core.reconfigurator import Reconfigurator
+from repro.core.slo import Request
+
+# Event kinds double as same-timestamp priorities, mirroring the tick
+# engine's per-tick order: arrivals, then autoscale, then execution.
+ARRIVAL, AUTOSCALE, DISPATCH = 0, 1, 2
+
+OBS_WINDOW_S = 5.0  # observed-rate sliding window (paper: short horizon)
+
+
+@dataclasses.dataclass
+class SimConfig:
+    tick_s: float = 0.02         # used by the tick reference engine only
+    autoscale_interval_s: float = 1.0
+    duration_s: float = 300.0
+    seed: int = 0
+    whole_gpu_cost: bool = False
+    batch_wait_s: float = 0.01   # max wait to fill a batch
+    drop_after_s: float = 60.0   # requests older than this count as violations
+
+
+@dataclasses.dataclass
+class PodRuntime:
+    pod_id: str
+    busy_until: float = 0.0
+    inflight: List[Request] = dataclasses.field(default_factory=list)
+    wake_scheduled: bool = False  # cold-start wakeup already queued
+
+
+@dataclasses.dataclass
+class FunctionState:
+    """Per-function simulation state threaded through the event engine."""
+    spec: FnSpec
+    policy: object
+    arrivals: np.ndarray
+    queue: deque = dataclasses.field(default_factory=deque)
+    runtimes: Dict[str, PodRuntime] = dataclasses.field(default_factory=dict)
+    completed: List[Request] = dataclasses.field(default_factory=list)
+    timeline: list = dataclasses.field(default_factory=list)
+    dropped: int = 0
+    next_arrival: int = 0
+    timeout_at: float = -np.inf   # latest batch-timeout wakeup scheduled
+    pod_order: List = dataclasses.field(default_factory=list)
+    # True unless the last full pod scan proved every pod busy/cold-starting
+    # (then arrivals can be enqueued without rescanning)
+    maybe_idle: bool = True
+    fid: str = ""
+
+    def __post_init__(self):
+        self.arrivals = np.asarray(self.arrivals, dtype=float)
+        self.fid = self.spec.fn_id
+        self._arr = self.arrivals.tolist()  # plain floats for the hot loop
+
+    @property
+    def fn_id(self) -> str:
+        return self.fid
+
+    def observed_in_window(self, t: float) -> int:
+        """Arrivals in [t - OBS_WINDOW_S, t] — the sliding-window count
+        the tick engine kept in a deque, read off the sorted trace."""
+        lo = np.searchsorted(self.arrivals, t - OBS_WINDOW_S, side="left")
+        hi = np.searchsorted(self.arrivals, t, side="right")
+        return int(hi - lo)
+
+    def work_left(self, now: float) -> bool:
+        if self.queue or self.next_arrival < len(self._arr):
+            return True
+        # a finished-but-undelivered batch (busy_until <= now, delivery is
+        # lazy) is not pending work — only still-running batches count
+        return any(rt.inflight and rt.busy_until > now
+                   for rt in self.runtimes.values())
+
+
+class EventEngine:
+    """Shared discrete-event core for single- and multi-function runs."""
+
+    def __init__(self, recon: Reconfigurator, cfg: SimConfig,
+                 fns: List[FunctionState], cost: Optional[CostMeter] = None,
+                 rng: Optional[np.random.Generator] = None,
+                 track_peak: bool = False):
+        self.recon = recon
+        self.cfg = cfg
+        self.fns: Dict[str, FunctionState] = {st.fid: st for st in fns}
+        self.cost = cost or CostMeter(whole_gpu=cfg.whole_gpu_cost)
+        self.rng = rng or np.random.default_rng(cfg.seed)
+        self.track_peak = track_peak
+        self.peak_gpus = 0
+        self.now = 0.0
+        self._heap: list = []
+        self._seq = itertools.count()
+        self._thpt_cache: Dict[tuple, float] = {}
+        self._service_cache: Dict[tuple, float] = {}
+        self._cost_rates = self.cost.rates(recon)
+
+    # ---- event queue -------------------------------------------------------
+    def _push(self, t: float, kind: int, st: FunctionState) -> None:
+        heapq.heappush(self._heap, (t, kind, next(self._seq), st))
+
+    # ---- helpers -----------------------------------------------------------
+    def _thpt(self, st: FunctionState, pod) -> float:
+        key = (st.fid, pod.batch, pod.sm, pod.quota)
+        v = self._thpt_cache.get(key)
+        if v is None:
+            v = perf_model.throughput(st.spec, pod.batch, pod.sm, pod.quota)
+            self._thpt_cache[key] = v
+        return v
+
+    def _service(self, st: FunctionState, batch: int, pod) -> float:
+        """One batch's service time: cached deterministic wall-clock for
+        (fn, batch, sm, quota) times a fresh lognormal noise draw."""
+        key = (st.fid, batch, pod.sm, pod.quota)
+        det = self._service_cache.get(key)
+        if det is None:
+            det = perf_model.latency(st.spec, batch, pod.sm, pod.quota,
+                                     window_ms=self.recon.window_ms)
+            self._service_cache[key] = det
+        return det * float(self.rng.lognormal(
+            mean=0.0, sigma=perf_model.SERVICE_NOISE_SIGMA))
+
+    def _refresh_pods(self, st: FunctionState) -> None:
+        """Re-read the function's pod set after its policy may have
+        mutated the cluster; flush runtimes of removed pods."""
+        pods = self.recon.pods_of(st.fid)
+        alive = {p.pod_id for p in pods}
+        for pid in list(st.runtimes):
+            if pid not in alive:
+                rt = st.runtimes.pop(pid)
+                for r in rt.inflight:  # inflight on a removed pod completes
+                    r.completion = rt.busy_until
+                st.completed.extend(rt.inflight)
+        st.pod_order = sorted(pods, key=lambda p: -self._thpt(st, p))
+        st.maybe_idle = True
+
+    def _shed(self, t: float, st: FunctionState) -> None:
+        q = st.queue
+        drop_after = self.cfg.drop_after_s
+        while q and t - q[0].arrival > drop_after:
+            q.popleft()
+            st.dropped += 1
+
+    def _any_work_left(self, now: float) -> bool:
+        return any(st.work_left(now) for st in self.fns.values())
+
+    # ---- event handlers ----------------------------------------------------
+    def _on_arrival(self, t: float, st: FunctionState) -> None:
+        arr = st._arr
+        i, n = st.next_arrival, len(arr)
+        q = st.queue
+        fid = st.fid
+        while i < n and arr[i] <= t:
+            q.append(Request(fid, arr[i]))
+            i += 1
+        st.next_arrival = i
+        if i < n:
+            self._push(arr[i], ARRIVAL, st)
+        # if the last scan proved every pod busy (or cold-starting), the
+        # new request cannot be dispatched before the next pod-free /
+        # pod-ready / autoscale event re-scans — skip the pod loop
+        if st.maybe_idle:
+            self._dispatch(t, st)
+
+    def _on_autoscale(self, t: float, st: FunctionState) -> None:
+        cfg = self.cfg
+        self._shed(t, st)
+        observed = (st.observed_in_window(t)
+                    / max(min(t, OBS_WINDOW_S), 1e-9) if t > 0 else 0.0)
+        observed += len(st.queue) / OBS_WINDOW_S  # backlog drain demand
+        st.policy.tick(t, st.spec, observed)
+        self._refresh_pods(st)
+        self._cost_rates = self.cost.rates(self.recon)
+        st.timeline.append(
+            (t, observed, len(st.pod_order),
+             sum((p.sm / 8.0) * p.quota for p in st.pod_order)))
+        if self.track_peak:
+            self.peak_gpus = max(self.peak_gpus,
+                                 len(self.recon.used_gpus()))
+        nxt = t + cfg.autoscale_interval_s
+        if nxt <= cfg.duration_s or self._any_work_left(t):
+            self._push(nxt, AUTOSCALE, st)
+        self._dispatch(t, st)
+
+    def _dispatch(self, t: float, st: FunctionState) -> None:
+        """Idle ready pods pull batches, highest-throughput first.
+
+        Completion delivery is lazy: a finished batch's completion times
+        were fixed when it started (``busy_until``), so handing it to
+        ``completed`` can wait until its pod next pulls (or the final
+        flush) without observable difference.
+        """
+        cfg = self.cfg
+        self._shed(t, st)
+        q = st.queue
+        runtimes = st.runtimes
+        any_idle = False
+        for pod in st.pod_order:
+            rt = runtimes.get(pod.pod_id)
+            if rt is None:
+                rt = runtimes[pod.pod_id] = PodRuntime(pod.pod_id)
+            if rt.busy_until > t:
+                continue
+            if rt.inflight:
+                for r in rt.inflight:
+                    r.completion = rt.busy_until
+                st.completed.extend(rt.inflight)
+                rt.inflight = []
+            if not q:
+                any_idle = True  # free pod waiting for work
+                break
+            if pod.ready_at > t:  # cold-starting; wake when ready
+                if not rt.wake_scheduled:
+                    rt.wake_scheduled = True
+                    self._push(pod.ready_at, DISPATCH, st)
+                continue
+            if len(q) < pod.batch:
+                # compare against the absolute deadline (the same float
+                # the wakeup is scheduled at) so the timeout event is
+                # never judged "not yet due" by rounding
+                tmo = q[0].arrival + cfg.batch_wait_s
+                if tmo - t > 1e-9:
+                    if tmo > st.timeout_at:  # head timeouts are monotone
+                        st.timeout_at = tmo
+                        self._push(tmo, DISPATCH, st)
+                    any_idle = True  # idle, waiting to fill its batch
+                    continue
+            take = min(pod.batch, len(q))
+            batch = [q.popleft() for _ in range(take)]
+            service = self._service(st, take, pod)
+            for r in batch:
+                r.start = t
+            rt.busy_until = t + service
+            rt.inflight = batch
+            self._push(rt.busy_until, DISPATCH, st)
+        st.maybe_idle = any_idle
+
+    # ---- main loop ---------------------------------------------------------
+    def run(self) -> None:
+        cfg = self.cfg
+        cutoff = cfg.duration_s + cfg.drop_after_s
+        for st in self.fns.values():
+            self._refresh_pods(st)
+            if st._arr:
+                self._push(st._arr[0], ARRIVAL, st)
+            self._push(0.0, AUTOSCALE, st)
+        self._cost_rates = self.cost.rates(self.recon)
+        usd_rate, gsec_rate = self._cost_rates
+        usd = gsec = 0.0
+        last_t = 0.0
+        heap = self._heap
+        pop = heapq.heappop
+        while heap:
+            t, kind, _, st = pop(heap)
+            if t > cutoff:
+                # anything still queued has, by construction, aged out
+                usd += usd_rate * (cutoff - last_t)
+                gsec += gsec_rate * (cutoff - last_t)
+                last_t = cutoff
+                break
+            if t > last_t:
+                usd += usd_rate * (t - last_t)
+                gsec += gsec_rate * (t - last_t)
+                last_t = t
+            self.now = t
+            if kind == ARRIVAL:
+                self._on_arrival(t, st)
+            elif kind == AUTOSCALE:
+                self._on_autoscale(t, st)
+                usd_rate, gsec_rate = self._cost_rates
+            else:
+                self._dispatch(t, st)
+        if last_t < cfg.duration_s:  # idle pods accrue cost to end of run
+            usd += usd_rate * (cfg.duration_s - last_t)
+            gsec += gsec_rate * (cfg.duration_s - last_t)
+        self.cost.total_usd += usd
+        self.cost.gpu_seconds += gsec
+        self._flush()
+
+    def _flush(self) -> None:
+        for st in self.fns.values():
+            for rt in st.runtimes.values():
+                for r in rt.inflight:
+                    r.completion = rt.busy_until
+                    st.completed.append(r)
+                rt.inflight = []
+            st.dropped += len(st.queue)
+            st.queue.clear()
+            # arrivals never injected (cutoff break) are dropped too
+            st.dropped += len(st._arr) - st.next_arrival
+            st.next_arrival = len(st._arr)

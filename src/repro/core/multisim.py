@@ -1,9 +1,10 @@
 """Multi-function co-located simulation (paper §4: the MLPerf-derived
 function benchmark runs simultaneously on one 10-GPU cluster).
 
-Steps N per-function simulators over a shared clock, a shared
-Reconfigurator (so functions compete for chips and pack under SM
-alignment / HGO placement), and a single cluster-level cost meter.
+Runs N functions through the shared discrete-event engine
+(``core/events.py``) against one Reconfigurator — so functions compete
+for chips and pack under SM alignment / HGO placement — with a single
+cluster-level cost meter integrated between events.
 """
 from __future__ import annotations
 
@@ -13,10 +14,10 @@ from typing import Dict, List
 import numpy as np
 
 from repro.core.cost import CostMeter
+from repro.core.events import EventEngine, FunctionState, SimConfig
 from repro.core.perf_model import FnSpec
 from repro.core.reconfigurator import Reconfigurator
-from repro.core.simulator import ClusterSimulator, SimConfig, SimResult
-from repro.core.slo import Request, percentiles
+from repro.core.simulator import SimResult, result_from_state
 
 
 @dataclasses.dataclass
@@ -36,70 +37,27 @@ class MultiFunctionSimulator:
         self.cfg = cfg
         self.recon = recon
         self.cost = CostMeter(whole_gpu=cfg.whole_gpu_cost)
-        self.sims = {}
-        for spec in specs:
-            sub = ClusterSimulator(spec, policies[spec.fn_id], recon,
-                                   arrivals[spec.fn_id], cfg)
-            sub.cost = CostMeter(whole_gpu=cfg.whole_gpu_cost)  # unused
-            self.sims[spec.fn_id] = sub
-        self.peak_gpus = 0
+        self.states = [FunctionState(spec, policies[spec.fn_id],
+                                     arrivals[spec.fn_id])
+                       for spec in specs]
+        self.engine = EventEngine(recon, cfg, self.states, cost=self.cost,
+                                  rng=np.random.default_rng(cfg.seed),
+                                  track_peak=True)
+
+    @property
+    def peak_gpus(self) -> int:
+        return self.engine.peak_gpus
 
     def run(self) -> MultiSimResult:
-        cfg = self.cfg
-        t = 0.0
-        idx = {f: 0 for f in self.sims}
-        last_scale = {f: -1e9 for f in self.sims}
-        window = {f: [] for f in self.sims}
-        while t < cfg.duration_s + cfg.drop_after_s:
-            alive = t < cfg.duration_s or any(
-                idx[f] < len(s.arrivals) or s._work_left()
-                for f, s in self.sims.items())
-            if not alive:
-                break
-            for fid, sim in self.sims.items():
-                n = len(sim.arrivals)
-                while idx[fid] < n and sim.arrivals[idx[fid]] <= t:
-                    req = Request(fid, float(sim.arrivals[idx[fid]]))
-                    window[fid].append(req.arrival)
-                    sim.queue.append(req)
-                    idx[fid] += 1
-                while sim.queue and t - sim.queue[0].arrival > cfg.drop_after_s:
-                    sim.queue.popleft()
-                    sim.dropped += 1
-                if t - last_scale[fid] >= cfg.autoscale_interval_s:
-                    window[fid] = [a for a in window[fid] if a >= t - 5.0]
-                    obs = len(window[fid]) / max(min(t, 5.0), 1e-9) \
-                        if t > 0 else 0.0
-                    obs += len(sim.queue) / 5.0
-                    sim.policy.tick(t, sim.spec, obs)
-                    last_scale[fid] = t
-                sim._execute(t)
-            self.cost.accrue(self.recon, cfg.tick_s)
-            self.peak_gpus = max(self.peak_gpus, len(self.recon.used_gpus()))
-            t += cfg.tick_s
-
+        self.engine.run()
         per_fn = {}
         total_completed = 0
-        for fid, sim in self.sims.items():
-            for rt in sim.runtimes.values():
-                for r in rt.inflight:
-                    r.completion = rt.busy_until
-                    sim.completed.append(r)
-                rt.inflight = []
-            sim.dropped += len(sim.queue)
-            sim.queue.clear()
-            lats = np.array([r.latency for r in sim.completed
-                             if r.latency is not None])
-            from repro.core import perf_model
-            base = perf_model.slo_baseline(sim.spec, 8)
-            per_fn[fid] = SimResult(
-                latencies=lats, n_arrived=len(sim.arrivals),
-                n_completed=len(lats), n_dropped=sim.dropped,
-                cost_usd=0.0, cost_per_1k=0.0, baseline_s=base,
-                pcts=percentiles(lats), pod_seconds=0.0, timeline=[])
-            total_completed += len(lats)
+        zero_cost = CostMeter()  # per-fn cost is cluster-level, not split
+        for st in self.states:
+            per_fn[st.fn_id] = result_from_state(st, zero_cost)
+            total_completed += per_fn[st.fn_id].n_completed
         return MultiSimResult(
             per_fn=per_fn, cluster_cost_usd=self.cost.total_usd,
             cluster_cost_per_1k=(self.cost.total_usd / total_completed * 1e3
                                  if total_completed else float("inf")),
-            peak_gpus=self.peak_gpus)
+            peak_gpus=self.engine.peak_gpus)

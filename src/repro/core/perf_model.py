@@ -18,6 +18,7 @@ as the paper's RaPP sees TVM IR features of models profiled on hardware.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Optional
 
@@ -30,6 +31,7 @@ from repro.core.vgpu import TOTAL_SLICES, DEFAULT_WINDOW_MS
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 SEQ_PER_REQUEST = 128  # tokens processed per inference request
+SERVICE_NOISE_SIGMA = 0.03  # lognormal jitter on simulated service times
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,6 +45,7 @@ class FnSpec:
         return f"fn-{self.arch.name}"
 
 
+@functools.lru_cache(maxsize=None)
 def fn_flops(spec: FnSpec, batch: int) -> float:
     """Forward-pass FLOPs for one batched inference."""
     cfg = spec.arch
@@ -57,6 +60,7 @@ def fn_flops(spec: FnSpec, batch: int) -> float:
     return core
 
 
+@functools.lru_cache(maxsize=None)
 def fn_bytes(spec: FnSpec, batch: int) -> float:
     """HBM traffic for one batched inference (weights + activations)."""
     cfg = spec.arch
@@ -75,8 +79,14 @@ def mxu_efficiency(batch: int, sm: int) -> float:
     return batch / (batch + b_half)
 
 
+@functools.lru_cache(maxsize=None)
 def exec_time(spec: FnSpec, batch: int, sm: int) -> float:
-    """Seconds of *owned* accelerator time for one inference at full quota."""
+    """Seconds of *owned* accelerator time for one inference at full quota.
+
+    Memoized: (spec, batch, sm) fully determines the value, specs are
+    frozen dataclasses, and the simulators' hot paths (dispatch ordering,
+    the autoscaler's (batch, sm, quota) grid searches) hit the same keys
+    millions of times per run."""
     frac = sm / TOTAL_SLICES
     compute = fn_flops(spec, batch) / (frac * PEAK_FLOPS
                                        * mxu_efficiency(batch, sm))
@@ -104,7 +114,7 @@ def latency(spec: FnSpec, batch: int, sm: int, quota: float,
         rem = t - full_windows * owned_per_window
         wall = full_windows * w + rem
     if rng is not None:
-        wall *= float(rng.lognormal(mean=0.0, sigma=0.03))
+        wall *= float(rng.lognormal(mean=0.0, sigma=SERVICE_NOISE_SIGMA))
     return wall
 
 

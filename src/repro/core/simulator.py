@@ -1,4 +1,4 @@
-"""Discrete-event cluster simulator for serverless inference auto-scaling.
+"""Single-function cluster simulator for serverless inference auto-scaling.
 
 Physics: request arrivals (workload trace) -> gateway load balancer
 (throughput-weighted, paper §3) -> per-pod queues -> window-quantized
@@ -8,39 +8,32 @@ scheduler's observable behavior, perf_model.latency) -> completion records.
 The auto-scaling policy (HAS hybrid / KServe-like / FaST-GShare-like) runs
 every ``autoscale_interval_s`` on the observed request rate, mutating the
 same Reconfigurator cluster state. Cost and SLO metrics integrate over the
-run. Pure Python/numpy — fast enough for hundreds of simulated minutes.
+run.
+
+Since PR 1 this is a thin wrapper over the discrete-event engine in
+``core/events.py`` (heap-scheduled arrivals / batch timeouts / pod-free /
+autoscale-timer events) — orders of magnitude faster than scanning a
+20 ms tick over the trace. The original tick engine survives as
+``core/simulator_tick.py`` and the parity test
+(``tests/test_event_parity.py``) pins the two engines together.
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List
 
 import numpy as np
 
 from repro.core import perf_model
 from repro.core.cost import CostMeter
+from repro.core.events import (EventEngine, FunctionState, PodRuntime,
+                               SimConfig)
 from repro.core.perf_model import FnSpec
 from repro.core.reconfigurator import Reconfigurator
 from repro.core.slo import Request, percentiles, violation_rates
 
-
-@dataclasses.dataclass
-class SimConfig:
-    tick_s: float = 0.02
-    autoscale_interval_s: float = 1.0
-    duration_s: float = 300.0
-    seed: int = 0
-    whole_gpu_cost: bool = False
-    batch_wait_s: float = 0.01   # max wait to fill a batch
-    drop_after_s: float = 60.0   # requests older than this count as violations
-
-
-@dataclasses.dataclass
-class PodRuntime:
-    pod_id: str
-    busy_until: float = 0.0
-    inflight: List[Request] = dataclasses.field(default_factory=list)
+__all__ = ["ClusterSimulator", "PodRuntime", "SimConfig", "SimResult",
+           "result_from_state"]
 
 
 @dataclasses.dataclass
@@ -64,6 +57,25 @@ class SimResult:
                                self.baseline_s, multipliers)
 
 
+def _baseline_batch(policy) -> int:
+    cfg = getattr(policy, "cfg", None)
+    return cfg.default_batch if hasattr(cfg, "default_batch") else 8
+
+
+def result_from_state(st: FunctionState, cost: CostMeter,
+                      baseline_batch: int = 8) -> SimResult:
+    """Fold a drained FunctionState into the stable SimResult API."""
+    lats = np.array([r.latency for r in st.completed
+                     if r.latency is not None])
+    base = perf_model.slo_baseline(st.spec, baseline_batch)
+    return SimResult(
+        latencies=lats, n_arrived=len(st.arrivals), n_completed=len(lats),
+        n_dropped=st.dropped, cost_usd=cost.total_usd,
+        cost_per_1k=cost.per_1k_requests(len(lats)),
+        baseline_s=base, pcts=percentiles(lats),
+        pod_seconds=cost.gpu_seconds, timeline=st.timeline)
+
+
 class ClusterSimulator:
     def __init__(self, spec: FnSpec, policy, recon: Reconfigurator,
                  arrivals: np.ndarray, cfg: SimConfig = SimConfig()):
@@ -73,116 +85,33 @@ class ClusterSimulator:
         self.recon = recon
         self.arrivals = arrivals
         self.cfg = cfg
-        self.rng = np.random.default_rng(cfg.seed)
-        self.runtimes: Dict[str, PodRuntime] = {}
-        self.queue: deque = deque()  # shared per-function FIFO (pull model)
-        self.completed: List[Request] = []
-        self.dropped = 0
         self.cost = CostMeter(whole_gpu=cfg.whole_gpu_cost)
-        self.timeline: list = []
+        self.state = FunctionState(spec, policy, arrivals)
+        self.engine = EventEngine(recon, cfg, [self.state], cost=self.cost,
+                                  rng=np.random.default_rng(cfg.seed))
 
-    # ---- execution ----------------------------------------------------------
-    # Pull-based dispatch (OpenFaaS queue-worker semantics): idle ready pods
-    # pull up to `batch` requests from the shared function queue; the
-    # highest-capacity pods pull first (the gateway's throughput-weighted
-    # distribution emerges from pull order + service rates).
-    def _execute(self, now: float):
-        pods = {p.pod_id: p for p in self.recon.pods_of(self.spec.fn_id)}
-        for pid in list(self.runtimes):
-            if pid not in pods:
-                rt = self.runtimes.pop(pid)
-                for r in rt.inflight:  # inflight on a removed pod completes
-                    r.completion = rt.busy_until
-                    self.completed.append(r)
-        order = sorted(
-            pods.values(),
-            key=lambda p: -perf_model.throughput(self.spec, p.batch, p.sm,
-                                                 p.quota))
-        for pod in order:
-            rt = self.runtimes.setdefault(pod.pod_id, PodRuntime(pod.pod_id))
-            if rt.busy_until > now:
-                continue
-            if rt.inflight:
-                for r in rt.inflight:
-                    r.completion = rt.busy_until
-                self.completed.extend(rt.inflight)
-                rt.inflight = []
-            if not self.queue or pod.ready_at > now:
-                continue
-            # batch formation: run when full or the head waited long enough
-            if (len(self.queue) < pod.batch
-                    and now - self.queue[0].arrival < self.cfg.batch_wait_s):
-                continue
-            take = min(pod.batch, len(self.queue))
-            batch = [self.queue.popleft() for _ in range(take)]
-            service = perf_model.latency(self.spec, take, pod.sm, pod.quota,
-                                         window_ms=self.recon.window_ms,
-                                         rng=self.rng)
-            for r in batch:
-                r.start = now
-            rt.busy_until = now + service
-            rt.inflight = batch
+    # introspection used by tests/tools; delegates to the engine state
+    @property
+    def queue(self):
+        return self.state.queue
 
-    # ---- main loop ------------------------------------------------------------
+    @property
+    def completed(self) -> List[Request]:
+        return self.state.completed
+
+    @property
+    def dropped(self) -> int:
+        return self.state.dropped
+
+    @property
+    def runtimes(self) -> Dict[str, PodRuntime]:
+        return self.state.runtimes
+
+    @property
+    def timeline(self) -> list:
+        return self.state.timeline
+
     def run(self) -> SimResult:
-        cfg = self.cfg
-        t, ai = 0.0, 0
-        n = len(self.arrivals)
-        last_scale = -1e9
-        window_arrivals = deque()
-        while t < cfg.duration_s or ai < n or self._work_left():
-            if t > cfg.duration_s + cfg.drop_after_s:
-                break
-            # arrivals
-            while ai < n and self.arrivals[ai] <= t:
-                req = Request(self.spec.fn_id, float(self.arrivals[ai]))
-                window_arrivals.append(req.arrival)
-                self.queue.append(req)
-                ai += 1
-            # shed requests that aged out in queue
-            while self.queue and t - self.queue[0].arrival > cfg.drop_after_s:
-                self.queue.popleft()
-                self.dropped += 1
-            # autoscaler: observed load = arrival rate + backlog drain demand
-            # (queued work is gateway-visible and must be scheduled too)
-            if t - last_scale >= cfg.autoscale_interval_s:
-                while window_arrivals and window_arrivals[0] < t - 5.0:
-                    window_arrivals.popleft()
-                observed = len(window_arrivals) / max(min(t, 5.0), 1e-9) \
-                    if t > 0 else 0.0
-                observed += len(self.queue) / 5.0
-                self.policy.tick(t, self.spec, observed)
-                last_scale = t
-                self.timeline.append(
-                    (t, observed, len(self.recon.pods_of(self.spec.fn_id)),
-                     sum((p.sm / 8.0) * p.quota
-                         for p in self.recon.pods_of(self.spec.fn_id))))
-            # execution + cost
-            self._execute(t)
-            self.cost.accrue(self.recon, cfg.tick_s)
-            t += cfg.tick_s
-
-        # flush remaining inflight
-        for rt in self.runtimes.values():
-            for r in rt.inflight:
-                r.completion = rt.busy_until
-                self.completed.append(r)
-        self.dropped += len(self.queue)
-
-        lats = np.array([r.latency for r in self.completed
-                         if r.latency is not None])
-        base = perf_model.slo_baseline(
-            self.spec, getattr(self.policy, "cfg", None).default_batch
-            if hasattr(getattr(self.policy, "cfg", None), "default_batch")
-            else 8)
-        return SimResult(
-            latencies=lats, n_arrived=n, n_completed=len(lats),
-            n_dropped=self.dropped, cost_usd=self.cost.total_usd,
-            cost_per_1k=self.cost.per_1k_requests(len(lats)),
-            baseline_s=base, pcts=percentiles(lats),
-            pod_seconds=self.cost.gpu_seconds, timeline=self.timeline)
-
-    def _work_left(self) -> bool:
-        if self.queue:
-            return True
-        return any(r.inflight for r in self.runtimes.values())
+        self.engine.run()
+        return result_from_state(self.state, self.cost,
+                                 _baseline_batch(self.policy))

@@ -7,7 +7,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class Request:
     fn_id: str
     arrival: float

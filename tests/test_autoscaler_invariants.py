@@ -1,0 +1,89 @@
+"""Hypothesis-free invariant tests for HybridAutoScaler (Algorithm 1).
+
+These mirror the property-based suite in test_core_properties.py but run
+on fixed seeded scenarios, so they execute even when the optional
+`hypothesis` dependency is absent.
+
+Invariants:
+  * retained capacity never scaled below r_min;
+  * every pod's quota stays in [min_quota, 1];
+  * scale-downs respect the cooldown;
+  * at least one pod survives any scale-down sequence (no scale-to-zero).
+"""
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.core import FnSpec, HybridAutoScaler, Reconfigurator
+
+SPEC = FnSpec(ARCHS["olmo-1b"])
+
+
+def _demand_sequence(seed: int, n: int = 120):
+    """A bursty, collapsing demand trace exercising both scale directions."""
+    rng = np.random.default_rng(seed)
+    level = 40.0
+    out = []
+    for i in range(n):
+        if rng.uniform() < 0.08:
+            level = rng.uniform(0.0, 300.0)  # regime switch
+        out.append(max(0.0, level + rng.normal(0.0, 5.0)))
+    return out
+
+
+def _drive(seed: int):
+    """Run the scaler over a demand sequence at 1 s ticks, recording the
+    cluster state after every step."""
+    recon = Reconfigurator(num_gpus=0, max_gpus=64)
+    scaler = HybridAutoScaler(recon)
+    history = []
+    for i, rps in enumerate(_demand_sequence(seed)):
+        now = float(i)
+        actions = scaler.scale(now, SPEC, rps)
+        pods = recon.pods_of(SPEC.fn_id)
+        history.append((now, rps, actions, list(pods),
+                        scaler.capacity(SPEC)))
+        assert recon.invariant_ok()
+    return recon, scaler, history
+
+
+def test_capacity_never_below_r_min():
+    for seed in (0, 1, 2):
+        _, scaler, history = _drive(seed)
+        r_min = scaler.cfg.r_min
+        for now, rps, actions, pods, cap in history:
+            assert cap >= r_min - 1e-6, (now, rps, cap)
+
+
+def test_pod_quotas_within_bounds():
+    for seed in (0, 1, 2):
+        _, scaler, history = _drive(seed)
+        lo = scaler.cfg.min_quota
+        for now, _, _, pods, _ in history:
+            for p in pods:
+                assert lo - 1e-9 <= p.quota <= 1.0 + 1e-9, (now, p.quota)
+
+
+def test_scale_downs_respect_cooldown():
+    for seed in (0, 1, 2):
+        _, scaler, history = _drive(seed)
+        cooldown = scaler.cfg.cooldown_s
+        down_times = [now for now, _, actions, _, _ in history
+                      if any(a.kind in ("vdown", "hdown") for a in actions)]
+        for a, b in zip(down_times, down_times[1:]):
+            assert b - a >= cooldown - 1e-9, (a, b)
+
+
+def test_at_least_one_pod_survives_collapse():
+    recon = Reconfigurator(num_gpus=0, max_gpus=64)
+    scaler = HybridAutoScaler(recon)
+    # scale up hard, then collapse demand to zero for a long time
+    for i in range(5):
+        scaler.scale(float(i), SPEC, 250.0)
+    assert len(recon.pods_of(SPEC.fn_id)) >= 1
+    t = 100.0
+    for i in range(30):  # every step beyond the cooldown
+        scaler.scale(t + i * (scaler.cfg.cooldown_s + 1.0), SPEC, 0.0)
+        assert len(recon.pods_of(SPEC.fn_id)) >= 1
+        assert recon.invariant_ok()
+    # fully collapsed yet still serving floor capacity
+    assert scaler.capacity(SPEC) >= scaler.cfg.r_min - 1e-6

@@ -1,7 +1,15 @@
-"""Property-based tests (hypothesis) for the HAS-GPU core invariants."""
+"""Property-based tests (hypothesis) for the HAS-GPU core invariants.
+
+hypothesis is an optional dev dependency (requirements-dev.txt); without
+it this module skips instead of failing the whole suite at collection.
+Hypothesis-free versions of the autoscaler invariants live in
+tests/test_autoscaler_invariants.py and always run.
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs import ARCHS
 from repro.core import (FnSpec, HybridAutoScaler, KalmanPredictor, PodAlloc,

@@ -1,0 +1,143 @@
+"""Tick-vs-event engine parity: both engines run the same seeded trace
+and must agree on conservation, completion counts, and latency/cost
+metrics (within the tolerance the tick quantization itself introduces).
+
+The tick engine (core/simulator_tick.py) quantizes dispatch to 20 ms
+tick boundaries, so its latencies sit up to ~2 ticks above the event
+engine's continuous-time values; cost integrates identically up to one
+tick per allocation change.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import (ClusterSimulator, FaSTGShareLikePolicy, FnSpec,
+                        HybridAutoScaler, KServeLikePolicy, Reconfigurator,
+                        SimConfig, TickClusterSimulator)
+from repro.core.vgpu import PodAlloc
+from repro.workloads import TraceConfig, arrivals
+
+SPEC = FnSpec(ARCHS["olmo-1b"])
+DURATION = 30.0
+BASE_RPS = 15.0
+TICK_S = 0.02
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return arrivals(TraceConfig(duration_s=DURATION, base_rps=BASE_RPS,
+                                seed=11))
+
+
+def _run(engine_cls, policy_name, trace):
+    recon = Reconfigurator(num_gpus=0, max_gpus=32)
+    pol = {"has": HybridAutoScaler, "kserve": KServeLikePolicy,
+           "fast": FaSTGShareLikePolicy}[policy_name](recon)
+    pol.prewarm(SPEC, BASE_RPS)
+    sim = engine_cls(SPEC, pol, recon, trace,
+                     SimConfig(duration_s=DURATION,
+                               whole_gpu_cost=policy_name == "kserve"))
+    return sim.run()
+
+
+class StaticPolicy:
+    """No-op policy: isolates engine mechanics from control-loop feedback."""
+
+    def tick(self, now, spec, observed_rps):
+        return []
+
+
+def _run_static(engine_cls, trace):
+    recon = Reconfigurator(num_gpus=0, max_gpus=8)
+    for _ in range(3):
+        recon.place_pod(PodAlloc(fn_id=SPEC.fn_id, sm=4, quota=0.5, batch=8),
+                        None, now=0.0, cold_start_s=0.0)
+    sim = engine_cls(SPEC, StaticPolicy(), recon, trace,
+                     SimConfig(duration_s=DURATION))
+    return sim.run()
+
+
+def test_static_cluster_parity(trace):
+    """With a fixed pod set (no autoscaler feedback) the engines must
+    agree tightly: same completions, same drops, cost within the
+    one-tick integration error, latencies within tick quantization."""
+    tick = _run_static(TickClusterSimulator, trace)
+    ev = _run_static(ClusterSimulator, trace)
+    for res in (tick, ev):
+        assert res.n_arrived == res.n_completed + res.n_dropped
+    assert ev.n_arrived == tick.n_arrived
+    assert ev.n_completed == tick.n_completed
+    assert ev.n_dropped == tick.n_dropped
+    # cost: identical allocation held for the same horizon
+    assert ev.cost_usd == pytest.approx(tick.cost_usd, rel=0.05)
+    assert ev.pod_seconds == pytest.approx(tick.pod_seconds, rel=0.05)
+    # the tick engine delays each dispatch by up to ~2 ticks, never less
+    for p in ("p50", "p99"):
+        assert abs(ev.pcts[p] - tick.pcts[p]) <= 3 * TICK_S, p
+
+
+@pytest.mark.parametrize("policy", ["has", "kserve", "fast"])
+def test_policy_driven_parity(policy, trace):
+    """Full control loop: conservation holds exactly; completions match;
+    p50/p99 and cost agree within the feedback-amplified tolerance."""
+    tick = _run(TickClusterSimulator, policy, trace)
+    ev = _run(ClusterSimulator, policy, trace)
+    for res in (tick, ev):
+        assert res.n_arrived == res.n_completed + res.n_dropped
+        assert res.n_arrived == len(trace)
+    assert ev.n_completed == tick.n_completed
+    assert ev.n_dropped == tick.n_dropped
+    assert ev.cost_usd == pytest.approx(tick.cost_usd, rel=0.25)
+    assert abs(ev.pcts["p50"] - tick.pcts["p50"]) \
+        <= max(3 * TICK_S, 0.5 * tick.pcts["p50"])
+    assert abs(ev.pcts["p99"] - tick.pcts["p99"]) \
+        <= max(5 * TICK_S, 0.5 * tick.pcts["p99"])
+
+
+def test_tick_converges_to_event():
+    """The event engine is the tick_s -> 0 limit of the tick engine: a
+    finer tick must move the tick engine's violation rates toward (and
+    near) the event engine's, showing the residual gap at 20 ms is
+    quantization bias, not an engine discrepancy."""
+    mult = 2.0
+    trace_ = arrivals(TraceConfig(duration_s=DURATION, base_rps=BASE_RPS,
+                                  seed=11))
+
+    def run_tick(tick_s):
+        recon = Reconfigurator(num_gpus=0, max_gpus=32)
+        pol = HybridAutoScaler(recon)
+        pol.prewarm(SPEC, BASE_RPS)
+        sim = TickClusterSimulator(SPEC, pol, recon, trace_,
+                                   SimConfig(duration_s=DURATION,
+                                             tick_s=tick_s))
+        return sim.run().violations([mult])[mult]
+
+    ev = _run(ClusterSimulator, "has", trace_).violations([mult])[mult]
+    coarse = run_tick(0.02)
+    fine = run_tick(0.005)
+    assert abs(fine - ev) <= abs(coarse - ev) + 0.02  # converging
+    assert abs(fine - ev) <= 0.08  # and already close at 5 ms
+
+
+def test_event_engine_faster_on_long_trace():
+    """The point of the rewrite: the event engine's work scales with
+    events, not ticks. On a sparse long trace it must beat the tick
+    engine by a wide margin."""
+    import time
+    arr = arrivals(TraceConfig(duration_s=300.0, base_rps=4.0, seed=3))
+
+    def run(cls):
+        recon = Reconfigurator(num_gpus=0, max_gpus=8)
+        pol = HybridAutoScaler(recon)
+        pol.prewarm(SPEC, 4.0)
+        # CPU time, not wall clock: immune to scheduler stalls on
+        # loaded CI runners
+        t0 = time.process_time()
+        res = cls(SPEC, pol, recon, arr, SimConfig(duration_s=300.0)).run()
+        return time.process_time() - t0, res
+
+    wall_tick, res_tick = run(TickClusterSimulator)
+    wall_ev, res_ev = run(ClusterSimulator)
+    assert res_ev.n_completed == res_tick.n_completed
+    # conservative 3x floor so CI jitter can't flake this; locally ~10-30x
+    assert wall_ev * 3 < wall_tick

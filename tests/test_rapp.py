@@ -52,6 +52,7 @@ def test_predictor_forward():
     assert np.isfinite(float(out))
 
 
+@pytest.mark.slow
 def test_rapp_learns_better_than_random():
     """Tiny training run: MAPE must drop well below the untrained level."""
     from repro.core.rapp import train as T

@@ -11,8 +11,12 @@ from repro.workloads import TraceConfig, arrivals, rate_series
 
 SPEC = FnSpec(ARCHS["olmo-1b"])
 
+# short default trace keeps the fast path fast; the event engine makes
+# each run sub-second even at minutes of simulated time
+TRACE_S = 40.0
 
-def _run(policy_name, arr, duration=60.0, base=20.0):
+
+def _run(policy_name, arr, duration=TRACE_S, base=20.0):
     recon = Reconfigurator(num_gpus=0, max_gpus=32)
     pol = {"has": HybridAutoScaler, "kserve": KServeLikePolicy,
            "fast": FaSTGShareLikePolicy}[policy_name](recon)
@@ -25,7 +29,7 @@ def _run(policy_name, arr, duration=60.0, base=20.0):
 
 @pytest.fixture(scope="module")
 def trace():
-    return arrivals(TraceConfig(duration_s=60.0, base_rps=20.0, seed=7))
+    return arrivals(TraceConfig(duration_s=TRACE_S, base_rps=20.0, seed=7))
 
 
 def test_all_policies_complete_requests(trace):
