@@ -1,39 +1,54 @@
 """Ablation: Kalman-filter workload prediction vs last-value prediction
 (paper §3.3 decouples the predictor precisely so this swap is possible).
+
+Runs through the scenario engine with a custom policy factory that
+installs the alternative predictor — the registered azure scenarios and
+the unified ``RunMetrics`` record do the rest.
 """
 from __future__ import annotations
 
 import sys
 
 from repro.configs import ARCHS
-from repro.core import (ClusterSimulator, FnSpec, HybridAutoScaler,
-                        KalmanPredictor, LastValuePredictor, Reconfigurator,
-                        SimConfig)
-from repro.workloads import standard_workload, stress_workload
+from repro.core import (FnSpec, HybridAutoScaler, KalmanPredictor,
+                        LastValuePredictor)
+from repro.workloads.scenarios import get_scenario
+
+ARCH = "qwen2.5-3b"
+
+
+def _factory(predictor_cls):
+    """Policy factory installing ``predictor_cls`` as the workload
+    predictor (the decoupled swap the paper's §3.3 design allows)."""
+    fn_id = FnSpec(ARCHS[ARCH]).fn_id
+
+    def make(policy_name, recon):
+        if policy_name != "has":  # the predictor swap is HAS-specific
+            raise ValueError(f"predictor ablation only supports the 'has' "
+                             f"policy, got {policy_name!r}")
+        scaler = HybridAutoScaler(recon)
+        scaler.kalman[fn_id] = predictor_cls()
+        return scaler
+
+    return make
 
 
 def run(duration=120.0, base_rps=30.0, out=sys.stdout, seed=0):
-    spec = FnSpec(ARCHS["qwen2.5-3b"])
     print("# Kalman vs last-value predictor", file=out)
     print("workload,predictor,cost_per_1k,p95_ms,viol@2x", file=out)
     rows = {}
-    for wname, arr in [("standard", standard_workload(duration, base_rps,
-                                                      seed=seed)),
-                       ("stress", stress_workload(duration, base_rps,
-                                                  seed=seed))]:
+    for wname, scen_name in [("standard", "azure_standard"),
+                             ("stress", "azure_stress")]:
+        scen = get_scenario(scen_name).with_(archs=(ARCH,))
         for name, kls in [("kalman", KalmanPredictor),
                           ("last_value", LastValuePredictor)]:
-            recon = Reconfigurator(num_gpus=0, max_gpus=64)
-            scaler = HybridAutoScaler(recon)
-            scaler.kalman[spec.fn_id] = kls()  # decoupled predictor swap
-            scaler.prewarm(spec, base_rps)
-            res = ClusterSimulator(spec, scaler, recon, arr,
-                                   SimConfig(duration_s=duration,
-                                             seed=seed)).run()
-            v = res.violations([2.0])[2.0]
-            print(f"{wname},{name},{res.cost_per_1k:.5f},"
-                  f"{res.pcts['p95']*1e3:.1f},{v:.4f}", file=out)
-            rows[(wname, name)] = (res.cost_per_1k, v)
+            m = scen.run(policy="has", seed=seed, duration_s=duration,
+                         base_rps=base_rps,
+                         policy_factory=_factory(kls)).metrics
+            v = m.slo_violation_rate["2.0"]
+            print(f"{wname},{name},{m.cost_per_1k_usd:.5f},"
+                  f"{m.latency_ms['p95']:.1f},{v:.4f}", file=out)
+            rows[(wname, name)] = (m.cost_per_1k_usd, v)
     derived = (f"std:kalman_cost={rows[('standard','kalman')][0]:.4f}"
                f"_vs_lv={rows[('standard','last_value')][0]:.4f};"
                f"stress:kalman_viol={rows[('stress','kalman')][1]:.3f}"

@@ -4,35 +4,44 @@ HAS-GPU vs KServe-like vs FaST-GShare-like, plus P90/P95/P99 latencies.
 Paper: HAS beats both at tight SLOs (1.5/2.0/2.5x); vs FaST-GShare the
 average reduction is 4.8x; KServe shows strong P95/P99 tail from
 whole-GPU horizontal scaling.
+
+Also the scenario CLI: ``python -m benchmarks.fig6_slo_violations
+--scenario flash_crowd`` runs any registered scenario end-to-end and
+emits its ``RunMetrics`` JSON (stdout + results/metrics/).
 """
 from __future__ import annotations
 
+import argparse
+import os
 import sys
 
 import numpy as np
 
 from repro.configs import ARCHS
-from repro.core import (ClusterSimulator, FaSTGShareLikePolicy, FnSpec,
-                        HybridAutoScaler, KServeLikePolicy, Reconfigurator,
-                        SimConfig, TickClusterSimulator)
+from repro.core import (ClusterSimulator, FnSpec, Reconfigurator, SimConfig,
+                        TickClusterSimulator)
 from repro.workloads import standard_workload
+from repro.workloads.scenarios import (POLICIES as POLICY_TABLE,
+                                       get_scenario, make_policy,
+                                       scenario_names)
 
-MULTIPLIERS = [round(1.0 + 0.25 * i, 2) for i in range(37)]
 TIGHT = (1.5, 2.0, 2.5)
-POLICIES = ("has", "kserve", "fast")
+POLICIES = tuple(POLICY_TABLE)  # has, kserve, fast — registry order
 ENGINES = {"event": ClusterSimulator, "tick": TickClusterSimulator}
+METRICS_DIR = "results/metrics"
 
 
 def simulate(arch: str, policy: str, arr, base_rps: float, duration: float,
              seed: int = 1, engine: str = "event"):
+    """Direct simulator construction — kept for the tick-parity path
+    (the tick reference engine predates the scenario registry)."""
     spec = FnSpec(ARCHS[arch])
     recon = Reconfigurator(num_gpus=0, max_gpus=64)
-    pol = {"has": HybridAutoScaler, "kserve": KServeLikePolicy,
-           "fast": FaSTGShareLikePolicy}[policy](recon)
+    pol = make_policy(policy, recon)
     pol.prewarm(spec, base_rps)
     sim = ENGINES[engine](spec, pol, recon, arr,
                           SimConfig(duration_s=duration,
-                                    whole_gpu_cost=policy == "kserve",
+                                    whole_gpu_cost=POLICY_TABLE[policy][1],
                                     seed=seed))
     return sim.run()
 
@@ -67,41 +76,80 @@ def compare_engines(archs=("olmo-1b",), duration=180.0, base_rps=25.0,
 
 
 def run(archs=("olmo-1b", "gemma-7b", "qwen2.5-3b"), duration=180.0,
-        base_rps=25.0, out=sys.stdout, seed=0):
-    results = {}
+        base_rps=25.0, out=sys.stdout, seed=0, scenario="azure_standard"):
+    scen = get_scenario(scenario)
+    metrics = {}
     for arch in archs:
-        arr = standard_workload(duration, base_rps, seed=seed)
+        per_arch = scen.with_(archs=(arch,))
         for pol in POLICIES:
-            res = simulate(arch, pol, arr, base_rps, duration)
-            results[(arch, pol)] = res
-    print("# Fig6 SLO violation rates (standard workload)", file=out)
+            metrics[(arch, pol)] = per_arch.run(
+                policy=pol, seed=seed, duration_s=duration,
+                base_rps=base_rps).metrics
+    print(f"# Fig6 SLO violation rates ({scenario} workload)", file=out)
     print("arch,policy,p90_ms,p95_ms,p99_ms," +
           ",".join(f"viol@{m}x" for m in TIGHT), file=out)
     tight_ratio = []
     for arch in archs:
         for pol in POLICIES:
-            res = results[(arch, pol)]
-            v = res.violations(MULTIPLIERS)
-            print(f"{arch},{pol},{res.pcts['p90']*1e3:.1f},"
-                  f"{res.pcts['p95']*1e3:.1f},{res.pcts['p99']*1e3:.1f},"
-                  + ",".join(f"{v[m]:.4f}" for m in TIGHT), file=out)
-        vh = results[(arch, "has")].violations(TIGHT)
-        vf = results[(arch, "fast")].violations(TIGHT)
-        for m in TIGHT:
-            if vh[m] > 0:
-                tight_ratio.append(vf[m] / vh[m])
-            elif vf[m] > 0:
+            m = metrics[(arch, pol)]
+            lat, viol = m.latency_ms, m.slo_violation_rate
+            print(f"{arch},{pol},{lat['p90']:.1f},{lat['p95']:.1f},"
+                  f"{lat['p99']:.1f},"
+                  + ",".join(f"{viol[str(x)]:.4f}" for x in TIGHT), file=out)
+        vh = metrics[(arch, "has")].slo_violation_rate
+        vf = metrics[(arch, "fast")].slo_violation_rate
+        for x in TIGHT:
+            if vh[str(x)] > 0:
+                tight_ratio.append(vf[str(x)] / vh[str(x)])
+            elif vf[str(x)] > 0:
                 tight_ratio.append(10.0)  # HAS had zero violations
     avg_reduction = float(np.mean(tight_ratio)) if tight_ratio else 1.0
     mean_lat = float(np.mean(
-        [results[(a, "has")].pcts["p50"] for a in archs])) * 1e6
+        [metrics[(a, "has")].latency_ms["p50"] for a in archs])) * 1e3
     derived = f"fast_over_has_violation_ratio={avg_reduction:.2f}x(paper:4.8x)"
-    return mean_lat, derived, results
+    return mean_lat, derived, metrics
+
+
+def run_scenario_cli(args) -> None:
+    scen = get_scenario(args.scenario)
+    policies = POLICIES if args.policy == "all" else (args.policy,)
+    os.makedirs(args.out_dir, exist_ok=True)
+    for pol in policies:
+        m = scen.run(policy=pol, seed=args.seed,
+                     duration_s=args.duration).metrics
+        path = os.path.join(args.out_dir,
+                            f"{scen.name}__{pol}__seed{args.seed}.json")
+        with open(path, "w") as f:
+            f.write(m.to_json())
+        sys.stdout.write(m.to_json())
+        print(f"wrote {path}", file=sys.stderr)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scenario", help="run one registered scenario and "
+                    "emit its RunMetrics JSON")
+    ap.add_argument("--policy", default="has", choices=POLICIES + ("all",),
+                    help="policy to run (with --scenario)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--duration", type=float, default=None,
+                    help="override the horizon (seconds)")
+    ap.add_argument("--out-dir", default=METRICS_DIR)
+    ap.add_argument("--list-scenarios", action="store_true")
+    ap.add_argument("--compare-tick", action="store_true")
+    args = ap.parse_args(argv)
+    if args.list_scenarios:
+        for name in scenario_names():
+            print(f"{name}: {get_scenario(name).description}")
+    elif args.compare_tick:
+        compare_engines(duration=args.duration or 180.0, seed=args.seed)
+    elif args.scenario:
+        run_scenario_cli(args)
+    else:
+        us, derived, _ = run(duration=args.duration or 180.0,
+                             seed=args.seed)
+        print(f"fig6_slo_violations,{us:.1f},{derived}")
 
 
 if __name__ == "__main__":
-    if "--compare-tick" in sys.argv:
-        compare_engines()
-    else:
-        us, derived, _ = run()
-        print(f"fig6_slo_violations,{us:.1f},{derived}")
+    main()

@@ -11,27 +11,29 @@ import sys
 
 import numpy as np
 
-from repro.workloads import standard_workload, stress_workload
-from benchmarks.fig6_slo_violations import simulate, POLICIES
+from repro.workloads.scenarios import get_scenario
+from benchmarks.fig6_slo_violations import POLICIES
 
 
 def run(archs=("olmo-1b", "qwen2.5-3b", "gemma-7b", "mamba2-2.7b",
                "whisper-medium", "deepseek-moe-16b"),
         duration=180.0, out=sys.stdout, seed=0):
     workloads = {
-        "standard": (standard_workload(duration, 25.0, seed=seed), 25.0),
-        "stress": (stress_workload(duration, 50.0, seed=seed), 50.0),
+        "standard": (get_scenario("azure_standard"), 25.0),
+        "stress": (get_scenario("azure_stress"), 50.0),
     }
     print("# Fig7 cost per 1K requests (USD)", file=out)
     print("workload,arch," + ",".join(POLICIES), file=out)
     ratios_kserve, ratios_fast = [], []
     total_cost = 0.0
-    for wname, (arr, base) in workloads.items():
+    for wname, (scen, base) in workloads.items():
         for arch in archs:
+            per_arch = scen.with_(archs=(arch,))
             costs = {}
             for pol in POLICIES:
-                res = simulate(arch, pol, arr, base, duration)
-                costs[pol] = res.cost_per_1k
+                m = per_arch.run(policy=pol, seed=seed, duration_s=duration,
+                                 base_rps=base).metrics
+                costs[pol] = m.cost_per_1k_usd
             print(f"{wname},{arch}," +
                   ",".join(f"{costs[p]:.5f}" for p in POLICIES), file=out)
             if costs["has"] > 0:

@@ -4,58 +4,45 @@ SIMULTANEOUSLY on one shared cluster, per platform.
 
 Reports cluster-level cost per 1K requests, peak chips used, and the
 tight-SLO violation average — co-location is where HGO placement and SM
-alignment actually matter (functions must pack).
+alignment actually matter (functions must pack). Runs through the
+scenario engine: the registered ``colocated_mix`` scenario widened to
+the full six-architecture fleet.
 """
 from __future__ import annotations
 
 import sys
 
-import numpy as np
-
-from repro.configs import ARCHS
-from repro.core import (FaSTGShareLikePolicy, FnSpec, HybridAutoScaler,
-                        KServeLikePolicy, Reconfigurator, SimConfig)
-from repro.core.multisim import MultiFunctionSimulator
-from repro.workloads import standard_workload
+from repro.workloads.scenarios import POLICIES as POLICY_TABLE, get_scenario
 
 FNS = ("olmo-1b", "qwen2.5-3b", "gemma-7b", "mamba2-2.7b",
        "whisper-medium", "deepseek-moe-16b")
 TIGHT = (1.5, 2.0, 2.5)
+POLICIES = tuple(POLICY_TABLE)
 
 
 def run(duration=120.0, base_rps=15.0, out=sys.stdout, seed=0):
-    specs = [FnSpec(ARCHS[a]) for a in FNS]
+    scen = get_scenario("colocated_mix").with_(archs=FNS, max_gpus=96,
+                                               slo_multipliers=TIGHT)
     print("# Multi-function co-location (6 fns, shared cluster)", file=out)
-    print("policy,cluster_cost_per_1k,peak_gpus,"
-          + ",".join(f"avg_viol@{m}x" for m in TIGHT), file=out)
+    print("policy,cluster_cost_per_1k,peak_gpus,cold_starts,"
+          + ",".join(f"viol@{m}x" for m in TIGHT), file=out)
     summary = {}
-    for pname, Policy, whole in [("has", HybridAutoScaler, False),
-                                 ("kserve", KServeLikePolicy, True),
-                                 ("fast", FaSTGShareLikePolicy, False)]:
-        recon = Reconfigurator(num_gpus=0, max_gpus=96)
-        policies, arrivals = {}, {}
-        for i, spec in enumerate(specs):
-            pol = Policy(recon)
-            pol.prewarm(spec, base_rps)
-            policies[spec.fn_id] = pol
-            arrivals[spec.fn_id] = standard_workload(
-                duration, base_rps, seed=seed + i * 7)
-        sim = MultiFunctionSimulator(
-            specs, policies, recon, arrivals,
-            SimConfig(duration_s=duration, whole_gpu_cost=whole, seed=seed))
-        res = sim.run()
-        viols = {m: float(np.mean([r.violations([m])[m]
-                                   for r in res.per_fn.values()]))
-                 for m in TIGHT}
-        print(f"{pname},{res.cluster_cost_per_1k:.5f},{res.peak_gpus},"
-              + ",".join(f"{viols[m]:.4f}" for m in TIGHT), file=out)
-        summary[pname] = (res.cluster_cost_per_1k, res.peak_gpus, viols)
-    rk = summary["kserve"][0] / max(summary["has"][0], 1e-12)
-    rf = summary["fast"][0] / max(summary["has"][0], 1e-12)
+    for pname in POLICIES:
+        m = scen.run(policy=pname, seed=seed, duration_s=duration,
+                     base_rps=base_rps).metrics
+        viol = m.slo_violation_rate
+        print(f"{pname},{m.cost_per_1k_usd:.5f},{m.peak_gpus},"
+              f"{m.cold_starts},"
+              + ",".join(f"{viol[str(x)]:.4f}" for x in TIGHT), file=out)
+        summary[pname] = m
+    rk = summary["kserve"].cost_per_1k_usd / max(
+        summary["has"].cost_per_1k_usd, 1e-12)
+    rf = summary["fast"].cost_per_1k_usd / max(
+        summary["has"].cost_per_1k_usd, 1e-12)
     derived = (f"colocated:kserve_over_has={rk:.2f}x;fast_over_has={rf:.2f}x;"
-               f"has_peak_gpus={summary['has'][1]};"
-               f"kserve_peak_gpus={summary['kserve'][1]}")
-    return summary["has"][0] * 1e3, derived
+               f"has_peak_gpus={summary['has'].peak_gpus};"
+               f"kserve_peak_gpus={summary['kserve'].peak_gpus}")
+    return summary["has"].cost_per_1k_usd * 1e3, derived
 
 
 if __name__ == "__main__":

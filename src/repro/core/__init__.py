@@ -9,6 +9,7 @@ from repro.core.autoscaler import (AutoScalerConfig, HybridAutoScaler,
 from repro.core.baselines import (FaSTGShareLikeConfig, FaSTGShareLikePolicy,
                                   KServeLikeConfig, KServeLikePolicy)
 from repro.core.kalman import KalmanPredictor, LastValuePredictor
+from repro.core.metrics import RunMetrics, baseline_batch_of
 from repro.core.perf_model import (FnSpec, cost_rate, exec_time, latency,
                                    most_efficient_config, slo_baseline,
                                    throughput)
@@ -24,6 +25,7 @@ __all__ = [
     "FaSTGShareLikeConfig", "FaSTGShareLikePolicy",
     "KServeLikeConfig", "KServeLikePolicy",
     "KalmanPredictor", "LastValuePredictor",
+    "RunMetrics", "baseline_batch_of",
     "FnSpec", "cost_rate", "exec_time", "latency", "most_efficient_config",
     "slo_baseline", "throughput",
     "Reconfigurator", "ClusterSimulator", "SimConfig", "SimResult",

@@ -82,6 +82,11 @@ class FunctionState:
     completed: List[Request] = dataclasses.field(default_factory=list)
     timeline: list = dataclasses.field(default_factory=list)
     dropped: int = 0
+    cold_starts: int = 0
+    # per-kind scaling mutations observed at autoscale events (policy-
+    # agnostic: derived by diffing the pod set, not from tick() returns)
+    action_counts: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {"vup": 0, "vdown": 0, "hup": 0, "hdown": 0})
     next_arrival: int = 0
     timeout_at: float = -np.inf   # latest batch-timeout wakeup scheduled
     pod_order: List = dataclasses.field(default_factory=list)
@@ -185,6 +190,27 @@ class EventEngine:
     def _any_work_left(self, now: float) -> bool:
         return any(st.work_left(now) for st in self.fns.values())
 
+    def _count_actions(self, t: float, st: FunctionState,
+                       before: Dict[str, float]) -> None:
+        """Diff the pod set across one policy tick into per-kind scaling
+        counts and cold starts (works for any policy, including ones
+        whose tick() returns nothing)."""
+        ac = st.action_counts
+        after = {p.pod_id: p for p in st.pod_order}
+        for pid, quota in before.items():
+            pod = after.get(pid)
+            if pod is None:
+                ac["hdown"] += 1
+            elif pod.quota > quota + 1e-12:
+                ac["vup"] += 1
+            elif pod.quota < quota - 1e-12:
+                ac["vdown"] += 1
+        for pid, pod in after.items():
+            if pid not in before:
+                ac["hup"] += 1
+                if pod.ready_at > t:
+                    st.cold_starts += 1
+
     # ---- event handlers ----------------------------------------------------
     def _on_arrival(self, t: float, st: FunctionState) -> None:
         arr = st._arr
@@ -209,8 +235,13 @@ class EventEngine:
         observed = (st.observed_in_window(t)
                     / max(min(t, OBS_WINDOW_S), 1e-9) if t > 0 else 0.0)
         observed += len(st.queue) / OBS_WINDOW_S  # backlog drain demand
+        # snapshot quota VALUES before the policy mutates pods in place;
+        # between autoscale events the pod set is immutable, so the
+        # cached pod_order is the authoritative before-state
+        before = {p.pod_id: p.quota for p in st.pod_order}
         st.policy.tick(t, st.spec, observed)
         self._refresh_pods(st)
+        self._count_actions(t, st, before)
         self._cost_rates = self.cost.rates(self.recon)
         st.timeline.append(
             (t, observed, len(st.pod_order),

@@ -1,0 +1,190 @@
+"""Unified metrics pipeline: one structured record per simulation run.
+
+Every scenario run — single- or multi-function, any policy — folds into
+the same ``RunMetrics`` record, computed in one place instead of being
+re-derived ad hoc inside each ``benchmarks/fig*.py``. The record is
+JSON-round-trippable, which is what the golden-trace regression suite
+(``tests/test_goldens.py``) pins: any policy or engine change that
+shifts SLO/cost behavior fails with a readable field-by-field diff.
+
+Violation rates pool *normalized* latencies (latency / per-function SLO
+baseline) across functions, so multi-function runs aggregate without
+privileging any one function's absolute latency scale; dropped requests
+count as violations at every multiplier (normalized latency = inf),
+matching ``SimResult.violations``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import perf_model
+from repro.core.slo import percentiles
+
+ACTION_KINDS = ("vup", "vdown", "hup", "hdown")
+DEFAULT_MULTIPLIERS = (1.5, 2.0, 2.5)
+_SIG_DIGITS = 12  # float rounding on serialize: stable, still "tight"
+
+
+def baseline_batch_of(policy) -> int:
+    """Batch the SLO baseline is quoted at (paper §4.3): the policy's
+    default serving batch, falling back to 8."""
+    cfg = getattr(policy, "cfg", None)
+    return cfg.default_batch if hasattr(cfg, "default_batch") else 8
+
+
+def _round(x: float) -> float:
+    if x == 0.0 or not math.isfinite(x):
+        return x
+    return round(x, _SIG_DIGITS - 1 - int(math.floor(math.log10(abs(x)))))
+
+
+def _jsonf(x: float):
+    """RFC-8259-safe float: non-finite values (empty-run percentiles,
+    cost of a zero-completion run) serialize as null, not Infinity."""
+    return _round(x) if math.isfinite(x) else None
+
+
+def _unjsonf(x):
+    return float("inf") if x is None else x
+
+
+@dataclasses.dataclass
+class RunMetrics:
+    """The one record every simulation run emits."""
+    scenario: str
+    policy: str
+    seed: int
+    duration_s: float
+    n_arrived: int
+    n_completed: int
+    n_dropped: int
+    latency_ms: Dict[str, float]          # p50 / p90 / p95 / p99
+    slo_violation_rate: Dict[str, float]  # str(multiplier) -> rate
+    cost_usd: float
+    cost_per_1k_usd: float
+    gpu_seconds: float
+    cold_starts: int
+    scaling_actions: Dict[str, int]       # vup / vdown / hup / hdown
+    peak_gpus: int
+
+    # ---- construction ------------------------------------------------------
+    @classmethod
+    def from_sim(cls, sim, scenario: str, policy: str, seed: int,
+                 slo_multipliers=DEFAULT_MULTIPLIERS) -> "RunMetrics":
+        """Fold a finished ``ClusterSimulator`` / ``MultiFunctionSimulator``
+        (anything wrapping an ``EventEngine``) into one record."""
+        engine = sim.engine
+        lat_parts: List[np.ndarray] = []
+        norm_parts: List[np.ndarray] = []
+        n_arrived = n_completed = n_dropped = cold = 0
+        actions = {k: 0 for k in ACTION_KINDS}
+        for st in engine.fns.values():
+            base = perf_model.slo_baseline(st.spec,
+                                           baseline_batch_of(st.policy))
+            lats = np.array([r.latency for r in st.completed
+                             if r.latency is not None], dtype=float)
+            lat_parts.append(lats)
+            norm_parts.append(lats / base)
+            norm_parts.append(np.full(st.dropped, np.inf))
+            n_arrived += len(st.arrivals)
+            n_completed += len(lats)
+            n_dropped += st.dropped
+            cold += st.cold_starts
+            for k in ACTION_KINDS:
+                actions[k] += st.action_counts.get(k, 0)
+        lats = np.concatenate(lat_parts) if lat_parts else np.empty(0)
+        norm = np.concatenate(norm_parts) if norm_parts else np.empty(0)
+        pcts = percentiles(lats)
+        viol = {str(float(m)): (float((norm > m).mean()) if len(norm)
+                                else 1.0)
+                for m in slo_multipliers}
+        cost = engine.cost
+        return cls(
+            scenario=scenario, policy=policy, seed=int(seed),
+            duration_s=float(engine.cfg.duration_s),
+            n_arrived=n_arrived, n_completed=n_completed,
+            n_dropped=n_dropped,
+            latency_ms={k: v * 1e3 for k, v in pcts.items()},
+            slo_violation_rate=viol,
+            cost_usd=cost.total_usd,
+            cost_per_1k_usd=cost.per_1k_requests(n_completed),
+            gpu_seconds=cost.gpu_seconds,
+            cold_starts=cold, scaling_actions=actions,
+            peak_gpus=int(engine.peak_gpus))
+
+    # ---- serialization -----------------------------------------------------
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        for k in ("duration_s", "cost_usd", "cost_per_1k_usd",
+                  "gpu_seconds"):
+            d[k] = _jsonf(d[k])
+        d["latency_ms"] = {k: _jsonf(v)
+                           for k, v in sorted(d["latency_ms"].items())}
+        d["slo_violation_rate"] = {
+            k: _jsonf(v) for k, v in sorted(d["slo_violation_rate"].items())}
+        d["scaling_actions"] = {k: d["scaling_actions"].get(k, 0)
+                                for k in ACTION_KINDS}
+        return d
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=2, sort_keys=True) + "\n"
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "RunMetrics":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        d = {k: v for k, v in d.items() if k in fields}
+        for k in ("cost_per_1k_usd",):
+            d[k] = _unjsonf(d.get(k))
+        for k in ("latency_ms", "slo_violation_rate"):
+            d[k] = {sub: _unjsonf(v) for sub, v in d.get(k, {}).items()}
+        return cls(**d)
+
+    @classmethod
+    def from_json(cls, s: str) -> "RunMetrics":
+        return cls.from_dict(json.loads(s))
+
+    def save(self, path) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+    @classmethod
+    def load(cls, path) -> "RunMetrics":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    # ---- regression diffing ------------------------------------------------
+    def diff(self, other: "RunMetrics", rel: float = 1e-6,
+             abs_tol: float = 1e-9) -> List[str]:
+        """Readable field-by-field differences vs ``other`` (the fresh
+        run), empty when everything matches within tolerance. Counts and
+        labels compare exactly; floats within ``rel``/``abs_tol``."""
+
+        def close(a, b):
+            if a is None or b is None:  # serialized non-finite float
+                return a == b
+            if isinstance(a, float) or isinstance(b, float):
+                a, b = float(a), float(b)
+                if math.isinf(a) or math.isinf(b):
+                    return a == b
+                return math.isclose(a, b, rel_tol=rel, abs_tol=abs_tol)
+            return a == b
+
+        out = []
+        mine, theirs = self.to_dict(), other.to_dict()
+        for key in sorted(set(mine) | set(theirs)):
+            a, b = mine.get(key), theirs.get(key)
+            if isinstance(a, dict) or isinstance(b, dict):
+                a, b = a or {}, b or {}
+                for sub in sorted(set(a) | set(b)):
+                    if not close(a.get(sub, float("nan")),
+                                 b.get(sub, float("nan"))):
+                        out.append(f"{key}[{sub}]: golden={a.get(sub)} "
+                                   f"run={b.get(sub)}")
+            elif not close(a, b):
+                out.append(f"{key}: golden={a} run={b}")
+        return out

@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.core.cost import CostMeter
 from repro.core.events import EventEngine, FunctionState, SimConfig
+from repro.core.metrics import baseline_batch_of
 from repro.core.perf_model import FnSpec
 from repro.core.reconfigurator import Reconfigurator
 from repro.core.simulator import SimResult, result_from_state
@@ -54,7 +55,8 @@ class MultiFunctionSimulator:
         total_completed = 0
         zero_cost = CostMeter()  # per-fn cost is cluster-level, not split
         for st in self.states:
-            per_fn[st.fn_id] = result_from_state(st, zero_cost)
+            per_fn[st.fn_id] = result_from_state(
+                st, zero_cost, baseline_batch_of(st.policy))
             total_completed += per_fn[st.fn_id].n_completed
         return MultiSimResult(
             per_fn=per_fn, cluster_cost_usd=self.cost.total_usd,

@@ -28,6 +28,7 @@ from repro.core import perf_model
 from repro.core.cost import CostMeter
 from repro.core.events import (EventEngine, FunctionState, PodRuntime,
                                SimConfig)
+from repro.core.metrics import baseline_batch_of
 from repro.core.perf_model import FnSpec
 from repro.core.reconfigurator import Reconfigurator
 from repro.core.slo import Request, percentiles, violation_rates
@@ -48,6 +49,8 @@ class SimResult:
     pcts: dict
     pod_seconds: float
     timeline: list
+    cold_starts: int = 0
+    action_counts: dict = dataclasses.field(default_factory=dict)
 
     def violations(self, multipliers):
         lat = self.latencies
@@ -55,11 +58,6 @@ class SimResult:
         pad = np.full(self.n_dropped, np.inf)
         return violation_rates(np.concatenate([lat, pad]),
                                self.baseline_s, multipliers)
-
-
-def _baseline_batch(policy) -> int:
-    cfg = getattr(policy, "cfg", None)
-    return cfg.default_batch if hasattr(cfg, "default_batch") else 8
 
 
 def result_from_state(st: FunctionState, cost: CostMeter,
@@ -73,7 +71,8 @@ def result_from_state(st: FunctionState, cost: CostMeter,
         n_dropped=st.dropped, cost_usd=cost.total_usd,
         cost_per_1k=cost.per_1k_requests(len(lats)),
         baseline_s=base, pcts=percentiles(lats),
-        pod_seconds=cost.gpu_seconds, timeline=st.timeline)
+        pod_seconds=cost.gpu_seconds, timeline=st.timeline,
+        cold_starts=st.cold_starts, action_counts=dict(st.action_counts))
 
 
 class ClusterSimulator:
@@ -88,7 +87,8 @@ class ClusterSimulator:
         self.cost = CostMeter(whole_gpu=cfg.whole_gpu_cost)
         self.state = FunctionState(spec, policy, arrivals)
         self.engine = EventEngine(recon, cfg, [self.state], cost=self.cost,
-                                  rng=np.random.default_rng(cfg.seed))
+                                  rng=np.random.default_rng(cfg.seed),
+                                  track_peak=True)
 
     # introspection used by tests/tools; delegates to the engine state
     @property
@@ -111,7 +111,11 @@ class ClusterSimulator:
     def timeline(self) -> list:
         return self.state.timeline
 
+    @property
+    def peak_gpus(self) -> int:
+        return self.engine.peak_gpus
+
     def run(self) -> SimResult:
         self.engine.run()
         return result_from_state(self.state, self.cost,
-                                 _baseline_batch(self.policy))
+                                 baseline_batch_of(self.policy))

@@ -20,8 +20,8 @@ from repro.core import perf_model
 from repro.core.cost import CostMeter
 from repro.core.perf_model import FnSpec
 from repro.core.reconfigurator import Reconfigurator
-from repro.core.simulator import (PodRuntime, SimConfig, SimResult,
-                                  _baseline_batch)
+from repro.core.metrics import baseline_batch_of
+from repro.core.simulator import PodRuntime, SimConfig, SimResult
 from repro.core.slo import Request, percentiles
 
 
@@ -134,7 +134,7 @@ class TickClusterSimulator:
         lats = np.array([r.latency for r in self.completed
                          if r.latency is not None])
         base = perf_model.slo_baseline(self.spec,
-                                       _baseline_batch(self.policy))
+                                       baseline_batch_of(self.policy))
         return SimResult(
             latencies=lats, n_arrived=n, n_completed=len(lats),
             n_dropped=self.dropped, cost_usd=self.cost.total_usd,

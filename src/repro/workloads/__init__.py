@@ -1,5 +1,11 @@
 from repro.workloads.azure import (TraceConfig, arrivals, rate_series,
                                    standard_workload, stress_workload)
+from repro.workloads.generators import (diurnal, flash_crowd,
+                                        homogeneous_poisson,
+                                        inhomogeneous_poisson, mmpp, ramp,
+                                        superpose, thin, time_shift)
 
 __all__ = ["TraceConfig", "arrivals", "rate_series", "standard_workload",
-           "stress_workload"]
+           "stress_workload", "homogeneous_poisson", "inhomogeneous_poisson",
+           "diurnal", "mmpp", "flash_crowd", "ramp", "superpose", "thin",
+           "time_shift"]

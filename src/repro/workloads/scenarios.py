@@ -1,0 +1,195 @@
+"""Scenario engine: named, seeded workload regimes bound to fleet configs.
+
+A ``Scenario`` binds an arrival-process generator (``generators.py`` /
+``azure.py``) to function specs, SLO multipliers, and a fleet config,
+and knows how to drive either simulator (``ClusterSimulator`` for one
+function, ``MultiFunctionSimulator`` for a co-located set) under any of
+the registered policies. Every run emits one ``RunMetrics`` record
+(``core/metrics.py``) — the unit the golden-trace regression suite
+pins.
+
+Adding a scenario is one ``register(Scenario(...))`` call; see the
+README ("Scenario registry") for the golden-regeneration step that must
+accompany it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.core import (ClusterSimulator, FaSTGShareLikePolicy, FnSpec,
+                        HybridAutoScaler, KServeLikePolicy, Reconfigurator,
+                        SimConfig)
+from repro.core.metrics import DEFAULT_MULTIPLIERS, RunMetrics
+from repro.core.multisim import MultiFunctionSimulator
+from repro.workloads import azure, generators
+
+# policy name -> (constructor, billed-whole-GPU?)
+POLICIES: Dict[str, tuple] = {
+    "has": (HybridAutoScaler, False),
+    "kserve": (KServeLikePolicy, True),
+    "fast": (FaSTGShareLikePolicy, False),
+}
+
+# per-function seed decorrelation stride for co-located scenarios
+_FN_SEED_STRIDE = 7919
+
+
+def make_policy(name: str, recon: Reconfigurator):
+    return POLICIES[name][0](recon)
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One named workload regime. ``trace`` follows the generator
+    calling convention ``(duration_s, base_rps, seed) -> arrival times``
+    and is re-invoked per function with decorrelated seeds."""
+    name: str
+    description: str
+    trace: Callable[[float, float, int], np.ndarray]
+    archs: Tuple[str, ...] = ("olmo-1b",)
+    base_rps: float = 20.0
+    duration_s: float = 120.0
+    slo_multipliers: Tuple[float, ...] = DEFAULT_MULTIPLIERS
+    max_gpus: int = 64
+    colocated: bool = False
+
+    def with_(self, **overrides) -> "Scenario":
+        """A derived scenario (e.g. another arch or horizon)."""
+        return dataclasses.replace(self, **overrides)
+
+    def fn_specs(self):
+        return [FnSpec(ARCHS[a]) for a in self.archs]
+
+    def arrivals_for(self, fn_index: int, duration_s: float,
+                     base_rps: float, seed: int) -> np.ndarray:
+        return self.trace(duration_s, base_rps,
+                          seed + _FN_SEED_STRIDE * fn_index)
+
+    def run(self, policy: str = "has", seed: int = 0,
+            duration_s: Optional[float] = None,
+            base_rps: Optional[float] = None,
+            policy_factory: Optional[Callable] = None) -> "ScenarioOutcome":
+        """Simulate this scenario under ``policy`` and fold the run into
+        a ``RunMetrics``. ``policy_factory(policy_name, recon)`` lets
+        ablations substitute custom-configured policies."""
+        dur = self.duration_s if duration_s is None else duration_s
+        rps = self.base_rps if base_rps is None else base_rps
+        specs = self.fn_specs()
+        recon = Reconfigurator(num_gpus=0, max_gpus=self.max_gpus)
+        whole = POLICIES[policy][1]
+        cfg = SimConfig(duration_s=dur, whole_gpu_cost=whole, seed=seed)
+        factory = policy_factory or make_policy
+        if self.colocated or len(specs) > 1:
+            policies, arrs = {}, {}
+            for i, spec in enumerate(specs):
+                pol = factory(policy, recon)
+                pol.prewarm(spec, rps)
+                policies[spec.fn_id] = pol
+                arrs[spec.fn_id] = self.arrivals_for(i, dur, rps, seed)
+            sim = MultiFunctionSimulator(specs, policies, recon, arrs, cfg)
+        else:
+            pol = factory(policy, recon)
+            pol.prewarm(specs[0], rps)
+            sim = ClusterSimulator(specs[0], pol, recon,
+                                   self.arrivals_for(0, dur, rps, seed), cfg)
+        result = sim.run()
+        metrics = RunMetrics.from_sim(sim, self.name, policy, seed,
+                                      self.slo_multipliers)
+        return ScenarioOutcome(metrics=metrics, result=result,
+                               simulator=sim)
+
+
+@dataclasses.dataclass
+class ScenarioOutcome:
+    metrics: RunMetrics
+    result: object       # SimResult or MultiSimResult
+    simulator: object    # ClusterSimulator or MultiFunctionSimulator
+
+
+# ---- registry --------------------------------------------------------------
+
+SCENARIOS: Dict[str, Scenario] = {}
+
+
+def register(scenario: Scenario) -> Scenario:
+    if scenario.name in SCENARIOS:
+        raise ValueError(f"scenario {scenario.name!r} already registered")
+    SCENARIOS[scenario.name] = scenario
+    return scenario
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; registered: "
+                       f"{', '.join(scenario_names())}") from None
+
+
+def scenario_names():
+    return sorted(SCENARIOS)
+
+
+register(Scenario(
+    name="steady_poisson",
+    description="Constant-rate Poisson arrivals — the smooth-load control "
+                "case where all policies should look alike.",
+    trace=generators.homogeneous_poisson))
+
+register(Scenario(
+    name="mmpp_burst",
+    description="Two-state MMPP: calm base load with abrupt 5x bursts "
+                "(regime switches faster than the diurnal drift).",
+    trace=lambda d, r, s: generators.mmpp(d, r, burst_multiplier=5.0,
+                                          mean_calm_s=25.0, mean_burst_s=6.0,
+                                          seed=s)))
+
+register(Scenario(
+    name="diurnal",
+    description="Sinusoidal day/night swing — slow drift the Kalman "
+                "predictor should track without overshoot.",
+    trace=lambda d, r, s: generators.diurnal(d, r, amplitude=0.7,
+                                             period_s=180.0, seed=s)))
+
+register(Scenario(
+    name="flash_crowd",
+    description="Steady base with one violent 8x spike (ramp/hold/decay) "
+                "— the cold-start and scale-up stress case.",
+    trace=lambda d, r, s: generators.flash_crowd(d, r, spike_multiplier=8.0,
+                                                 ramp_s=5.0, hold_s=15.0,
+                                                 seed=s)))
+
+register(Scenario(
+    name="ramp_up",
+    description="Linear rate sweep from 20% to 200% of base — sustained "
+                "growth exercising steady scale-up.",
+    trace=lambda d, r, s: generators.ramp(d, 0.2 * r, 2.0 * r, seed=s)))
+
+register(Scenario(
+    name="azure_standard",
+    description="Azure-Functions-style replay (diurnal + Poisson + "
+                "heavy-tailed bursts + idle gaps) — paper §4 standard.",
+    trace=lambda d, r, s: azure.standard_workload(d, r, seed=s),
+    base_rps=25.0))
+
+register(Scenario(
+    name="azure_stress",
+    description="Azure-style replay at stress intensity (higher base, "
+                "more and bigger bursts) — paper Fig 7 stress.",
+    trace=lambda d, r, s: azure.stress_workload(d, r, seed=s),
+    base_rps=40.0))
+
+register(Scenario(
+    name="colocated_mix",
+    description="Three architectures (dense/SSM/audio) co-located on one "
+                "shared cluster under Azure-style load — where HGO "
+                "placement and SM alignment matter.",
+    trace=lambda d, r, s: azure.standard_workload(d, r, seed=s),
+    archs=("olmo-1b", "mamba2-2.7b", "whisper-medium"),
+    base_rps=12.0,
+    max_gpus=96,
+    colocated=True))

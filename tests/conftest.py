@@ -4,3 +4,10 @@ import sys
 # tests run on the single CPU device (the dry-run sets its own XLA_FLAGS
 # in-process and is exercised via subprocess in test_dryrun.py)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-goldens", action="store_true", default=False,
+        help="rewrite tests/goldens/*.json from the current code instead "
+             "of comparing against them (commit the diff intentionally)")

@@ -11,6 +11,11 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS
+
+# the tick engine makes these the most expensive tests in the repo; the
+# golden-trace suite guards the event engine on the fast path, and CI
+# runs this module's full parity check on a nightly schedule
+pytestmark = pytest.mark.slow
 from repro.core import (ClusterSimulator, FaSTGShareLikePolicy, FnSpec,
                         HybridAutoScaler, KServeLikePolicy, Reconfigurator,
                         SimConfig, TickClusterSimulator)

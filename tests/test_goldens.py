@@ -1,0 +1,88 @@
+"""Golden-trace regression suite.
+
+Every registered scenario runs at a small scale under fixed seeds and
+its ``RunMetrics`` must match the checked-in golden
+(``tests/goldens/<scenario>__<policy>.json``) within tight tolerances —
+any engine or policy change that shifts SLO/cost behavior fails here
+with a field-by-field diff instead of silently drifting the paper's
+reproduced claims.
+
+Intentional behavior changes regenerate the corpus:
+
+    PYTHONPATH=src python -m pytest tests/test_goldens.py --update-goldens
+
+then commit the JSON diff alongside the change that explains it.
+"""
+import pathlib
+
+import pytest
+
+from repro.core.metrics import RunMetrics
+from repro.workloads.scenarios import get_scenario, scenario_names
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "goldens"
+GOLDEN_SEED = 42
+GOLDEN_DURATION_S = 45.0  # small scale: every case sub-second on CPU
+
+# every scenario is pinned under the paper's policy; the smooth control
+# case is additionally pinned under both baselines so baseline-policy
+# regressions are caught too
+CASES = [(name, "has") for name in scenario_names()]
+CASES += [("steady_poisson", "kserve"), ("steady_poisson", "fast")]
+
+# counts compare exactly; floats within 1e-6 relative (loose enough for
+# cross-platform libm noise, tight enough that any real behavior shift
+# — one extra request, one different scaling decision — fails)
+REL_TOL = 1e-6
+ABS_TOL = 1e-9
+
+
+def golden_path(name: str, policy: str) -> pathlib.Path:
+    return GOLDEN_DIR / f"{name}__{policy}.json"
+
+
+def run_case(name: str, policy: str) -> RunMetrics:
+    scen = get_scenario(name)
+    return scen.run(policy=policy, seed=GOLDEN_SEED,
+                    duration_s=GOLDEN_DURATION_S).metrics
+
+
+@pytest.mark.parametrize("name,policy", CASES,
+                         ids=[f"{n}-{p}" for n, p in CASES])
+def test_golden(name, policy, request):
+    path = golden_path(name, policy)
+    metrics = run_case(name, policy)
+    if request.config.getoption("--update-goldens"):
+        GOLDEN_DIR.mkdir(exist_ok=True)
+        metrics.save(path)
+        pytest.skip(f"golden rewritten: {path.name}")
+    assert path.exists(), (
+        f"missing golden {path.name}; generate the corpus with "
+        f"pytest tests/test_goldens.py --update-goldens")
+    golden = RunMetrics.load(path)
+    diffs = golden.diff(metrics, rel=REL_TOL, abs_tol=ABS_TOL)
+    assert not diffs, (
+        f"{name}/{policy} drifted from golden ({len(diffs)} fields):\n  "
+        + "\n  ".join(diffs)
+        + "\nIf intentional, rerun with --update-goldens and commit.")
+
+
+def test_corpus_has_no_orphans():
+    """Every checked-in golden corresponds to a registered case, so
+    renamed/removed scenarios can't leave stale pins behind."""
+    expected = {golden_path(n, p).name for n, p in CASES}
+    actual = {p.name for p in GOLDEN_DIR.glob("*.json")}
+    assert actual <= expected, f"orphan goldens: {sorted(actual - expected)}"
+
+
+def test_goldens_carry_real_traffic():
+    """Guard the corpus itself: a golden pinned on an empty or trivially
+    idle run would regression-test nothing."""
+    for name, policy in CASES:
+        path = golden_path(name, policy)
+        if not path.exists():
+            pytest.skip("corpus not generated yet")
+        g = RunMetrics.load(path)
+        assert g.n_arrived > 100, (name, policy)
+        assert g.n_arrived == g.n_completed + g.n_dropped, (name, policy)
+        assert g.cost_usd > 0, (name, policy)

@@ -1,0 +1,150 @@
+"""TokenLedger (scheduler.py) window-accounting properties.
+
+The ledger is the observable contract of the paper's time-token
+scheduler: per-window execution never exceeds the pod's quota, windows
+only move forward, and a quota rewrite (vertical scaling) takes effect
+at the next window boundary — the already-granted budget of the current
+window is honored, never clawed back or topped up.
+
+Deterministic exact-value tests always run; the randomized property
+versions require hypothesis (optional dev dependency) and skip cleanly
+without it.
+"""
+import pytest
+
+from repro.core.scheduler import TokenLedger
+from repro.core.vgpu import PodAlloc, VirtualGPU
+
+WINDOW_MS = 100.0
+W = WINDOW_MS / 1e3
+
+
+def make_ledger(quota: float):
+    g = VirtualGPU("G", window_ms=WINDOW_MS)
+    pod = PodAlloc(fn_id="f", sm=8, quota=quota, batch=1)
+    g.place(pod)
+    return g, pod, TokenLedger(g)
+
+
+# ---- deterministic exact-value semantics -----------------------------------
+
+def test_acquire_spills_across_windows_exactly():
+    """cost 0.15 s at quota 0.5 spends 0.05 s in each of three windows:
+    finishes 0.05 s into window 2 -> t = 0.25 s."""
+    _, pod, ledger = make_ledger(0.5)
+    assert ledger.acquire(pod.pod_id, 0.15, 0.0) == pytest.approx(0.25)
+
+
+def test_within_budget_acquire_completes_inline():
+    _, pod, ledger = make_ledger(0.5)
+    assert ledger.acquire(pod.pod_id, 0.04, 0.0) == pytest.approx(0.04)
+
+
+def test_acquired_time_never_exceeds_quota_per_window():
+    """Back-to-back acquires from t=0 (windows aligned to multiples of
+    W): at any completion time t, at most floor(t/W)+1 windows have been
+    touched and each grants at most quota * W — so cumulative work must
+    satisfy C <= (floor(t/W)+1) * quota * W. The bound is tight (hit
+    with equality) whenever a window's budget is fully consumed."""
+    quota = 0.3
+    _, pod, ledger = make_ledger(quota)
+    t, total = 0.0, 0.0
+    hit_equality = False
+    for _ in range(20):
+        t = ledger.acquire(pod.pod_id, 0.01, t)
+        total += 0.01
+        windows_touched = int((t - 1e-9) / W) + 1
+        cap = windows_touched * quota * W
+        assert total <= cap + 1e-9, (t, total, cap)
+        hit_equality |= abs(total - cap) < 1e-9
+    assert hit_equality, "bound never tight: test lost its teeth"
+
+
+def test_windows_advance_monotonically():
+    _, pod, ledger = make_ledger(0.4)
+    t, starts = 0.0, []
+    for i in range(15):
+        t = ledger.acquire(pod.pod_id, 0.015 + 0.001 * (i % 3), t)
+        starts.append(ledger._window_start[pod.pod_id])
+    assert all(a <= b + 1e-12 for a, b in zip(starts, starts[1:])), starts
+
+
+def test_quota_raise_takes_effect_next_window():
+    """Exhaust window 0's budget at quota 0.2, raise to 0.8 mid-window:
+    nothing more runs before the boundary (old budget is spent), and the
+    next acquire runs under the NEW per-window budget from t=W."""
+    g, pod, ledger = make_ledger(0.2)
+    t = ledger.acquire(pod.pod_id, 0.02, 0.0)   # consumes q*W exactly
+    assert t == pytest.approx(0.02)
+    g.set_quota(pod.pod_id, 0.8)
+    # 0.08 s fits entirely inside window 1's new budget: [0.1, 0.18)
+    assert ledger.acquire(pod.pod_id, 0.08, t) == pytest.approx(0.18)
+
+
+def test_quota_cut_honors_current_window_grant():
+    """Lowering quota mid-window does not claw back the remaining budget
+    already granted for this window; the cut binds from the next one."""
+    g, pod, ledger = make_ledger(0.8)
+    t = ledger.acquire(pod.pod_id, 0.01, 0.0)
+    assert t == pytest.approx(0.01)
+    g.set_quota(pod.pod_id, 0.1)
+    # old window budget had 0.07 left -> runs to 0.08 inside window 0
+    assert ledger.acquire(pod.pod_id, 0.07, t) == pytest.approx(0.08)
+    # but the NEXT window only grants 0.1 * W = 0.01 per window
+    t2 = ledger.acquire(pod.pod_id, 0.02, 0.08)
+    assert t2 == pytest.approx(0.1 + W + 0.01)  # spills into window 2
+
+
+# ---- randomized properties (hypothesis, optional) --------------------------
+# guarded with try/except (not module-level importorskip) so the exact-
+# value tests above always run even without the optional dependency
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @given(st.floats(0.1, 1.0), st.lists(st.floats(1e-4, 0.15),
+                                         min_size=1, max_size=12))
+    @settings(max_examples=80, deadline=None)
+    def test_rate_bound_and_feasibility(quota, costs):
+        """Granted time is rate-limited: finishing C seconds of work
+        takes at least C / quota - W wall-clock, never less than C."""
+        quota = round(quota, 2)
+        _, pod, ledger = make_ledger(quota)
+        t = 0.0
+        for c in costs:
+            t = ledger.acquire(pod.pod_id, c, t)
+        total = sum(costs)
+        assert t >= total / quota - W - 1e-9
+        assert t >= total - 1e-9
+
+    @given(st.floats(0.1, 1.0), st.lists(st.floats(1e-4, 0.1),
+                                         min_size=2, max_size=10))
+    @settings(max_examples=60, deadline=None)
+    def test_windows_monotone_under_random_load(quota, costs):
+        quota = round(quota, 2)
+        _, pod, ledger = make_ledger(quota)
+        t, prev = 0.0, -1.0
+        for c in costs:
+            t = ledger.acquire(pod.pod_id, c, t)
+            ws = ledger._window_start[pod.pod_id]
+            assert ws >= prev - 1e-12
+            prev = ws
+
+    @given(st.floats(0.1, 0.5), st.floats(0.5, 1.0))
+    @settings(max_examples=40, deadline=None)
+    def test_rewrite_never_applies_before_boundary(q_old, q_new):
+        """However the quota is rewritten mid-window, total time granted
+        inside the current window never exceeds the OLD budget."""
+        q_old, q_new = round(q_old, 2), round(q_new, 2)
+        g, pod, ledger = make_ledger(q_old)
+        # burn the whole old budget, then raise
+        t = ledger.acquire(pod.pod_id, q_old * W, 0.0)
+        assert t == pytest.approx(q_old * W)
+        g.set_quota(pod.pod_id, q_new)
+        t2 = ledger.acquire(pod.pod_id, 1e-3, t)
+        assert t2 >= W  # nothing more ran inside window 0
