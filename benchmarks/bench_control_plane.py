@@ -1,0 +1,254 @@
+"""Control-plane decision throughput: the repo's perf trajectory anchor.
+
+Times scaling decisions/second for the oracle and RaPP predictors along
+both implementations — the reference scalar triple loop
+(`perf_model.most_efficient_config`) and the lattice-backed
+`CapacityTable` — plus full `HybridAutoScaler.scale` events at several
+fleet sizes, and writes the results to ``BENCH_control_plane.json``.
+
+JSON format (schema `bench_control_plane/v1`)::
+
+    {
+      "schema": "bench_control_plane/v1",
+      "smoke": false,
+      "results": [
+        {"name": "mec_oracle_loop", "decisions_per_s": ..., "n": ...,
+         "seconds_per_decision": ...},
+        {"name": "scale_oracle_fleet64", "fleet_pods": 64, ...},
+        ...
+      ]
+    }
+
+Entry names are stable identifiers; CI runs ``--smoke --check
+benchmarks/ref_control_plane.json`` and fails when any entry present in
+both files is more than ``--factor`` (default 3x) slower than the
+checked-in reference. ``--update-ref`` regenerates the reference.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.configs import ARCHS
+from repro.core import perf_model
+from repro.core.autoscaler import AutoScalerConfig, HybridAutoScaler
+from repro.core.capacity import CapacityTable
+from repro.core.perf_model import FnSpec
+from repro.core.reconfigurator import Reconfigurator
+from repro.core.vgpu import PodAlloc
+
+REF_PATH = "benchmarks/ref_control_plane.json"
+ARCH = "qwen2.5-3b"
+
+
+def _timed(fn, iters: int, chunks: int = 3) -> dict:
+    """Best-of-chunks rate: the minimum per-call time over `chunks`
+    timing windows. On shared/bursty machines (CI runners, dev
+    containers) the mean is dominated by scheduler noise — the best
+    window is the stable estimator a regression gate can trust."""
+    per = max(1, iters // chunks)
+    best = float("inf")
+    total = 0
+    for _ in range(chunks):
+        t0 = time.perf_counter()
+        for _ in range(per):
+            fn()
+        dt = time.perf_counter() - t0
+        total += per
+        best = min(best, dt / per)
+    return {"n": total, "seconds_per_decision": best,
+            "decisions_per_s": 1.0 / best if best > 0 else float("inf")}
+
+
+def bench_mec_oracle(spec: FnSpec, iters: int) -> list:
+    """most_efficient_config: reference loop vs lattice table, warm."""
+    targets = [0.5, 5.0, 50.0, 500.0]
+    table = CapacityTable()
+    table.most_efficient_config(spec, 1.0)  # warm the lattice
+    perf_model.most_efficient_config(spec, 1.0)  # warm exec_time memo
+    out = []
+    for name, fn in [
+        ("mec_oracle_loop",
+         lambda: [perf_model.most_efficient_config(spec, t)
+                  for t in targets]),
+        ("mec_oracle_table",
+         lambda: [table.most_efficient_config(spec, t) for t in targets]),
+    ]:
+        r = _timed(fn, iters)
+        r["n"] *= len(targets)
+        r["seconds_per_decision"] /= len(targets)
+        r["decisions_per_s"] *= len(targets)
+        out.append({"name": name, **r})
+    return out
+
+
+def bench_mec_rapp(spec: FnSpec, batches: tuple) -> list:
+    """Cold RaPP config search: per-point jitted forwards (loop) vs one
+    forward_batch vmap per (spec, batch) lattice (table)."""
+    try:
+        import jax
+        from repro.core.rapp import predictor as P
+    except Exception as e:  # pragma: no cover - jax-less environments
+        print(f"# skipping RaPP entries (jax unavailable: {e})",
+              file=sys.stderr)
+        return []
+    params = P.init_params(jax.random.PRNGKey(0))
+
+    def cold_loop():
+        model = P.RaPPModel(params)
+        perf_model.most_efficient_config(spec, 20.0, predictor=model,
+                                         batches=batches)
+
+    def cold_table():
+        model = P.RaPPModel(params)
+        CapacityTable(predictor=model).most_efficient_config(
+            spec, 20.0, batches=batches)
+
+    cold_loop(), cold_table()  # jit-compile both paths outside the timing
+    out = []
+    for name, fn in [("mec_rapp_loop", cold_loop),
+                     ("mec_rapp_table", cold_table)]:
+        r = _timed(fn, 3)
+        out.append({"name": name, "batches": list(batches), **r})
+    return out
+
+
+def bench_scale(spec: FnSpec, fleet_pods: int, iters: int) -> dict:
+    """Full autoscale events against a standing fleet of `fleet_pods`
+    pods: capacity read + Algorithm 1 up/down decisions."""
+    recon = Reconfigurator(num_gpus=0, max_gpus=max(4, fleet_pods))
+    scaler = HybridAutoScaler(recon, cfg=AutoScalerConfig(cooldown_s=0.0))
+    for i in range(fleet_pods):
+        sm = (1, 2, 4, 8)[i % 4]
+        recon.place_pod(PodAlloc(fn_id=spec.fn_id, sm=sm, quota=0.5,
+                                 batch=8))
+    state = {"now": 0.0}
+
+    def one_event():
+        state["now"] += 1.0
+        c = scaler.capacity(spec)
+        # alternate above/below the triggers so up and down paths both run
+        r = c * (1.15 if int(state["now"]) % 2 else 0.4)
+        scaler.scale(state["now"], spec, r)
+
+    one_event()  # warm lattices
+    r = _timed(one_event, iters)
+    return {"name": f"scale_oracle_fleet{fleet_pods}",
+            "fleet_pods": fleet_pods, **r}
+
+
+def run(smoke: bool = False) -> dict:
+    spec = FnSpec(ARCHS[ARCH])
+    results = []
+    results += bench_mec_oracle(spec, iters=5 if smoke else 25)
+    results += bench_mec_rapp(spec, batches=(8,) if smoke else
+                              (1, 2, 4, 8, 16, 32))
+    for fleet in (8, 32) if smoke else (8, 64, 256):
+        results.append(bench_scale(spec, fleet,
+                                   iters=240 if smoke else 600))
+    return {"schema": "bench_control_plane/v1", "smoke": smoke,
+            "arch": ARCH, "results": results}
+
+
+CALIBRATION_ENTRY = "mec_oracle_loop"
+
+
+def check(report: dict, ref_path: str, factor: float,
+          cal_factor: float = 10.0) -> int:
+    """Fail on >factor decision-latency regression vs the reference.
+
+    Rates are normalized by each run's own `mec_oracle_loop` throughput
+    (pure numpy/python, so a stable proxy for raw machine speed): the
+    comparison is "how much slower than the scalar loop on the SAME
+    machine", which cancels the dev-machine-vs-CI-runner speed offset
+    that an absolute decisions/s comparison would trip over. The
+    calibration entry itself is therefore gated separately and more
+    generously (`cal_factor`): machine speeds legitimately differ a few
+    x, but a >cal_factor drop in the scalar loop means the shared
+    scalar path regressed — and would otherwise silently inflate every
+    normalized rate."""
+    with open(ref_path) as f:
+        ref = json.load(f)
+    if report.get("smoke") != ref.get("smoke"):
+        print(f"reference {ref_path} was generated with smoke="
+              f"{ref.get('smoke')} but this run used smoke="
+              f"{report.get('smoke')}: entries share names across modes "
+              f"but time different workloads; regenerate the reference "
+              f"in the matching mode (e.g. --smoke --update-ref)",
+              file=sys.stderr)
+        return 1
+    ref_by_name = {r["name"]: r for r in ref["results"]}
+    new_by_name = {r["name"]: r for r in report["results"]}
+    ref_cal = ref_by_name[CALIBRATION_ENTRY]["decisions_per_s"]
+    new_cal = new_by_name[CALIBRATION_ENTRY]["decisions_per_s"]
+    failures = []
+    cal_drift = ref_cal / max(new_cal, 1e-12)
+    print(f"      {CALIBRATION_ENTRY:<24} {new_cal:>12.1f} dec/s  "
+          f"(calibration; {cal_drift:.2f}x slower than reference)")
+    if cal_drift > cal_factor:
+        failures.append(CALIBRATION_ENTRY)
+    for r in report["results"]:
+        base = ref_by_name.get(r["name"])
+        if base is None or r["name"] == CALIBRATION_ENTRY:
+            continue
+        mismatch = [k for k in ("batches", "fleet_pods")
+                    if base.get(k) != r.get(k)]
+        if mismatch:
+            print(f"FAIL  {r['name']:<24} parameter mismatch vs reference:"
+                  f" {mismatch}", file=sys.stderr)
+            failures.append(r["name"])
+            continue
+        ref_rel = base["decisions_per_s"] / ref_cal
+        new_rel = r["decisions_per_s"] / max(new_cal, 1e-12)
+        slowdown = ref_rel / max(new_rel, 1e-12)
+        status = "FAIL" if slowdown > factor else "ok"
+        print(f"{status:>4}  {r['name']:<24} {r['decisions_per_s']:>12.1f}"
+              f" dec/s  ({slowdown:.2f}x slower than reference,"
+              f" machine-normalized)")
+        if slowdown > factor:
+            failures.append(r["name"])
+    if failures:
+        print(f"regression >{factor}x vs {ref_path}: {failures}",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fleets/iteration counts for CI")
+    ap.add_argument("--out", default="BENCH_control_plane.json")
+    ap.add_argument("--check", metavar="REF",
+                    help="fail on >factor regression vs this reference")
+    ap.add_argument("--factor", type=float, default=3.0)
+    ap.add_argument("--cal-factor", type=float, default=10.0,
+                    help="max tolerated slowdown of the calibration entry"
+                         " itself (machine drift vs scalar-path"
+                         " regression)")
+    ap.add_argument("--update-ref", action="store_true",
+                    help=f"also write the report to {REF_PATH}")
+    args = ap.parse_args(argv)
+
+    report = run(smoke=args.smoke)
+    for r in report["results"]:
+        print(f"{r['name']:<24} {r['decisions_per_s']:>12.1f} decisions/s"
+              f"  ({r['seconds_per_decision']*1e3:.3f} ms/decision)")
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}")
+    if args.update_ref:
+        with open(REF_PATH, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+        print(f"wrote {REF_PATH}")
+    if args.check:
+        return check(report, args.check, args.factor, args.cal_factor)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,7 +12,8 @@ import sys
 import numpy as np
 
 from repro.configs import ARCHS
-from repro.core import FnSpec, latency
+from repro.core import FnSpec
+from repro.core.perf_model import latency_lattice
 
 GRID_BATCHES = (1, 4, 16, 32)
 GRID_SM = (1, 2, 4, 8)
@@ -25,9 +26,13 @@ def run(arch: str = "gemma-7b", out=sys.stdout):
     print(f"# Fig4 latency grid: {arch} (ms)", file=out)
     print("batch,sm,quota,latency_ms", file=out)
     for b in GRID_BATCHES:
-        for sm in GRID_SM:
-            for q in GRID_QUOTA:
-                lat = latency(spec, b, sm, q) * 1e3
+        # one vectorized roofline lattice per batch (bitwise-identical
+        # to the scalar perf_model.latency loop it replaced)
+        tab = latency_lattice(spec, b, np.asarray(GRID_SM),
+                              np.asarray(GRID_QUOTA)) * 1e3
+        for i, sm in enumerate(GRID_SM):
+            for j, q in enumerate(GRID_QUOTA):
+                lat = float(tab[i, j])
                 rows.append((b, sm, q, lat))
                 print(f"{b},{sm},{q},{lat:.3f}", file=out)
 

@@ -5,56 +5,115 @@ quantifying what prediction error costs at the platform level.
 A fast RaPP is trained on a compact corpus, plugged into
 HybridAutoScaler(predictor=...), and compared against the oracle-driven
 scaler on the same trace.
+
+Trained weights are cached under results/cache/ keyed by every training
+input (corpus, batches, samples, seed, steps, model config), so only
+the first invocation pays the training cost — the paper trains RaPP
+offline once and serves it online, and reruns of this benchmark are
+about the control loop, not the optimizer. ``--retrain`` forces a
+fresh train.
 """
 from __future__ import annotations
 
+import hashlib
+import os
 import sys
+import time
 
 import numpy as np
 
 from repro.configs import ARCHS
 from repro.core import (ClusterSimulator, FnSpec, HybridAutoScaler,
                         Reconfigurator, SimConfig)
-from repro.core.rapp import RaPPModel, dataset as D, train as T
+from repro.core.rapp import RaPPConfig, RaPPModel, dataset as D, train as T
 from repro.workloads import standard_workload
 
+CORPUS = ("olmo-1b", "qwen2.5-3b", "gemma-7b")
+BATCHES = (1, 4, 8, 16)
+SAMPLES_PER_GRAPH = 14
 
-def run(duration=90.0, base_rps=20.0, out=sys.stdout, seed=0,
-        train_steps=600):
-    arch = "qwen2.5-3b"
-    spec = FnSpec(ARCHS[arch])
-    corpus = [ARCHS[a] for a in ("olmo-1b", "qwen2.5-3b", "gemma-7b")]
-    ds = D.generate(corpus, batches=(1, 4, 8, 16), samples_per_graph=14,
-                    seed=seed)
+
+def _train_rapp(seed: int, train_steps: int, retrain: bool,
+                cache_dir: str = "results/cache"):
+    """Train (or load) the benchmark's RaPP; returns (params, val MAPE)."""
+    import jax
+    tag = repr(("rapp_in_loop", CORPUS, BATCHES, SAMPLES_PER_GRAPH,
+                D.SMS, D.QUOTAS, seed, train_steps, T.TrainConfig(),
+                RaPPConfig()))
+    key = hashlib.blake2s(tag.encode(), digest_size=10).hexdigest()
+    path = os.path.join(cache_dir, f"rapp_{key}.npz")
+    template = T.params_template(seed)
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    if not retrain and os.path.exists(path):
+        try:
+            with np.load(path) as z:
+                loaded = [z[f"arr_{i}"] for i in range(len(leaves))]
+                mape = float(z["val_mape"])
+            ok = all(a.shape == np.shape(b)
+                     for a, b in zip(loaded, leaves))
+        except Exception as e:  # truncated/corrupt npz: retrain
+            print(f"# ignoring unreadable weight cache {path}: {e}",
+                  file=sys.stderr)
+            ok = False
+        if ok:
+            return jax.tree_util.tree_unflatten(treedef, loaded), mape
+    corpus = [ARCHS[a] for a in CORPUS]
+    ds = D.generate(corpus, batches=BATCHES,
+                    samples_per_graph=SAMPLES_PER_GRAPH, seed=seed)
     tr, va, te = D.split(ds, holdout_archs=())
     params = T.train(tr, va, cfg=T.TrainConfig(steps=train_steps,
                                                log_every=10**9),
                      verbose=False)
     mape = T.evaluate(params, va)
+    os.makedirs(cache_dir, exist_ok=True)
+    flat, _ = jax.tree_util.tree_flatten(params)
+    # temp-file + rename so an interrupted write never leaves a
+    # truncated cache behind (the file handle keeps np.savez from
+    # appending .npz to the temp name)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, *[np.asarray(x) for x in flat],
+                 val_mape=np.float64(mape))
+    os.replace(tmp, path)
+    return params, mape
+
+
+def run(duration=90.0, base_rps=20.0, out=sys.stdout, seed=0,
+        train_steps=600, retrain=False):
+    arch = "qwen2.5-3b"
+    spec = FnSpec(ARCHS[arch])
+    t_train = time.perf_counter()
+    params, mape = _train_rapp(seed, train_steps, retrain)
+    train_wall = time.perf_counter() - t_train
     rapp = RaPPModel(params)
 
     arr = standard_workload(duration, base_rps, seed=seed + 3)
     print("# RaPP-in-the-loop vs oracle predictor", file=out)
-    print("predictor,cost_per_1k,p95_ms,viol@2x", file=out)
+    print("predictor,cost_per_1k,p95_ms,viol@2x,sim_wall_s", file=out)
     rows = {}
+    walls = {}
     for name, predictor in [("oracle", None), ("rapp", rapp)]:
         recon = Reconfigurator(num_gpus=0, max_gpus=48)
         scaler = HybridAutoScaler(recon, predictor=predictor)
+        t0 = time.perf_counter()
         scaler.prewarm(spec, base_rps)
         res = ClusterSimulator(spec, scaler, recon, arr,
                                SimConfig(duration_s=duration,
                                          seed=seed)).run()
+        walls[name] = time.perf_counter() - t0
         v = res.violations([2.0])[2.0]
         print(f"{name},{res.cost_per_1k:.5f},{res.pcts['p95']*1e3:.1f},"
-              f"{v:.4f}", file=out)
+              f"{v:.4f},{walls[name]:.2f}", file=out)
         rows[name] = (res.cost_per_1k, v)
     derived = (f"rapp_val_mape={mape:.1f}%;"
                f"oracle_viol@2x={rows['oracle'][1]:.3f};"
                f"rapp_viol@2x={rows['rapp'][1]:.3f};"
-               f"cost_ratio={rows['rapp'][0]/max(rows['oracle'][0],1e-12):.2f}x")
+               f"cost_ratio={rows['rapp'][0]/max(rows['oracle'][0],1e-12):.2f}x;"
+               f"train_wall_s={train_wall:.2f};"
+               f"rapp_sim_wall_s={walls['rapp']:.2f}")
     return rows["rapp"][0] * 1e6, derived
 
 
 if __name__ == "__main__":
-    us, derived = run()
+    us, derived = run(retrain="--retrain" in sys.argv)
     print(f"rapp_in_loop,{us:.2f},{derived}")

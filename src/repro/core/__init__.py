@@ -8,6 +8,7 @@ from repro.core.autoscaler import (AutoScalerConfig, HybridAutoScaler,
                                    ScalingAction)
 from repro.core.baselines import (FaSTGShareLikeConfig, FaSTGShareLikePolicy,
                                   KServeLikeConfig, KServeLikePolicy)
+from repro.core.capacity import CapacityTable, shared_table
 from repro.core.kalman import KalmanPredictor, LastValuePredictor
 from repro.core.metrics import RunMetrics, baseline_batch_of
 from repro.core.perf_model import (FnSpec, cost_rate, exec_time, latency,
@@ -24,6 +25,7 @@ __all__ = [
     "AutoScalerConfig", "HybridAutoScaler", "ScalingAction",
     "FaSTGShareLikeConfig", "FaSTGShareLikePolicy",
     "KServeLikeConfig", "KServeLikePolicy",
+    "CapacityTable", "shared_table",
     "KalmanPredictor", "LastValuePredictor",
     "RunMetrics", "baseline_batch_of",
     "FnSpec", "cost_rate", "exec_time", "latency", "most_efficient_config",

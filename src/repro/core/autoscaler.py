@@ -9,6 +9,12 @@ keeping one pod alive (no scale-to-zero => no cold start).
 
 The latency predictor is pluggable: the trained RaPP model or the
 roofline oracle (both expose lat(spec, batch, sm, quota) seconds).
+Either way the scaler consumes it through a `CapacityTable`
+(core/capacity.py): per-(spec, batch) (sm x quota) latency lattices
+filled in one batched call, so a scaling decision is argmin/lookup work
+instead of ~480 scalar predictor queries; per-function capacity C_f is
+maintained incrementally by the Reconfigurator instead of re-invoking
+the predictor for every pod at every autoscale event.
 """
 from __future__ import annotations
 
@@ -16,7 +22,7 @@ import dataclasses
 import math
 from typing import Callable, Dict, List, Optional
 
-from repro.core import perf_model
+from repro.core import capacity as capacity_mod
 from repro.core.kalman import KalmanPredictor
 from repro.core.perf_model import FnSpec
 from repro.core.reconfigurator import Reconfigurator
@@ -55,23 +61,36 @@ class HybridAutoScaler:
         self.recon = recon
         self.cfg = cfg
         self.window_ms = window_ms
-        self.predict_latency = predictor or (
-            lambda spec, b, sm, q: perf_model.latency(
-                spec, b, sm, q, window_ms=window_ms))
+        if predictor is None:
+            self.table = capacity_mod.shared_table(cfg.quota_step, window_ms)
+        else:
+            self.table = capacity_mod.CapacityTable(
+                predictor, quota_step=cfg.quota_step, window_ms=window_ms)
+        self.predict_latency = self.table.lat
         self.kalman: Dict[str, KalmanPredictor] = {}
         self.last_scale_down: Dict[str, float] = {}
+        self._cap_models: Dict[str, Callable] = {}
 
     # ---- throughput helpers ------------------------------------------------
     def thpt(self, spec: FnSpec, batch: int, sm: int, quota: float) -> float:
-        return batch / (self.predict_latency(spec, batch, sm, quota)
+        return batch / (self.table.lat(spec, batch, sm, quota)
                         + self.cfg.service_overhead_s)
 
     def pod_thpt(self, spec: FnSpec, pod: PodAlloc) -> float:
         return self.thpt(spec, pod.batch, pod.sm, pod.quota)
 
+    def _ensure_capacity_model(self, spec: FnSpec) -> None:
+        model = self._cap_models.get(spec.fn_id)
+        if model is None:
+            model = self._cap_models[spec.fn_id] = (
+                lambda p, _s=spec: self.thpt(_s, p.batch, p.sm, p.quota))
+        # no-op when already installed; re-registers (and recomputes
+        # contributions) if another scaler on the same cluster took over
+        self.recon.register_capacity_model(spec.fn_id, model)
+
     def capacity(self, spec: FnSpec) -> float:
-        return sum(self.pod_thpt(spec, p)
-                   for p in self.recon.pods_of(spec.fn_id))
+        self._ensure_capacity_model(spec)
+        return self.recon.fn_capacity(spec.fn_id)
 
     # ---- main entry ----------------------------------------------------------
     def tick(self, now: float, spec: FnSpec,
@@ -87,7 +106,7 @@ class HybridAutoScaler:
         if not pods:
             actions += self._bootstrap(now, spec, max(R, cfg.r_min))
             return actions
-        c_f = sum(self.pod_thpt(spec, p) for p in pods)
+        c_f = self.capacity(spec)
 
         if R > c_f * cfg.alpha:                      # ---- scale UP
             delta = R - c_f * cfg.alpha
@@ -111,10 +130,9 @@ class HybridAutoScaler:
 
     # ---- bootstrap -----------------------------------------------------------
     def _bootstrap(self, now, spec, target_rps) -> List[ScalingAction]:
-        b, sm, q = perf_model.most_efficient_config(
-            spec, target_rps, predictor=self.predict_latency,
-            quota_step=self.cfg.quota_step,
-            slo_multiplier=self.cfg.slo_multiplier)
+        self._ensure_capacity_model(spec)
+        b, sm, q = self.table.most_efficient_config(
+            spec, target_rps, slo_multiplier=self.cfg.slo_multiplier)
         gpu = self._gpu_with_room(sm, q)
         pod = PodAlloc(fn_id=spec.fn_id, sm=sm, quota=q, batch=b)
         cold = (self.cfg.cold_start_s if gpu is not None
@@ -170,9 +188,8 @@ class HybridAutoScaler:
         c_max = self.thpt(spec, b, s_max, q_max)
         if c_max <= delta:
             return delta, actions  # used GPUs can't close the gap; go new
-        q_floor = perf_model.min_quota_for_slo(
-            spec, b, s_max, self.cfg.slo_multiplier, self.cfg.quota_step,
-            self.predict_latency)
+        q_floor = self.table.min_quota_for_slo(
+            spec, b, s_max, self.cfg.slo_multiplier)
         if q_floor is None or q_floor > q_max + 1e-9:
             return delta, actions  # no SLO-satisfying slot on used GPUs
         step = self.cfg.quota_step
@@ -205,10 +222,8 @@ class HybridAutoScaler:
     def _horizontal_up_new(self, now, spec, delta):
         actions = []
         while delta > 0:
-            b, sm, q = perf_model.most_efficient_config(
-                spec, delta, predictor=self.predict_latency,
-                quota_step=self.cfg.quota_step,
-                slo_multiplier=self.cfg.slo_multiplier)
+            b, sm, q = self.table.most_efficient_config(
+                spec, delta, slo_multiplier=self.cfg.slo_multiplier)
             pod = PodAlloc(fn_id=spec.fn_id, sm=sm, quota=q, batch=b)
             try:
                 self.recon.place_pod(pod, None, now=now,
@@ -240,9 +255,9 @@ class HybridAutoScaler:
                 continue
             # vertical scale-down: shed quota stepwise (never below the
             # SLO-satisfying floor for this pod's (batch, sm))
-            q_floor = perf_model.min_quota_for_slo(
-                spec, pod.batch, pod.sm, self.cfg.slo_multiplier,
-                step, self.predict_latency) or self.cfg.min_quota
+            q_floor = self.table.min_quota_for_slo(
+                spec, pod.batch, pod.sm,
+                self.cfg.slo_multiplier) or self.cfg.min_quota
             floor = max(self.cfg.min_quota, q_floor)
             n = 0
             while pod.quota - step * (n + 1) >= floor - 1e-9:

@@ -8,6 +8,9 @@
   efficiency, but scaling is horizontal-only (no quota reallocation).
 
 Both run in the same simulator/cluster as HAS — only the policy differs.
+Like the hybrid scaler, both consume the roofline physics through the
+shared `CapacityTable` lattices (core/capacity.py) rather than scalar
+`perf_model` queries.
 """
 from __future__ import annotations
 
@@ -15,10 +18,10 @@ import dataclasses
 import math
 from typing import Dict
 
-from repro.core import perf_model
+from repro.core import capacity as capacity_mod
 from repro.core.perf_model import FnSpec
 from repro.core.reconfigurator import Reconfigurator
-from repro.core.vgpu import PodAlloc, TOTAL_SLICES
+from repro.core.vgpu import DEFAULT_WINDOW_MS, PodAlloc, TOTAL_SLICES
 
 
 @dataclasses.dataclass
@@ -37,11 +40,12 @@ class KServeLikePolicy:
         self.recon = recon
         self.cfg = cfg
         self.window_ms = window_ms
+        self.table = capacity_mod.shared_table(window_ms=window_ms)
         self._below_since: Dict[str, float] = {}
 
     def pod_thpt(self, spec: FnSpec) -> float:
-        return perf_model.throughput(spec, self.cfg.default_batch,
-                                     TOTAL_SLICES, 1.0, self.window_ms)
+        return self.table.throughput(spec, self.cfg.default_batch,
+                                     TOTAL_SLICES, 1.0)
 
     def prewarm(self, spec: FnSpec, expected_rps: float):
         import math as _m
@@ -101,23 +105,28 @@ class FaSTGShareLikePolicy:
         self.recon = recon
         self.cfg = cfg
         self.window_ms = window_ms
-        self._fixed: Dict[str, tuple] = {}
+        self.table = capacity_mod.shared_table(window_ms=window_ms)
         self._below_since: Dict[str, float] = {}
+        self._fixed: Dict[str, tuple] = {}
 
     def fixed_config(self, spec: FnSpec) -> tuple:
         # FaST-GShare picks the most throughput-efficient FIXED config;
         # efficiency favors full temporal occupancy of its partition
         # (window quantization penalizes fractional quotas), so the fixed
-        # unit is (batch, sm, quota=1.0).
+        # unit is (batch, sm, quota=1.0). The whole-quota lattice
+        # (quota_step=1.0, default window — the grid the offline pick
+        # always used) resolves it in one table lookup.
         if spec.fn_id not in self._fixed:
-            self._fixed[spec.fn_id] = perf_model.most_efficient_config(
-                spec, self.cfg.unit_rps, slo_multiplier=2.0, quota_step=1.0)
+            self._fixed[spec.fn_id] = capacity_mod.shared_table(
+                quota_step=1.0, window_ms=DEFAULT_WINDOW_MS
+            ).most_efficient_config(spec, self.cfg.unit_rps,
+                                    slo_multiplier=2.0)
         return self._fixed[spec.fn_id]
 
     def prewarm(self, spec: FnSpec, expected_rps: float):
         import math as _m
         b, sm, q = self.fixed_config(spec)
-        cap = perf_model.throughput(spec, b, sm, q, self.window_ms)
+        cap = self.table.throughput(spec, b, sm, q)
         n = max(self.cfg.min_replicas,
                 _m.ceil(expected_rps /
                         max(cap * self.cfg.target_utilization, 1e-9)))
@@ -131,7 +140,7 @@ class FaSTGShareLikePolicy:
 
     def tick(self, now: float, spec: FnSpec, observed_rps: float):
         b, sm, q = self.fixed_config(spec)
-        cap = perf_model.throughput(spec, b, sm, q, self.window_ms)
+        cap = self.table.throughput(spec, b, sm, q)
         pods = self.recon.pods_of(spec.fn_id)
         desired = max(self.cfg.min_replicas,
                       math.ceil(observed_rps /

@@ -1,0 +1,169 @@
+"""Config-lattice capacity tables: the vectorized control plane.
+
+The hybrid autoscaler's decisions search a fine-grained (batch, sm,
+quota) configuration space: ``most_efficient_config`` alone enumerates
+~480 points per scaling decision, each of which used to be a separate
+scalar predictor call — a separate single-sample jitted GAT forward when
+RaPP is in the loop. `CapacityTable` replaces those scalar queries with
+precomputed lattices: for each (spec, batch) pair the full (sm x quota)
+grid is filled in ONE batched call —
+
+  * oracle:  the numpy-vectorized roofline lattice
+    (`perf_model.latency_lattice`), bitwise identical to the scalar
+    `perf_model.latency` so golden traces are unchanged;
+  * RaPP:    one `forward_batch` vmap invocation over all lattice
+    points (`RaPPModel.predict_lattice`) — a single device round-trip
+    instead of ~480;
+  * anything else exposing ``lat(spec, b, sm, q)``: a cached scalar
+    fill, preserving the pluggable-predictor protocol.
+
+`most_efficient_config` / `min_quota_for_slo` then become masked
+argmin/argmax lookups over the cached tables, replicating the reference
+triple loop's scan order and strict-inequality tie-breaking exactly
+(first maximal/minimal point in (batch, sm, quota) C-order wins), so the
+table-backed versions return the identical (b, sm, q) tuples —
+tests/test_capacity.py pins this across every registered architecture.
+
+Off-lattice quotas (vertical scaling accumulates ``quota + n*step``
+float sums that are not bitwise lattice points) fall back to the exact
+scalar path and are memoized, so correctness never depends on grid
+snapping.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core import perf_model
+from repro.core.perf_model import FnSpec
+from repro.core.vgpu import DEFAULT_WINDOW_MS, TOTAL_SLICES
+
+DEFAULT_BATCHES = (1, 2, 4, 8, 16, 32)
+
+
+class CapacityTable:
+    """Cached (sm x quota) latency lattices per (spec, batch), plus the
+    table-backed control-plane queries. Exposes the same
+    ``lat(spec, b, sm, q) -> seconds`` protocol as the predictors it
+    wraps, so policies can consume it transparently."""
+
+    def __init__(self, predictor: Optional[Callable] = None,
+                 quota_step: float = 0.1,
+                 window_ms: float = DEFAULT_WINDOW_MS):
+        self.predictor = predictor
+        self.quota_step = quota_step
+        self.window_ms = window_ms
+        self.sms = np.arange(1, TOTAL_SLICES + 1)
+        self.quotas = perf_model.quota_grid(quota_step)
+        # cost is predictor-independent: one (S, Q) grid for the table
+        self._cost = perf_model.cost_rate_lattice(self.sms, self.quotas)
+        self._lattices: Dict[Tuple, np.ndarray] = {}
+        self._scalar: Dict[Tuple, float] = {}
+
+    # ---- lattice fill ------------------------------------------------------
+    def lattice(self, spec: FnSpec, batch: int) -> np.ndarray:
+        """(S, Q) latency seconds for every lattice point, one batched
+        evaluation per (spec, batch), cached forever."""
+        key = (spec, batch)
+        tab = self._lattices.get(key)
+        if tab is None:
+            if self.predictor is None:
+                tab = perf_model.latency_lattice(
+                    spec, batch, self.sms, self.quotas, self.window_ms)
+            elif hasattr(self.predictor, "predict_lattice"):
+                tab = np.asarray(self.predictor.predict_lattice(
+                    spec, batch, self.sms, self.quotas), dtype=np.float64)
+            else:  # arbitrary scalar predictor: cached loop fill
+                tab = np.array(
+                    [[self.predictor(spec, batch, int(sm), float(q))
+                      for q in self.quotas] for sm in self.sms],
+                    dtype=np.float64)
+            self._lattices[key] = tab
+        return tab
+
+    # ---- predictor protocol ------------------------------------------------
+    def _scalar_lat(self, spec: FnSpec, b: int, sm: int, q: float) -> float:
+        key = (spec, b, sm, q)
+        v = self._scalar.get(key)
+        if v is None:
+            if self.predictor is None:
+                v = perf_model.latency(spec, b, sm, q,
+                                       window_ms=self.window_ms)
+            else:
+                v = self.predictor(spec, b, sm, q)
+            self._scalar[key] = v
+        return v
+
+    def lat(self, spec: FnSpec, b: int, sm: int, q: float) -> float:
+        """Latency lookup: lattice hit when q is bitwise on-grid, exact
+        scalar fallback (cached) otherwise."""
+        qi = int(round(q / self.quota_step))
+        if 1 <= qi <= len(self.quotas) and q == self.quotas[qi - 1]:
+            return float(self.lattice(spec, b)[sm - 1, qi - 1])
+        return self._scalar_lat(spec, b, sm, q)
+
+    __call__ = lat
+
+    def throughput(self, spec: FnSpec, b: int, sm: int, q: float,
+                   overhead_s: float = 0.0) -> float:
+        return b / (self.lat(spec, b, sm, q) + overhead_s)
+
+    # ---- table-backed control-plane queries --------------------------------
+    def most_efficient_config(self, spec: FnSpec, target_rps: float,
+                              batches=DEFAULT_BATCHES,
+                              slo_multiplier: Optional[float] = 2.0
+                              ) -> tuple:
+        """Table-backed `perf_model.most_efficient_config`: masked argmin
+        over the stacked (B, S, Q) lattice, identical result tuple."""
+        lat = np.stack([self.lattice(spec, b) for b in batches])  # (B,S,Q)
+        caps = np.array([slo_multiplier * perf_model.slo_baseline(spec, b)
+                         if slo_multiplier else np.inf for b in batches])
+        valid = lat <= caps[:, None, None]
+        barr = np.asarray(batches, dtype=np.float64)
+        thpt = barr[:, None, None] / lat
+        best = None
+        eligible = valid & (thpt >= target_rps)
+        if eligible.any():
+            # strict `<` in the reference loop keeps the FIRST minimal-
+            # cost point in scan order; argmin over C-order does the same
+            cost = np.broadcast_to(self._cost, lat.shape)
+            masked = np.where(eligible, cost, np.inf)
+            bi, si, qi = np.unravel_index(np.argmin(masked), lat.shape)
+            best = (batches[bi], int(self.sms[si]), float(self.quotas[qi]))
+        if best is None and valid.any():
+            # fallback: most capable SLO-satisfying config (first maximal
+            # throughput in scan order, matching strict `>`)
+            masked = np.where(valid, thpt, -np.inf)
+            bi, si, qi = np.unravel_index(np.argmax(masked), lat.shape)
+            best = (batches[bi], int(self.sms[si]), float(self.quotas[qi]))
+        return best or (batches[-1], TOTAL_SLICES, 1.0)
+
+    def min_quota_for_slo(self, spec: FnSpec, batch: int, sm: int,
+                          slo_multiplier: float = 2.0) -> Optional[float]:
+        """Smallest on-grid quota at which (batch, sm) meets the SLO."""
+        cap = slo_multiplier * perf_model.slo_baseline(spec, batch)
+        ok = self.lattice(spec, batch)[sm - 1] <= cap
+        if not ok.any():
+            return None
+        return float(self.quotas[int(np.argmax(ok))])
+
+
+# ---- shared oracle tables ---------------------------------------------------
+# The oracle lattices are pure functions of (spec, batch, quota_step,
+# window_ms); sharing one table per (quota_step, window_ms) across the
+# autoscaler, the baselines, and the event engine means each lattice is
+# built once per process.
+_SHARED: Dict[Tuple[float, float], CapacityTable] = {}
+
+
+def shared_table(quota_step: float = 0.1,
+                 window_ms: float = DEFAULT_WINDOW_MS) -> CapacityTable:
+    """Process-wide oracle `CapacityTable` for (quota_step, window_ms)."""
+    key = (quota_step, window_ms)
+    tab = _SHARED.get(key)
+    if tab is None:
+        tab = _SHARED[key] = CapacityTable(predictor=None,
+                                           quota_step=quota_step,
+                                           window_ms=window_ms)
+    return tab

@@ -39,6 +39,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.core import capacity as capacity_mod
 from repro.core import perf_model
 from repro.core.cost import CostMeter
 from repro.core.perf_model import FnSpec
@@ -138,7 +139,15 @@ class EventEngine:
         self._heap: list = []
         self._seq = itertools.count()
         self._thpt_cache: Dict[tuple, float] = {}
-        self._service_cache: Dict[tuple, float] = {}
+        # service times read the shared oracle lattice tables — pod
+        # configs straight off the control plane's grid are a lattice
+        # hit; off-grid quotas (accumulated vertical steps) take the
+        # table's exact scalar fallback. Dispatch-order throughput uses
+        # the default-window table (the ordering metric has always been
+        # window-independent of the cluster's window_ms).
+        self._svc_table = capacity_mod.shared_table(
+            window_ms=recon.window_ms)
+        self._ord_table = capacity_mod.shared_table()
         self._cost_rates = self.cost.rates(recon)
 
     # ---- event queue -------------------------------------------------------
@@ -150,19 +159,15 @@ class EventEngine:
         key = (st.fid, pod.batch, pod.sm, pod.quota)
         v = self._thpt_cache.get(key)
         if v is None:
-            v = perf_model.throughput(st.spec, pod.batch, pod.sm, pod.quota)
+            v = self._ord_table.throughput(st.spec, pod.batch, pod.sm,
+                                           pod.quota)
             self._thpt_cache[key] = v
         return v
 
     def _service(self, st: FunctionState, batch: int, pod) -> float:
-        """One batch's service time: cached deterministic wall-clock for
-        (fn, batch, sm, quota) times a fresh lognormal noise draw."""
-        key = (st.fid, batch, pod.sm, pod.quota)
-        det = self._service_cache.get(key)
-        if det is None:
-            det = perf_model.latency(st.spec, batch, pod.sm, pod.quota,
-                                     window_ms=self.recon.window_ms)
-            self._service_cache[key] = det
+        """One batch's service time: the deterministic wall-clock from
+        the shared lattice table times a fresh lognormal noise draw."""
+        det = self._svc_table.lat(st.spec, batch, pod.sm, pod.quota)
         return det * float(self.rng.lognormal(
             mean=0.0, sigma=perf_model.SERVICE_NOISE_SIGMA))
 

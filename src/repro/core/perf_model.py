@@ -138,6 +138,64 @@ def cost_rate(sm: int, quota: float, price_per_hour: float = 2.48) -> float:
     return price_per_hour / 3600.0 * (sm / TOTAL_SLICES) * quota
 
 
+# ---- vectorized config-lattice forms ---------------------------------------
+# Array counterparts of the scalar physics above, used by the control
+# plane's CapacityTable (core/capacity.py). Each mirrors its scalar twin
+# operation-for-operation so the results are BITWISE identical — the
+# autoscaler's golden traces depend on `lat > cap`-style comparisons and
+# must not move by even one ulp when the lattice replaces the loop
+# (tests/test_capacity.py pins exact equality).
+
+def quota_grid(quota_step: float = 0.1) -> np.ndarray:
+    """The quota values the control-plane loops enumerate: qi * step for
+    qi = 1..round(1/step), with the loop's exact float arithmetic."""
+    nq = int(round(1.0 / quota_step))
+    return np.array([qi * quota_step for qi in range(1, nq + 1)])
+
+
+def exec_time_lattice(spec: FnSpec, batch: int,
+                      sms: np.ndarray) -> np.ndarray:
+    """Vectorized `exec_time` over an array of SM partition sizes."""
+    sms = np.asarray(sms, dtype=np.float64)
+    frac = sms / TOTAL_SLICES
+    eff = batch / (batch + 2.0 * sms)          # mxu_efficiency, b_half=2*sm
+    compute = fn_flops(spec, batch) / (frac * PEAK_FLOPS * eff)
+    memory = fn_bytes(spec, batch) / (frac * HBM_BW)
+    return np.maximum(compute, memory) + 0.25e-3
+
+
+def latency_lattice(spec: FnSpec, batch: int, sms: np.ndarray,
+                    quotas: np.ndarray,
+                    window_ms: float = DEFAULT_WINDOW_MS) -> np.ndarray:
+    """Vectorized `latency` over the (sm x quota) lattice -> (S, Q)."""
+    t = exec_time_lattice(spec, batch, sms)[:, None]         # (S, 1)
+    w = window_ms / 1e3
+    q = np.minimum(np.maximum(np.asarray(quotas, np.float64), 1e-3),
+                   1.0)[None, :]                             # (1, Q)
+    owned = q * w
+    with np.errstate(divide="ignore"):
+        full = np.floor(t / owned)
+    rem = t - full * owned
+    return np.where(q >= 1.0 - 1e-9, t, full * w + rem)
+
+
+def throughput_lattice(spec: FnSpec, batch: int, sms: np.ndarray,
+                       quotas: np.ndarray,
+                       window_ms: float = DEFAULT_WINDOW_MS,
+                       overhead_s: float = 0.0) -> np.ndarray:
+    """Vectorized `throughput` over the (sm x quota) lattice -> (S, Q)."""
+    return batch / (latency_lattice(spec, batch, sms, quotas, window_ms)
+                    + overhead_s)
+
+
+def cost_rate_lattice(sms: np.ndarray, quotas: np.ndarray,
+                      price_per_hour: float = 2.48) -> np.ndarray:
+    """Vectorized `cost_rate` over the (sm x quota) lattice -> (S, Q)."""
+    sms = np.asarray(sms, dtype=np.float64)
+    return (price_per_hour / 3600.0
+            * (sms[:, None] / TOTAL_SLICES) * np.asarray(quotas)[None, :])
+
+
 def most_efficient_config(spec: FnSpec, target_rps: float,
                           predictor=None,
                           batches=(1, 2, 4, 8, 16, 32),

@@ -9,6 +9,7 @@ retrains; `with_runtime=False` reproduces exactly that).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Optional
 
 import jax
@@ -60,6 +61,12 @@ def forward_one(params, node_feats, adj, mask, global_feats, prior=0.0):
 
 forward_batch = jax.vmap(forward_one, in_axes=(None, 0, 0, 0, 0, 0))
 
+# config-lattice variant: one graph, many (sm, quota) points — node
+# features / adjacency / mask are shared (in_axes=None), only global
+# features and priors carry the per-point configuration
+forward_lattice = jax.vmap(forward_one,
+                           in_axes=(None, None, None, None, 0, 0))
+
 
 def predict_latency_ms(params, batch_dict):
     """batch_dict of stacked tensorized samples -> latency in ms."""
@@ -69,35 +76,94 @@ def predict_latency_ms(params, batch_dict):
     return jnp.expm1(jnp.maximum(logl, 0.0)) + 1e-6
 
 
+_GRAPH_CACHE = {}   # (arch name, batch, seq) -> coarsened OpGraph
+
+
+def _profile_rng(seed: int, arch_name: str, batch: int, seq: int
+                 ) -> np.random.Generator:
+    """Profiling-noise generator derived from the query key.
+
+    The profile noise models *measurement* jitter, so it must be a
+    fixed property of what was profiled — a shared generator made
+    predicted latencies depend on query ORDER. The profiles are
+    measured once per (arch, batch) and reused for every queried
+    (sm, quota), exactly like the paper's runtime profiler, so the
+    seed covers the (arch, batch) part of the query key. blake2s (not
+    Python `hash`, which is salted per process) keys the stream
+    stably."""
+    tag = f"{seed}|{arch_name}|{batch}|{seq}"
+    digest = hashlib.blake2s(tag.encode(), digest_size=8).digest()
+    return np.random.default_rng(int.from_bytes(digest, "little"))
+
+
 class RaPPModel:
     """Trained-weights wrapper exposing the autoscaler predictor protocol:
-    lat(spec, batch, sm, quota) -> seconds."""
+    lat(spec, batch, sm, quota) -> seconds.
+
+    Scalar queries run one jitted `forward_one`; the control plane's
+    CapacityTable instead calls `predict_lattice`, which tensorizes every
+    (sm, quota) lattice point into stacked arrays and runs ONE
+    `forward_batch` vmap — a single device round-trip per (spec, batch)
+    instead of one per lattice point."""
+
+    # shared across instances so fresh models reuse XLA compilations
+    _jit = staticmethod(jax.jit(forward_one))
+    _jit_lattice = staticmethod(jax.jit(forward_lattice))
 
     def __init__(self, params, cfg: RaPPConfig = RaPPConfig(), seed: int = 0):
         self.params = params
         self.cfg = cfg
-        self._graphs = {}
-        self._rng = np.random.default_rng(seed)
-        self._jit = jax.jit(forward_one)
+        self.seed = seed
         self._cache = {}
+        self._shared = {}   # (arch name, batch) -> shared tensorization
 
     def _graph(self, spec, batch):
-        key = (spec.arch.name, batch)
-        if key not in self._graphs:
-            from repro.configs import reduced
-            self._graphs[key] = F.extract_graph(spec.arch, batch,
-                                                seq=spec.seq)
-        return self._graphs[key]
+        key = (spec.arch.name, batch, spec.seq)
+        if key not in _GRAPH_CACHE:
+            # coarsen once at extraction: tensorize's fit-check then
+            # short-circuits on every lattice point; cached process-wide
+            # (graphs are pure functions of (arch, batch, seq))
+            g = F.extract_graph(spec.arch, batch, seq=spec.seq)
+            _GRAPH_CACHE[key] = F._coarsen(g, F.MAX_NODES)
+        return _GRAPH_CACHE[key]
+
+    def _shared_tensors(self, spec, batch):
+        key = (spec.arch.name, batch, spec.seq)
+        if key not in self._shared:
+            rng = _profile_rng(self.seed, spec.arch.name, batch, spec.seq)
+            self._shared[key] = F.tensorize_shared(
+                self._graph(spec, batch), spec, batch, rng,
+                with_runtime=self.cfg.with_runtime)
+        return self._shared[key]
 
     def __call__(self, spec, batch, sm, quota) -> float:
-        key = (spec.arch.name, batch, sm, round(quota, 3))
+        key = (spec.arch.name, batch, spec.seq, sm, round(quota, 3))
         if key in self._cache:
             return self._cache[key]
-        g = self._graph(spec, batch)
-        t = F.tensorize(g, spec, batch, sm, quota, self._rng,
-                        with_runtime=self.cfg.with_runtime)
-        logl = self._jit(self.params, t["node_feats"], t["adj"], t["mask"],
-                         t["global"], t["prior"])
+        sh = self._shared_tensors(spec, batch)
+        g, prior = F._assemble(sh, sm, quota)
+        logl = self._jit(self.params, sh["node_feats"], sh["adj"],
+                         sh["mask"], g, prior)
         lat_s = float(np.expm1(max(float(logl), 0.0)) + 1e-6) / 1e3
         self._cache[key] = lat_s
         return lat_s
+
+    def predict_lattice(self, spec, batch, sms, quotas) -> np.ndarray:
+        """(len(sms), len(quotas)) latency seconds for the full lattice,
+        evaluated in one batched forward pass."""
+        points = [(int(sm), float(q)) for sm in sms for q in quotas]
+        sh = self._shared_tensors(spec, batch)
+        t = F.tensorize_lattice(None, spec, batch, points, None,
+                                shared=sh)
+        logl = np.asarray(self._jit_lattice(
+            self.params, t["node_feats"], t["adj"], t["mask"],
+            t["global"], t["prior"]))
+        lat_s = (np.expm1(np.maximum(logl.astype(np.float64), 0.0))
+                 + 1e-6) / 1e3
+        for (sm, q), v in zip(points, lat_s):
+            # first writer wins so scalar and lattice paths never
+            # disagree about an already-served key
+            self._cache.setdefault(
+                (spec.arch.name, batch, spec.seq, sm, round(q, 3)),
+                float(v))
+        return lat_s.reshape(len(sms), len(quotas))

@@ -31,6 +31,13 @@ def _batch_of(ds, idx):
             "prior": jnp.asarray(ds.priors[idx])}
 
 
+def params_template(seed: int = 0,
+                    rapp_cfg: P.RaPPConfig = P.RaPPConfig()):
+    """Parameter tree with the training-time structure — used to
+    restore checkpoints saved as flattened leaves."""
+    return P.init_params(jax.random.PRNGKey(seed), rapp_cfg)
+
+
 def mape(pred_ms: np.ndarray, true_ms: np.ndarray) -> float:
     return float(np.mean(np.abs(pred_ms - true_ms)
                          / np.maximum(true_ms, 1e-6)) * 100.0)

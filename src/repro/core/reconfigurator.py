@@ -5,15 +5,31 @@ UUID via NVML so the auto-scaler can target specific chips and rewrite
 pods' resource device-files at runtime. Here it owns the authoritative
 map uuid -> VirtualGPU, performs placements/removals/quota rewrites, and
 exposes the occupancy views (HGO) the auto-scaler reads.
+
+Cluster-state reads are indexed for the control plane's hot path:
+
+  * pod -> GPU and pod -> PodAlloc maps make `gpu_of_pod` (and thus
+    `set_quota` / `remove_pod`) O(1) instead of a scan over every pod
+    of every GPU;
+  * a fn -> {gpu: pod count} index lets `pods_of` touch only the GPUs
+    actually hosting that function — while still returning pods in the
+    exact order the original full scan produced (GPUs in creation
+    order, pods in partition order), because policies tie-break sorts
+    on that order and the golden traces pin it;
+  * per-function capacity is maintained incrementally: a policy
+    registers a throughput model (pod -> RPS) once per function and
+    every place/remove/set_quota updates that pod's cached
+    contribution, so `fn_capacity` costs one short ordered sum with
+    ZERO predictor calls per autoscale event. (The sum itself is
+    re-folded in pod order rather than kept as a running float so the
+    result is bitwise identical to the naive re-summation.)
 """
 from __future__ import annotations
 
 import itertools
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 from repro.core.vgpu import PodAlloc, VirtualGPU
-
-_gpu_counter = itertools.count()
 
 
 class Reconfigurator:
@@ -23,6 +39,17 @@ class Reconfigurator:
         self.window_ms = window_ms
         self.gpus_per_node = gpus_per_node
         self.max_gpus = max_gpus
+        # per-instance counter: GPU uuids are a function of this
+        # cluster's own history, not of how many Reconfigurators the
+        # process created before it (a module-level count made runs
+        # irreproducible within one process)
+        self._gpu_counter = itertools.count()
+        # ---- hot-path indexes ----
+        self._pods: Dict[str, PodAlloc] = {}          # pod_id -> pod
+        self._pod_gpu: Dict[str, str] = {}            # pod_id -> gpu uuid
+        self._fn_gpus: Dict[str, Dict[str, int]] = {}  # fn -> {uuid: #pods}
+        self._capacity_models: Dict[str, Callable[[PodAlloc], float]] = {}
+        self._contrib: Dict[str, float] = {}          # pod_id -> thpt
         for _ in range(num_gpus):
             self.add_gpu()
 
@@ -30,10 +57,11 @@ class Reconfigurator:
     def add_gpu(self) -> VirtualGPU:
         if self.max_gpus is not None and len(self.gpus) >= self.max_gpus:
             raise RuntimeError("cluster at max GPU capacity")
-        i = next(_gpu_counter)
+        i = next(self._gpu_counter)
         uuid = f"GPU-{i:04d}"
         node = f"node-{i // self.gpus_per_node}"
-        g = VirtualGPU(uuid, node=node, window_ms=self.window_ms)
+        g = VirtualGPU(uuid, node=node, window_ms=self.window_ms, index=i)
+        g.owner = self   # direct GPU-level mutations keep indexes fresh
         self.gpus[uuid] = g
         return g
 
@@ -44,6 +72,7 @@ class Reconfigurator:
         for u in empty:
             if len(self.gpus) <= keep:
                 break
+            self.gpus[u].owner = None
             del self.gpus[u]
             released.append(u)
         return released
@@ -53,20 +82,76 @@ class Reconfigurator:
         return [g for g in self.gpus.values() if g.pods]
 
     def pods_of(self, fn_id: str) -> List[PodAlloc]:
-        return [p for g in self.gpus.values() for p in g.pods
-                if p.fn_id == fn_id]
+        gmap = self._fn_gpus.get(fn_id)
+        if not gmap:
+            return []
+        out: List[PodAlloc] = []
+        for u in sorted(gmap, key=lambda u: self.gpus[u].index):
+            out.extend(p for p in self.gpus[u].pods if p.fn_id == fn_id)
+        return out
 
     def gpu_of_pod(self, pod_id: str) -> Optional[VirtualGPU]:
-        for g in self.gpus.values():
-            if any(p.pod_id == pod_id for p in g.pods):
-                return g
-        return None
+        uuid = self._pod_gpu.get(pod_id)
+        return self.gpus.get(uuid) if uuid is not None else None
+
+    def pod(self, pod_id: str) -> Optional[PodAlloc]:
+        return self._pods.get(pod_id)
 
     def lowest_hgo_gpu(self, exclude=()) -> Optional[VirtualGPU]:
         used = [g for g in self.used_gpus() if g.uuid not in exclude]
         if not used:
             return None
         return min(used, key=lambda g: g.hgo)
+
+    # ---- incremental per-function capacity ---------------------------------
+    def register_capacity_model(self, fn_id: str,
+                                model: Callable[[PodAlloc], float]) -> None:
+        """Install the throughput model (pod -> RPS) whose per-pod values
+        `fn_capacity` aggregates; contributions for pods already placed
+        are (re)computed immediately."""
+        if self._capacity_models.get(fn_id) is model:
+            return
+        self._capacity_models[fn_id] = model
+        for p in self.pods_of(fn_id):
+            self._contrib[p.pod_id] = model(p)
+
+    def _update_contrib(self, pod: PodAlloc) -> None:
+        model = self._capacity_models.get(pod.fn_id)
+        if model is not None:
+            self._contrib[pod.pod_id] = model(pod)
+
+    def fn_capacity(self, fn_id: str) -> float:
+        """Aggregate capacity C_f from cached per-pod contributions —
+        summed in pod order, matching the naive re-summation bitwise."""
+        if fn_id not in self._capacity_models:
+            raise KeyError(f"no capacity model registered for {fn_id!r}")
+        contrib = self._contrib
+        return sum(contrib[p.pod_id] for p in self.pods_of(fn_id))
+
+    # ---- index hooks (called by owned VirtualGPUs on any mutation) ---------
+    def _index_place(self, pod: PodAlloc, g: VirtualGPU) -> None:
+        self._pods[pod.pod_id] = pod
+        self._pod_gpu[pod.pod_id] = g.uuid
+        gmap = self._fn_gpus.setdefault(pod.fn_id, {})
+        gmap[g.uuid] = gmap.get(g.uuid, 0) + 1
+        self._update_contrib(pod)
+
+    def _index_remove(self, pod: PodAlloc, g: VirtualGPU) -> None:
+        self._pods.pop(pod.pod_id, None)
+        self._pod_gpu.pop(pod.pod_id, None)
+        self._contrib.pop(pod.pod_id, None)
+        gmap = self._fn_gpus.get(pod.fn_id)
+        if gmap is not None:
+            n = gmap.get(g.uuid, 0) - 1
+            if n > 0:
+                gmap[g.uuid] = n
+            else:
+                gmap.pop(g.uuid, None)
+            if not gmap:
+                self._fn_gpus.pop(pod.fn_id, None)
+
+    def _index_quota(self, pod: PodAlloc) -> None:
+        self._update_contrib(pod)
 
     # ---- mutations ---------------------------------------------------------
     def place_pod(self, pod: PodAlloc, gpu_uuid: Optional[str] = None,
@@ -93,4 +178,9 @@ class Reconfigurator:
 
     # ---- invariants ----------------------------------------------------------
     def invariant_ok(self) -> bool:
-        return all(g.invariant_ok() for g in self.gpus.values())
+        if not all(g.invariant_ok() for g in self.gpus.values()):
+            return False
+        # the indexes must agree with the authoritative GPU state
+        indexed = set(self._pods)
+        actual = {p.pod_id for g in self.gpus.values() for p in g.pods}
+        return indexed == actual

@@ -70,11 +70,17 @@ class VirtualGPU:
     """One physical chip under HAS scheduling."""
 
     def __init__(self, uuid: str, node: str = "node-0",
-                 window_ms: float = DEFAULT_WINDOW_MS):
+                 window_ms: float = DEFAULT_WINDOW_MS, index: int = 0):
         self.uuid = uuid
         self.node = node
         self.window_ms = window_ms
+        self.index = index           # creation order within its cluster
         self.partitions: List[Partition] = []
+        self._pod_part: Dict[str, Partition] = {}  # pod_id -> partition
+        # the owning Reconfigurator (if any) keeps cluster-wide indexes;
+        # mutations made directly on the GPU notify it so those indexes
+        # stay authoritative regardless of which API level is used
+        self.owner = None
 
     # ---- capacity queries -------------------------------------------------
     @property
@@ -95,10 +101,7 @@ class VirtualGPU:
         return sum((pod.sm / TOTAL_SLICES) * pod.quota for pod in self.pods)
 
     def partition_of(self, pod_id: str) -> Optional[Partition]:
-        for part in self.partitions:
-            if any(p.pod_id == pod_id for p in part.pods):
-                return part
-        return None
+        return self._pod_part.get(pod_id)
 
     def max_avail_quota_for(self, pod: PodAlloc) -> float:
         """Paper: RetriveMaxAvailQuotaForPod — headroom in its partition."""
@@ -130,24 +133,35 @@ class VirtualGPU:
     def place(self, pod: PodAlloc) -> Partition:
         """Place under SM alignment: join an existing same-size partition
         with quota headroom, else carve a new partition from free slices."""
-        for part in self.partitions:
-            if part.sm == pod.sm and part.quota_free >= pod.quota - 1e-9:
-                part.pods.append(pod)
-                pod.gpu_uuid = self.uuid
-                return part
-        if self.slices_free >= pod.sm:
+        part = None
+        for cand in self.partitions:
+            if cand.sm == pod.sm and cand.quota_free >= pod.quota - 1e-9:
+                cand.pods.append(pod)
+                part = cand
+                break
+        if part is None and self.slices_free >= pod.sm:
             part = Partition(sm=pod.sm, pods=[pod])
             self.partitions.append(part)
-            pod.gpu_uuid = self.uuid
-            return part
-        raise RuntimeError(
-            f"GPU {self.uuid}: cannot place sm={pod.sm} q={pod.quota:.2f} "
-            f"(free slices {self.slices_free})")
+        if part is None:
+            raise RuntimeError(
+                f"GPU {self.uuid}: cannot place sm={pod.sm} "
+                f"q={pod.quota:.2f} (free slices {self.slices_free})")
+        pod.gpu_uuid = self.uuid
+        self._pod_part[pod.pod_id] = part
+        if self.owner is not None:
+            self.owner._index_place(pod, self)
+        return part
 
     def remove(self, pod_id: str) -> None:
+        part = self._pod_part.pop(pod_id, None)
+        pod = None
+        if part is not None:
+            pod = next((p for p in part.pods if p.pod_id == pod_id), None)
         for part in self.partitions:
             part.pods = [p for p in part.pods if p.pod_id != pod_id]
         self.partitions = [p for p in self.partitions if p.pods]
+        if pod is not None and self.owner is not None:
+            self.owner._index_remove(pod, self)
 
     # ---- vertical scaling (runtime quota reallocation, paper Fig 2) -------
     def set_quota(self, pod_id: str, quota: float) -> None:
@@ -163,6 +177,8 @@ class VirtualGPU:
         if quota <= 0:
             raise ValueError("quota must be positive; use remove() to free")
         pod.quota = quota
+        if self.owner is not None:
+            self.owner._index_quota(pod)
 
     def invariant_ok(self) -> bool:
         """Conservation invariants (used by property tests)."""

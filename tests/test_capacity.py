@@ -1,0 +1,158 @@
+"""Lattice/scalar parity: the vectorized control plane must be a pure
+re-plumbing of the scalar reference implementations.
+
+Oracle-path equality is pinned BITWISE (the golden traces ride on
+`lat > cap`-style comparisons, so even one ulp of drift changes scaling
+decisions); the RaPP vmap lattice is pinned to per-call `forward_one`
+at 1e-5."""
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import perf_model
+from repro.core.capacity import CapacityTable, shared_table
+from repro.core.perf_model import FnSpec
+from repro.core.vgpu import TOTAL_SLICES
+
+SPECS = [FnSpec(cfg) for cfg in ARCHS.values()]
+BATCHES = (1, 2, 4, 8, 16, 32)
+
+
+def test_quota_grid_matches_loop_arithmetic():
+    for step in (0.1, 0.2, 0.25, 0.5, 1.0):
+        grid = perf_model.quota_grid(step)
+        loop = [qi * step for qi in range(1, int(round(1.0 / step)) + 1)]
+        assert grid.tolist() == loop
+
+
+def test_latency_lattice_bitwise_equals_scalar():
+    sms = np.arange(1, TOTAL_SLICES + 1)
+    quotas = perf_model.quota_grid(0.1)
+    for spec in SPECS[:4]:
+        for b in BATCHES:
+            tab = perf_model.latency_lattice(spec, b, sms, quotas)
+            for i, sm in enumerate(sms):
+                for j, q in enumerate(quotas):
+                    assert tab[i, j] == perf_model.latency(
+                        spec, b, int(sm), float(q)), (spec.fn_id, b, sm, q)
+
+
+def test_throughput_and_cost_lattice_bitwise():
+    sms = np.arange(1, TOTAL_SLICES + 1)
+    quotas = perf_model.quota_grid(0.1)
+    spec = SPECS[0]
+    thpt = perf_model.throughput_lattice(spec, 8, sms, quotas,
+                                         overhead_s=0.02)
+    cost = perf_model.cost_rate_lattice(sms, quotas)
+    for i, sm in enumerate(sms):
+        for j, q in enumerate(quotas):
+            assert thpt[i, j] == perf_model.throughput(
+                spec, 8, int(sm), float(q), overhead_s=0.02)
+            assert cost[i, j] == perf_model.cost_rate(int(sm), float(q))
+
+
+def test_table_most_efficient_config_identical_all_specs():
+    """Satellite: the table-backed argmin returns the identical
+    (b, sm, q) tuple as the reference triple loop, every registered
+    spec, a spread of targets, both SLO modes."""
+    table = shared_table()
+    for spec in SPECS:
+        for target in (0.1, 2.0, 25.0, 200.0, 5000.0):
+            for mult in (1.5, 2.0, None):
+                ref = perf_model.most_efficient_config(
+                    spec, target, slo_multiplier=mult)
+                got = table.most_efficient_config(
+                    spec, target, slo_multiplier=mult)
+                assert got == ref, (spec.fn_id, target, mult, got, ref)
+
+
+def test_table_min_quota_for_slo_identical():
+    table = shared_table()
+    for spec in SPECS:
+        for b in (1, 8, 32):
+            for sm in range(1, TOTAL_SLICES + 1):
+                ref = perf_model.min_quota_for_slo(spec, b, sm, 2.0)
+                got = table.min_quota_for_slo(spec, b, sm, 2.0)
+                assert got == ref, (spec.fn_id, b, sm, got, ref)
+
+
+def test_table_lat_on_and_off_lattice():
+    table = CapacityTable()
+    spec = SPECS[0]
+    # on-grid values come from the lattice and equal the scalar oracle
+    for qi in range(1, 11):
+        q = qi * 0.1
+        assert table.lat(spec, 8, 4, q) == perf_model.latency(spec, 8, 4, q)
+    # off-grid falls back to the exact scalar path: the literal 0.6
+    # (0.59999999999999998) is NOT the grid point 6*0.1
+    # (0.60000000000000009)
+    q_off = 0.6
+    assert q_off != 6 * 0.1
+    assert table.lat(spec, 8, 4, q_off) == perf_model.latency(
+        spec, 8, 4, q_off)
+
+
+def test_table_wraps_arbitrary_scalar_predictor():
+    calls = []
+
+    def pred(spec, b, sm, q):
+        calls.append((b, sm, q))
+        return perf_model.latency(spec, b, sm, q) * 1.5
+
+    table = CapacityTable(predictor=pred)
+    spec = SPECS[0]
+    v = table.lat(spec, 8, 4, 0.5)
+    assert v == perf_model.latency(spec, 8, 4, 0.5) * 1.5
+    n = len(calls)
+    assert n == 80  # one full (sm x quota) lattice fill
+    table.lat(spec, 8, 7, 0.2)  # same (spec, batch): no new calls
+    assert len(calls) == n
+
+
+# ---- RaPP lattice parity (needs jax) ----------------------------------------
+def _rapp_model():
+    jax = pytest.importorskip("jax")
+    from repro.core.rapp import predictor as P
+    params = P.init_params(jax.random.PRNGKey(0))
+    return P.RaPPModel(params, seed=7)
+
+
+def test_rapp_lattice_matches_scalar_calls():
+    """Satellite: one `forward_batch` vmap over the stacked lattice
+    agrees with per-call `forward_one` to 1e-5."""
+    model = _rapp_model()
+    spec = FnSpec(ARCHS["olmo-1b"])
+    sms = (1, 4, 8)
+    quotas = (0.2, 0.5, 1.0)
+    lattice = model.predict_lattice(spec, 4, sms, quotas)
+    fresh = _rapp_model()  # scalar-only path, no lattice cache
+    for i, sm in enumerate(sms):
+        for j, q in enumerate(quotas):
+            scalar = fresh(spec, 4, sm, q)
+            assert lattice[i, j] == pytest.approx(scalar, rel=1e-5), \
+                (sm, q, lattice[i, j], scalar)
+
+
+def test_rapp_predictions_order_independent():
+    """Satellite: noise is keyed by (arch, batch, sm, quota), so the
+    same query yields the same latency regardless of what was asked
+    before it."""
+    spec = FnSpec(ARCHS["olmo-1b"])
+    queries = [(4, 2, 0.3), (4, 8, 1.0), (4, 1, 0.1), (4, 4, 0.6)]
+    a, b = _rapp_model(), _rapp_model()
+    got_a = {q: a(spec, *q) for q in queries}
+    got_b = {q: b(spec, *q) for q in reversed(queries)}
+    assert got_a == got_b
+
+
+def test_rapp_table_single_batched_fill():
+    """CapacityTable + RaPPModel: the whole lattice is served from one
+    predict_lattice call and most_efficient_config works end to end."""
+    model = _rapp_model()
+    spec = FnSpec(ARCHS["olmo-1b"])
+    table = CapacityTable(predictor=model)
+    b, sm, q = table.most_efficient_config(spec, 5.0, batches=(4,))
+    assert b == 4 and 1 <= sm <= TOTAL_SLICES and 0.0 < q <= 1.0
+    # lookups agree with the model's own (cache-consistent) answers
+    assert table.lat(spec, 4, sm, q) == pytest.approx(
+        model(spec, 4, sm, q), rel=1e-5)

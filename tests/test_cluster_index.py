@@ -1,0 +1,115 @@
+"""Indexed cluster state: the Reconfigurator's O(1) views must stay
+exactly equivalent to the linear scans they replaced — including pod
+ORDER (policies tie-break stable sorts on it) — and the incremental
+per-function capacity must match the naive re-summation bitwise."""
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.core.autoscaler import HybridAutoScaler
+from repro.core.perf_model import FnSpec
+from repro.core.reconfigurator import Reconfigurator
+from repro.core.vgpu import PodAlloc
+
+SPEC = FnSpec(ARCHS["qwen2.5-3b"])
+
+
+def naive_pods_of(recon, fn_id):
+    return [p for g in recon.gpus.values() for p in g.pods
+            if p.fn_id == fn_id]
+
+
+def naive_gpu_of_pod(recon, pod_id):
+    for g in recon.gpus.values():
+        if any(p.pod_id == pod_id for p in g.pods):
+            return g
+    return None
+
+
+def _random_mutations(recon, rng, fns=("fn-a", "fn-b", "fn-c"), steps=200):
+    pods = []
+    for _ in range(steps):
+        op = rng.random()
+        if op < 0.45 or not pods:
+            fn = fns[rng.integers(len(fns))]
+            pod = PodAlloc(fn_id=fn, sm=int(rng.integers(1, 5)),
+                           quota=float(rng.integers(1, 6)) / 10, batch=4)
+            # sometimes target an existing GPU with room
+            cands = [g for g in recon.gpus.values()
+                     if g.can_place(pod.sm, pod.quota)]
+            target = (cands[rng.integers(len(cands))].uuid
+                      if cands and rng.random() < 0.5 else None)
+            try:
+                recon.place_pod(pod, target)
+                pods.append(pod)
+            except RuntimeError:
+                pass
+        elif op < 0.7:
+            pod = pods.pop(rng.integers(len(pods)))
+            recon.remove_pod(pod.pod_id)
+            recon.release_empty_gpus()
+        else:
+            pod = pods[rng.integers(len(pods))]
+            g = recon.gpu_of_pod(pod.pod_id)
+            room = g.max_avail_quota_for(pod)
+            recon.set_quota(pod.pod_id, min(room, pod.quota))
+    return pods
+
+
+def test_indexed_views_match_naive_scans():
+    rng = np.random.default_rng(0)
+    recon = Reconfigurator(num_gpus=2, max_gpus=12)
+    pods = _random_mutations(recon, rng)
+    for fn in ("fn-a", "fn-b", "fn-c", "fn-absent"):
+        got = recon.pods_of(fn)
+        ref = naive_pods_of(recon, fn)
+        assert [p.pod_id for p in got] == [p.pod_id for p in ref], fn
+    for pod in pods:
+        assert recon.gpu_of_pod(pod.pod_id) is \
+            naive_gpu_of_pod(recon, pod.pod_id)
+    assert recon.gpu_of_pod("pod-nope") is None
+    assert recon.invariant_ok()
+
+
+def test_direct_gpu_mutations_update_indexes():
+    """Placing/removing straight on a VirtualGPU owned by a
+    Reconfigurator must keep the cluster indexes authoritative."""
+    recon = Reconfigurator(num_gpus=1)
+    gpu = next(iter(recon.gpus.values()))
+    pod = PodAlloc(fn_id="fn-x", sm=4, quota=0.5, batch=8)
+    gpu.place(pod)
+    assert [p.pod_id for p in recon.pods_of("fn-x")] == [pod.pod_id]
+    assert recon.gpu_of_pod(pod.pod_id) is gpu
+    gpu.set_quota(pod.pod_id, 0.8)
+    assert recon.pod(pod.pod_id).quota == 0.8
+    gpu.remove(pod.pod_id)
+    assert recon.pods_of("fn-x") == []
+    assert recon.gpu_of_pod(pod.pod_id) is None
+    assert recon.invariant_ok()
+
+
+def test_gpu_counter_is_per_instance():
+    """Satellite: GPU uuids are a function of the cluster's own
+    history, not of how many Reconfigurators the process built before —
+    two identically-driven clusters name their chips identically."""
+    def drive():
+        recon = Reconfigurator(num_gpus=2, max_gpus=8)
+        recon.place_pod(PodAlloc(fn_id="f", sm=8, quota=1.0, batch=8))
+        recon.remove_pod(recon.pods_of("f")[0].pod_id)
+        recon.release_empty_gpus()
+        recon.place_pod(PodAlloc(fn_id="f", sm=4, quota=0.5, batch=8))
+        return sorted(recon.gpus)
+    assert drive() == drive()
+    assert sorted(Reconfigurator(num_gpus=1).gpus) == ["GPU-0000"]
+
+
+def test_incremental_capacity_matches_naive_sum():
+    recon = Reconfigurator(num_gpus=0, max_gpus=16)
+    scaler = HybridAutoScaler(recon)
+    scaler.prewarm(SPEC, 40.0)
+    rng = np.random.default_rng(1)
+    for now in range(0, 120, 7):
+        scaler.scale(float(now), SPEC, float(rng.uniform(1.0, 120.0)))
+        naive = sum(scaler.pod_thpt(SPEC, p)
+                    for p in recon.pods_of(SPEC.fn_id))
+        assert scaler.capacity(SPEC) == naive  # bitwise, not approx
+    assert recon.invariant_ok()
