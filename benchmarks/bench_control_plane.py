@@ -139,7 +139,50 @@ def bench_scale(spec: FnSpec, fleet_pods: int, iters: int) -> dict:
             "fleet_pods": fleet_pods, **r}
 
 
-def run(smoke: bool = False) -> dict:
+HET_FLEET = (("a10g", 24), ("a100", 8), ("h100", 4), ("t4", 16))
+
+
+def bench_het(spec: FnSpec, iters: int) -> list:
+    """Heterogeneous-mode entries (--het): the cross-type dollar-
+    minimizing config search (`best_config_over` across 4 device
+    classes, warm lattices) and first-fit-decreasing fleet packing of a
+    64-pod request batch onto the mixed fleet."""
+    from repro.configs.gpus import get_gpu_type
+    from repro.core.scheduler import FleetPlacer
+
+    table = CapacityTable()
+    types = [get_gpu_type(n) for n, _ in HET_FLEET]
+    targets = [0.5, 5.0, 50.0, 500.0]
+    table.best_config_over(spec, 1.0, types)   # warm all type lattices
+    out = []
+    r = _timed(lambda: [table.best_config_over(spec, t, types)
+                        for t in targets], iters)
+    r["n"] *= len(targets)
+    r["seconds_per_decision"] /= len(targets)
+    r["decisions_per_s"] *= len(targets)
+    out.append({"name": "mec_het_table", "gpu_types": [t.name
+                                                       for t in types], **r})
+
+    def pack_batch():
+        recon = Reconfigurator(num_gpus=0, fleet=HET_FLEET)
+        placer = FleetPlacer(recon, table, slo_multiplier=2.0)
+        reqs = [(spec, PodAlloc(fn_id=spec.fn_id, sm=(1, 2, 4, 8)[i % 4],
+                                quota=0.5, batch=8)) for i in range(64)]
+        placed = placer.pack(reqs)
+        assert all(g is not None for _, g in placed)
+        return recon.fragmentation()
+
+    frag = pack_batch()
+    r = _timed(pack_batch, max(2, iters // 4))
+    r["n"] *= 64
+    r["seconds_per_decision"] /= 64
+    r["decisions_per_s"] *= 64
+    out.append({"name": "ffd_pack64_het", "pods": 64,
+                "fragmentation": frag, **r})
+    return out
+
+
+def run(smoke: bool = False, het: bool = False) -> dict:
     spec = FnSpec(ARCHS[ARCH])
     results = []
     results += bench_mec_oracle(spec, iters=5 if smoke else 25)
@@ -148,6 +191,8 @@ def run(smoke: bool = False) -> dict:
     for fleet in (8, 32) if smoke else (8, 64, 256):
         results.append(bench_scale(spec, fleet,
                                    iters=240 if smoke else 600))
+    if het:
+        results += bench_het(spec, iters=5 if smoke else 25)
     return {"schema": "bench_control_plane/v1", "smoke": smoke,
             "arch": ARCH, "results": results}
 
@@ -193,7 +238,8 @@ def check(report: dict, ref_path: str, factor: float,
         base = ref_by_name.get(r["name"])
         if base is None or r["name"] == CALIBRATION_ENTRY:
             continue
-        mismatch = [k for k in ("batches", "fleet_pods")
+        mismatch = [k for k in ("batches", "fleet_pods", "gpu_types",
+                                "pods")
                     if base.get(k) != r.get(k)]
         if mismatch:
             print(f"FAIL  {r['name']:<24} parameter mismatch vs reference:"
@@ -220,6 +266,9 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
                     help="small fleets/iteration counts for CI")
+    ap.add_argument("--het", action="store_true",
+                    help="add heterogeneous-fleet entries (cross-type "
+                         "config search + FFD packing)")
     ap.add_argument("--out", default="BENCH_control_plane.json")
     ap.add_argument("--check", metavar="REF",
                     help="fail on >factor regression vs this reference")
@@ -232,7 +281,7 @@ def main(argv=None) -> int:
                     help=f"also write the report to {REF_PATH}")
     args = ap.parse_args(argv)
 
-    report = run(smoke=args.smoke)
+    report = run(smoke=args.smoke, het=args.het)
     for r in report["results"]:
         print(f"{r['name']:<24} {r['decisions_per_s']:>12.1f} decisions/s"
               f"  ({r['seconds_per_decision']*1e3:.3f} ms/decision)")

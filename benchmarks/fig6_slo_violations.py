@@ -7,7 +7,16 @@ whole-GPU horizontal scaling.
 
 Also the scenario CLI: ``python -m benchmarks.fig6_slo_violations
 --scenario flash_crowd`` runs any registered scenario end-to-end and
-emits its ``RunMetrics`` JSON (stdout + results/metrics/).
+emits its ``RunMetrics`` JSON (stdout + results/metrics/). ``--fleet``
+overrides the scenario's fleet: either ``type:count,...`` pairs from
+``configs/gpus.py`` or the ``all_premium`` preset (the most expensive
+registered type only) — e.g.
+
+    python -m benchmarks.fig6_slo_violations --scenario het_mix
+    python -m benchmarks.fig6_slo_violations --scenario het_mix \\
+        --fleet all_premium
+
+reproduces the mixed-vs-premium USD comparison.
 """
 from __future__ import annotations
 
@@ -18,6 +27,7 @@ import sys
 import numpy as np
 
 from repro.configs import ARCHS
+from repro.configs.gpus import GPU_TYPES
 from repro.core import (ClusterSimulator, FnSpec, Reconfigurator, SimConfig,
                         TickClusterSimulator)
 from repro.workloads import standard_workload
@@ -110,15 +120,38 @@ def run(archs=("olmo-1b", "gemma-7b", "qwen2.5-3b"), duration=180.0,
     return mean_lat, derived, metrics
 
 
+def parse_fleet(text, scen):
+    """``--fleet`` values: ``all_premium`` (one pool of the priciest
+    registered type, sized to the scenario's total chip budget) or
+    comma-separated ``type:count`` pairs."""
+    if text is None:
+        return None
+    if text == "all_premium":
+        premium = max((t for t in GPU_TYPES.values()),
+                      key=lambda t: t.price_per_hour)
+        budget = (sum(c for _, c in scen.fleet) if scen.fleet
+                  else scen.max_gpus)
+        return ((premium.name, budget),)
+    fleet = []
+    for part in text.split(","):
+        name, _, count = part.partition(":")
+        fleet.append((name.strip(), int(count or 8)))
+    return tuple(fleet)
+
+
 def run_scenario_cli(args) -> None:
     scen = get_scenario(args.scenario)
     policies = POLICIES if args.policy == "all" else (args.policy,)
+    fleet = parse_fleet(args.fleet, scen)
+    suffix = ("" if args.fleet is None else
+              "__fleet_" + args.fleet.replace(":", "-").replace(",", "+"))
     os.makedirs(args.out_dir, exist_ok=True)
     for pol in policies:
         m = scen.run(policy=pol, seed=args.seed,
-                     duration_s=args.duration).metrics
-        path = os.path.join(args.out_dir,
-                            f"{scen.name}__{pol}__seed{args.seed}.json")
+                     duration_s=args.duration, fleet=fleet).metrics
+        path = os.path.join(
+            args.out_dir,
+            f"{scen.name}__{pol}__seed{args.seed}{suffix}.json")
         with open(path, "w") as f:
             f.write(m.to_json())
         sys.stdout.write(m.to_json())
@@ -132,6 +165,9 @@ def main(argv=None) -> None:
     ap.add_argument("--policy", default="has", choices=POLICIES + ("all",),
                     help="policy to run (with --scenario)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fleet", default=None,
+                    help="fleet override (with --scenario): 'all_premium' "
+                    "or 'type:count,type:count' (see configs/gpus.py)")
     ap.add_argument("--duration", type=float, default=None,
                     help="override the horizon (seconds)")
     ap.add_argument("--out-dir", default=METRICS_DIR)

@@ -1,5 +1,8 @@
-"""Config registry: the 10 assigned architectures + the 4 input shapes."""
+"""Config registry: the 10 assigned architectures, the 4 input shapes,
+and the GPU-type catalogue for heterogeneous fleets."""
 from repro.configs.base import ArchConfig, MoEConfig, SSMConfig, ShapeConfig, reduced
+from repro.configs.gpus import (DEFAULT_GPU_TYPE, GPU_TYPES, GPUType,
+                                fleet_from_names, get_gpu_type)
 from repro.configs.shapes import SHAPES, get_shape
 
 from repro.configs import (
@@ -57,4 +60,6 @@ __all__ = [
     "ArchConfig", "MoEConfig", "SSMConfig", "ShapeConfig", "reduced",
     "SHAPES", "get_shape", "ARCHS", "get_config", "list_archs",
     "combo_is_supported",
+    "GPUType", "GPU_TYPES", "DEFAULT_GPU_TYPE", "get_gpu_type",
+    "fleet_from_names",
 ]

@@ -1,0 +1,130 @@
+"""GPU type registry: the heterogeneous-fleet device catalogue.
+
+HAS-GPU's cost argument rests on picking the cheapest (SM, quota)
+configuration that still meets the SLO; real clusters offer that choice
+across *device types* with different slice counts, peak FLOPs, HBM
+bandwidth, and $/hour. A ``GPUType`` is the immutable descriptor of one
+such device class — the simulator's roofline physics
+(``core/perf_model.py``), the control plane's capacity tables
+(``core/capacity.py``), cost accounting (``core/cost.py``), and the
+placement-aware scheduler (``core/scheduler.py``) are all parameterized
+by it.
+
+``DEFAULT_GPU_TYPE`` carries exactly the constants the simulator was
+born with (a TPU v5e-class chip billed at the Google Cloud V100 price,
+paper Fig 7), so an all-default fleet reproduces every pre-heterogeneity
+golden trace bitwise. The other presets form a deliberate capability /
+value ladder around it:
+
+  =========  ======  ==========  =========  ======  ============
+  name       slices  peak FLOPs  HBM BW     $/hour  $ per PFLOPs
+  =========  ======  ==========  =========  ======  ============
+  t4           4       65e12      320e9      0.53      8.2
+  a10g         8      140e12      600e9      1.58     11.3
+  v5e          8      197e12      819e9      2.48     12.6
+  a100         8      312e12     2039e9      4.10     13.1
+  h100         8      989e12     3350e9     14.90     15.1
+  =========  ======  ==========  =========  ======  ============
+
+Cheaper types have the better $/FLOP but the worse absolute latency, so
+whether a device can serve a function at all depends on the SLO: the
+latency cap is anchored to the *reference* device
+(``perf_model.slo_baseline``), and a type whose whole-chip latency
+exceeds ``slo_multiplier x`` that baseline is only ever used as burst
+overflow (the ``spot_t4_burst`` scenario exercises exactly this).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class GPUType:
+    """One device class in a (possibly mixed) fleet.
+
+    Args/fields:
+        name: registry key, unique across ``GPU_TYPES``.
+        sm_total: vGPU slice granularity of one chip of this type — a
+            pod's spatial allocation is ``sm in 1..sm_total`` slices.
+        peak_flops: peak sustained FLOP/s of the whole chip.
+        hbm_bw: HBM bandwidth in bytes/s of the whole chip.
+        price_per_hour: on-demand $/hour for the whole chip; fine-
+            grained billing charges ``(sm / sm_total) * quota`` of it.
+
+    Invariants: all numeric fields are positive; instances are frozen
+    (hashable) so they can key capacity-table lattices and memoized
+    physics directly.
+    """
+    name: str
+    sm_total: int
+    peak_flops: float
+    hbm_bw: float
+    price_per_hour: float
+
+    def __post_init__(self):
+        if self.sm_total < 1:
+            raise ValueError(f"sm_total={self.sm_total} must be >= 1")
+        if min(self.peak_flops, self.hbm_bw, self.price_per_hour) <= 0:
+            raise ValueError(f"GPUType {self.name!r}: peak_flops/hbm_bw/"
+                             "price_per_hour must be positive")
+
+    @property
+    def price_per_slice_hour(self) -> float:
+        """$/hour of one slice at full quota — the scheduler's cheapness
+        key when ranking candidate devices."""
+        return self.price_per_hour / self.sm_total
+
+
+# The device the seed simulator modeled: TPU v5e-class peak/bandwidth,
+# billed at the Google Cloud V100 price the paper's Fig 7 uses. Every
+# pre-heterogeneity golden trace was produced on (implicitly) this type.
+DEFAULT_GPU_TYPE = GPUType(name="v5e", sm_total=8, peak_flops=197e12,
+                           hbm_bw=819e9, price_per_hour=2.48)
+
+GPU_TYPES: Dict[str, GPUType] = {
+    t.name: t
+    for t in (
+        DEFAULT_GPU_TYPE,
+        GPUType(name="h100", sm_total=8, peak_flops=989e12,
+                hbm_bw=3.35e12, price_per_hour=14.90),
+        GPUType(name="a100", sm_total=8, peak_flops=312e12,
+                hbm_bw=2.039e12, price_per_hour=4.10),
+        GPUType(name="a10g", sm_total=8, peak_flops=140e12,
+                hbm_bw=600e9, price_per_hour=1.58),
+        GPUType(name="t4", sm_total=4, peak_flops=65e12,
+                hbm_bw=320e9, price_per_hour=0.53),
+    )
+}
+GPU_TYPES["default"] = DEFAULT_GPU_TYPE  # alias: the reference device
+
+
+def get_gpu_type(name) -> GPUType:
+    """Resolve a GPU type by registry name (``GPUType`` instances pass
+    through unchanged).
+
+    Args:
+        name: a key of ``GPU_TYPES`` (``"v5e"``/``"default"``,
+            ``"h100"``, ``"a100"``, ``"a10g"``, ``"t4"``) or an already-
+            resolved ``GPUType``.
+    Returns: the registered ``GPUType`` instance.
+    Raises: ``KeyError`` with the available names for unknown keys.
+    """
+    if isinstance(name, GPUType):
+        return name
+    try:
+        return GPU_TYPES[name]
+    except KeyError:
+        raise KeyError(f"unknown GPU type {name!r}; available: "
+                       f"{sorted(GPU_TYPES)}") from None
+
+
+def fleet_from_names(fleet) -> Tuple[Tuple[GPUType, int], ...]:
+    """Normalize a fleet declaration to ``((GPUType, cap), ...)``.
+
+    Args:
+        fleet: iterable of ``(type_name_or_GPUType, max_chips)`` pairs;
+            order is the scheduler's tie-break preference order.
+    Returns: tuple of ``(GPUType, int cap)`` pairs, same order.
+    """
+    return tuple((get_gpu_type(n), int(cap)) for n, cap in fleet)

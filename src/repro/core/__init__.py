@@ -4,6 +4,8 @@ vGPU spatio-temporal allocation, GPU Re-configurator, Kalman workload
 prediction, hybrid auto-scaling (Algorithm 1), RaPP performance
 prediction, baseline policies, and the cluster simulator.
 """
+from repro.configs.gpus import (DEFAULT_GPU_TYPE, GPU_TYPES, GPUType,
+                                get_gpu_type)
 from repro.core.autoscaler import (AutoScalerConfig, HybridAutoScaler,
                                    ScalingAction)
 from repro.core.baselines import (FaSTGShareLikeConfig, FaSTGShareLikePolicy,
@@ -16,6 +18,7 @@ from repro.core.perf_model import (FnSpec, cost_rate, exec_time, latency,
                                    throughput)
 from repro.core.events import EventEngine, FunctionState
 from repro.core.reconfigurator import Reconfigurator
+from repro.core.scheduler import FleetPlacer
 from repro.core.simulator import ClusterSimulator, SimConfig, SimResult
 from repro.core.simulator_tick import TickClusterSimulator
 from repro.core.vgpu import (DEFAULT_WINDOW_MS, TOTAL_SLICES, Partition,
@@ -34,4 +37,6 @@ __all__ = [
     "EventEngine", "FunctionState", "TickClusterSimulator",
     "DEFAULT_WINDOW_MS", "TOTAL_SLICES", "Partition", "PodAlloc",
     "VirtualGPU",
+    "GPUType", "GPU_TYPES", "DEFAULT_GPU_TYPE", "get_gpu_type",
+    "FleetPlacer",
 ]

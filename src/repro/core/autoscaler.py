@@ -15,6 +15,14 @@ filled in one batched call, so a scaling decision is argmin/lookup work
 instead of ~480 scalar predictor queries; per-function capacity C_f is
 maintained incrementally by the Reconfigurator instead of re-invoking
 the predictor for every pod at every autoscale event.
+
+Heterogeneous fleets: every throughput/latency/SLO query is evaluated
+against the device type actually hosting (or candidate to host) the
+pod, and new-capacity decisions use the cross-type dollar-minimizing
+search (`CapacityTable.best_config_over`) plus first-fit-decreasing
+fragment packing (`core/scheduler.FleetPlacer`). On a single-type fleet
+every one of those paths degenerates to the legacy behavior — the
+homogeneous golden traces are reproduced bitwise.
 """
 from __future__ import annotations
 
@@ -22,10 +30,12 @@ import dataclasses
 import math
 from typing import Callable, Dict, List, Optional
 
+from repro.configs.gpus import DEFAULT_GPU_TYPE, GPUType
 from repro.core import capacity as capacity_mod
 from repro.core.kalman import KalmanPredictor
 from repro.core.perf_model import FnSpec
 from repro.core.reconfigurator import Reconfigurator
+from repro.core.scheduler import FleetPlacer
 from repro.core.vgpu import PodAlloc, TOTAL_SLICES
 
 
@@ -67,23 +77,27 @@ class HybridAutoScaler:
             self.table = capacity_mod.CapacityTable(
                 predictor, quota_step=cfg.quota_step, window_ms=window_ms)
         self.predict_latency = self.table.lat
+        self.placer = FleetPlacer(recon, self.table,
+                                  slo_multiplier=cfg.slo_multiplier)
         self.kalman: Dict[str, KalmanPredictor] = {}
         self.last_scale_down: Dict[str, float] = {}
         self._cap_models: Dict[str, Callable] = {}
 
     # ---- throughput helpers ------------------------------------------------
-    def thpt(self, spec: FnSpec, batch: int, sm: int, quota: float) -> float:
-        return batch / (self.table.lat(spec, batch, sm, quota)
-                        + self.cfg.service_overhead_s)
+    def thpt(self, spec: FnSpec, batch: int, sm: int, quota: float,
+             gpu: Optional[GPUType] = None) -> float:
+        return self.table.throughput(spec, batch, sm, quota,
+                                     self.cfg.service_overhead_s, gpu)
 
     def pod_thpt(self, spec: FnSpec, pod: PodAlloc) -> float:
-        return self.thpt(spec, pod.batch, pod.sm, pod.quota)
+        return self.thpt(spec, pod.batch, pod.sm, pod.quota, pod.gpu_type)
 
     def _ensure_capacity_model(self, spec: FnSpec) -> None:
         model = self._cap_models.get(spec.fn_id)
         if model is None:
             model = self._cap_models[spec.fn_id] = (
-                lambda p, _s=spec: self.thpt(_s, p.batch, p.sm, p.quota))
+                lambda p, _s=spec: self.thpt(_s, p.batch, p.sm, p.quota,
+                                             p.gpu_type))
         # no-op when already installed; re-registers (and recomputes
         # contributions) if another scaler on the same cluster took over
         self.recon.register_capacity_model(spec.fn_id, model)
@@ -129,21 +143,35 @@ class HybridAutoScaler:
         return actions
 
     # ---- bootstrap -----------------------------------------------------------
+    def _placement_types(self) -> List[GPUType]:
+        """Device types a fresh chip could come from, in fleet order —
+        when every cap is reached, all fleet types (the config is still
+        computed; placement may then fail exactly as before)."""
+        avail = self.recon.available_gpu_types()
+        return avail or [t for t, _ in self.recon.fleet]
+
     def _bootstrap(self, now, spec, target_rps) -> List[ScalingAction]:
         self._ensure_capacity_model(spec)
-        b, sm, q = self.table.most_efficient_config(
-            spec, target_rps, slo_multiplier=self.cfg.slo_multiplier)
-        gpu = self._gpu_with_room(sm, q)
+        t, b, sm, q = self.table.best_config_over(
+            spec, target_rps, self._placement_types(),
+            slo_multiplier=self.cfg.slo_multiplier)
+        gpu = self._gpu_with_room(sm, q, t)
         pod = PodAlloc(fn_id=spec.fn_id, sm=sm, quota=q, batch=b)
         cold = (self.cfg.cold_start_s if gpu is not None
                 else self.cfg.new_gpu_cold_start_s)
         self.recon.place_pod(pod, gpu.uuid if gpu else None, now=now,
-                             cold_start_s=cold)
+                             cold_start_s=cold, gpu_type=t)
+        tag = "" if t == DEFAULT_GPU_TYPE else f" [{t.name}]"
         return [ScalingAction(spec.fn_id, pod.pod_id, "hup",
-                              f"bootstrap b={b} sm={sm} q={q:.2f}")]
+                              f"bootstrap b={b} sm={sm} q={q:.2f}{tag}")]
 
-    def _gpu_with_room(self, sm, q):
-        cands = [g for g in self.recon.used_gpus() if g.can_place(sm, q)]
+    def _gpu_with_room(self, sm, q, gpu_type=None):
+        """Least-occupied used GPU that can host (sm, q) — restricted to
+        ``gpu_type`` chips, since the config was priced for that device
+        (a no-op filter on a homogeneous fleet)."""
+        cands = [g for g in self.recon.used_gpus()
+                 if (gpu_type is None or g.gpu_type == gpu_type)
+                 and g.can_place(sm, q)]
         if not cands:
             return None
         return min(cands, key=lambda g: g.hgo)
@@ -165,7 +193,8 @@ class HybridAutoScaler:
                     and delta - gained > 0:
                 n += 1
                 cand_q = pod.quota + step * n
-                gained = self.thpt(spec, pod.batch, pod.sm, cand_q) - base
+                gained = self.thpt(spec, pod.batch, pod.sm, cand_q,
+                                   pod.gpu_type) - base
                 new_q = cand_q
             if n > 0:
                 self.recon.set_quota(pod.pod_id, new_q)
@@ -176,27 +205,47 @@ class HybridAutoScaler:
         return delta, actions
 
     # ---- horizontal scale-up onto a used GPU (paper L10-17) --------------------
+    def _type_slo_capable(self, spec, batch, t: GPUType) -> bool:
+        """Whether device class ``t`` has ANY SLO-satisfying quota at
+        ``batch`` on its full width (lattice lookup, cached by the
+        table) — spot classes that can never meet the SLO rank behind
+        every capable class when choosing a used chip."""
+        return self.table.min_quota_for_slo(
+            spec, batch, t.sm_total, self.cfg.slo_multiplier,
+            gpu=t) is not None
+
     def _horizontal_up_used(self, now, spec, delta):
         actions = []
-        gpu = self.recon.lowest_hgo_gpu()
+        if self.recon.is_heterogeneous:
+            # mixed fleet: SLO-capable device classes first (a cheap
+            # spot chip would dead-end the used-GPU path), cheapest
+            # $/slice class next, HGO inside a class
+            b0 = self.cfg.default_batch
+            used = self.recon.used_gpus()
+            gpu = min(used, key=lambda g: (
+                not self._type_slo_capable(spec, b0, g.gpu_type),
+                g.gpu_type.price_per_slice_hour, g.hgo)) if used else None
+        else:
+            gpu = self.recon.lowest_hgo_gpu()
         if gpu is None:
             return delta, actions
+        t = gpu.gpu_type
         s_max, q_max = gpu.max_avail_alloc()
         if s_max <= 0 or q_max < self.cfg.min_quota:
             return delta, actions
         b = self.cfg.default_batch
-        c_max = self.thpt(spec, b, s_max, q_max)
+        c_max = self.thpt(spec, b, s_max, q_max, t)
         if c_max <= delta:
             return delta, actions  # used GPUs can't close the gap; go new
         q_floor = self.table.min_quota_for_slo(
-            spec, b, s_max, self.cfg.slo_multiplier)
+            spec, b, s_max, self.cfg.slo_multiplier, gpu=t)
         if q_floor is None or q_floor > q_max + 1e-9:
             return delta, actions  # no SLO-satisfying slot on used GPUs
         step = self.cfg.quota_step
         n, cap = 0, 0.0
         while step * (n + 1) <= q_max + 1e-9 and cap < delta:
             n += 1
-            cap = self.thpt(spec, b, s_max, step * n)
+            cap = self.thpt(spec, b, s_max, step * n, t)
         q = max(step * max(n, 1), q_floor)
         pod = PodAlloc(fn_id=spec.fn_id, sm=s_max, quota=q, batch=b)
         self.recon.place_pod(pod, gpu.uuid, now=now,
@@ -221,18 +270,35 @@ class HybridAutoScaler:
 
     def _horizontal_up_new(self, now, spec, delta):
         actions = []
+        het = self.recon.is_heterogeneous
         while delta > 0:
-            b, sm, q = self.table.most_efficient_config(
-                spec, delta, slo_multiplier=self.cfg.slo_multiplier)
+            t, b, sm, q = self.table.best_config_over(
+                spec, delta, self._placement_types(),
+                slo_multiplier=self.cfg.slo_multiplier)
             pod = PodAlloc(fn_id=spec.fn_id, sm=sm, quota=q, batch=b)
-            try:
-                self.recon.place_pod(pod, None, now=now,
-                                     cold_start_s=self.cfg.new_gpu_cold_start_s)
-            except RuntimeError:   # cluster at capacity
-                break
-            cap = self.thpt(spec, b, sm, q)
+            if het:
+                # mixed fleet: FFD-pack onto existing fragments of a
+                # cheaper SLO-capable type before opening a fresh chip
+                host = self.placer.place_one(
+                    spec, pod, now=now,
+                    cold_start_s=self.cfg.cold_start_s,
+                    new_gpu_cold_start_s=self.cfg.new_gpu_cold_start_s)
+                if host is None:   # fleet exhausted
+                    break
+                t = host.gpu_type
+            else:
+                try:
+                    self.recon.place_pod(
+                        pod, None, now=now,
+                        cold_start_s=self.cfg.new_gpu_cold_start_s,
+                        gpu_type=t)
+                except RuntimeError:   # cluster at capacity
+                    break
+            cap = self.thpt(spec, pod.batch, pod.sm, pod.quota, t)
+            tag = "" if t == DEFAULT_GPU_TYPE else f" [{t.name}]"
             actions.append(ScalingAction(spec.fn_id, pod.pod_id, "hup",
-                                         f"new-gpu sm={sm} q={q:.2f}"))
+                                         f"new-gpu sm={pod.sm} "
+                                         f"q={pod.quota:.2f}{tag}"))
             delta -= cap
         return actions
 
@@ -254,21 +320,24 @@ class HybridAutoScaler:
                                              "removed"))
                 continue
             # vertical scale-down: shed quota stepwise (never below the
-            # SLO-satisfying floor for this pod's (batch, sm))
+            # SLO-satisfying floor for this pod's (batch, sm) on its
+            # host device)
             q_floor = self.table.min_quota_for_slo(
                 spec, pod.batch, pod.sm,
-                self.cfg.slo_multiplier) or self.cfg.min_quota
+                self.cfg.slo_multiplier, gpu=pod.gpu_type) \
+                or self.cfg.min_quota
             floor = max(self.cfg.min_quota, q_floor)
             n = 0
             while pod.quota - step * (n + 1) >= floor - 1e-9:
                 cand = self.thpt(spec, pod.batch, pod.sm,
-                                 pod.quota - step * (n + 1))
+                                 pod.quota - step * (n + 1), pod.gpu_type)
                 if contrib - cand > delta:
                     break
                 n += 1
             if n > 0:
                 new_q = pod.quota - step * n
-                shed = contrib - self.thpt(spec, pod.batch, pod.sm, new_q)
+                shed = contrib - self.thpt(spec, pod.batch, pod.sm, new_q,
+                                           pod.gpu_type)
                 self.recon.set_quota(pod.pod_id, new_q)
                 delta -= shed
                 actions.append(ScalingAction(spec.fn_id, pod.pod_id, "vdown",

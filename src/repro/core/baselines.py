@@ -11,6 +11,15 @@ Both run in the same simulator/cluster as HAS — only the policy differs.
 Like the hybrid scaler, both consume the roofline physics through the
 shared `CapacityTable` lattices (core/capacity.py) rather than scalar
 `perf_model` queries.
+
+On a heterogeneous fleet both baselines stay deliberately DEVICE-BLIND
+(that is the point of comparing them against HAS's placement-aware
+scheduling): they plan capacity against the fleet's first declared
+type, and take whatever chips the Reconfigurator hands out — KServe
+sizes each pod to the whole chip it lands on; FaST keeps its one fixed
+fine-grained config and packs it wherever it fits (cheapest type
+first). On a homogeneous fleet both degenerate to the legacy behavior
+bitwise.
 """
 from __future__ import annotations
 
@@ -21,7 +30,7 @@ from typing import Dict
 from repro.core import capacity as capacity_mod
 from repro.core.perf_model import FnSpec
 from repro.core.reconfigurator import Reconfigurator
-from repro.core.vgpu import DEFAULT_WINDOW_MS, PodAlloc, TOTAL_SLICES
+from repro.core.vgpu import DEFAULT_WINDOW_MS, PodAlloc
 
 
 @dataclasses.dataclass
@@ -43,9 +52,25 @@ class KServeLikePolicy:
         self.table = capacity_mod.shared_table(window_ms=window_ms)
         self._below_since: Dict[str, float] = {}
 
+    def _ref_type(self):
+        """The fleet's first declared type — the device class this
+        device-blind policy plans capacity against."""
+        return self.recon.fleet[0][0]
+
     def pod_thpt(self, spec: FnSpec) -> float:
+        ref = self._ref_type()
         return self.table.throughput(spec, self.cfg.default_batch,
-                                     TOTAL_SLICES, 1.0)
+                                     ref.sm_total, 1.0, gpu=ref)
+
+    def _add_whole_gpu_pod(self, spec: FnSpec, now: float,
+                           cold_start_s: float) -> None:
+        """One replica = one whole chip of whatever type the fleet hands
+        out next (the pod is sized to that chip's full slice count)."""
+        g = self.recon.add_gpu()
+        pod = PodAlloc(fn_id=spec.fn_id, sm=g.gpu_type.sm_total, quota=1.0,
+                       batch=self.cfg.default_batch)
+        self.recon.place_pod(pod, g.uuid, now=now,
+                             cold_start_s=cold_start_s)
 
     def prewarm(self, spec: FnSpec, expected_rps: float):
         import math as _m
@@ -54,9 +79,7 @@ class KServeLikePolicy:
                                            * self.cfg.target_utilization,
                                            1e-9)))
         for _ in range(n):
-            pod = PodAlloc(fn_id=spec.fn_id, sm=TOTAL_SLICES, quota=1.0,
-                           batch=self.cfg.default_batch)
-            self.recon.place_pod(pod, None, now=0.0, cold_start_s=0.0)
+            self._add_whole_gpu_pod(spec, now=0.0, cold_start_s=0.0)
 
     def tick(self, now: float, spec: FnSpec, observed_rps: float):
         pods = self.recon.pods_of(spec.fn_id)
@@ -68,11 +91,9 @@ class KServeLikePolicy:
         if desired > cur:
             self._below_since.pop(spec.fn_id, None)
             for _ in range(desired - cur):
-                pod = PodAlloc(fn_id=spec.fn_id, sm=TOTAL_SLICES, quota=1.0,
-                               batch=self.cfg.default_batch)
                 try:
-                    self.recon.place_pod(pod, None, now=now,
-                                         cold_start_s=self.cfg.cold_start_s)
+                    self._add_whole_gpu_pod(
+                        spec, now=now, cold_start_s=self.cfg.cold_start_s)
                 except RuntimeError:
                     break
         elif desired < cur:
@@ -109,38 +130,55 @@ class FaSTGShareLikePolicy:
         self._below_since: Dict[str, float] = {}
         self._fixed: Dict[str, tuple] = {}
 
+    def _ref_type(self):
+        """The fleet's first declared type — the device class the
+        offline fixed-config pick (and capacity math) is quoted on."""
+        return self.recon.fleet[0][0]
+
     def fixed_config(self, spec: FnSpec) -> tuple:
         # FaST-GShare picks the most throughput-efficient FIXED config;
         # efficiency favors full temporal occupancy of its partition
         # (window quantization penalizes fractional quotas), so the fixed
         # unit is (batch, sm, quota=1.0). The whole-quota lattice
         # (quota_step=1.0, default window — the grid the offline pick
-        # always used) resolves it in one table lookup.
+        # always used) resolves it in one table lookup, quoted on the
+        # fleet's first type (the policy is device-blind: it never
+        # re-fits the config to the chip a pod actually lands on).
         if spec.fn_id not in self._fixed:
             self._fixed[spec.fn_id] = capacity_mod.shared_table(
                 quota_step=1.0, window_ms=DEFAULT_WINDOW_MS
             ).most_efficient_config(spec, self.cfg.unit_rps,
-                                    slo_multiplier=2.0)
+                                    slo_multiplier=2.0,
+                                    gpu=self._ref_type())
         return self._fixed[spec.fn_id]
+
+    def _choose_gpu(self, sm: int, q: float):
+        """Used chip for one fixed-config pod: cheapest device class
+        first, least-occupied inside a class (on a homogeneous fleet the
+        price key is constant — the legacy min-HGO pick, bitwise)."""
+        cands = [g for g in self.recon.used_gpus() if g.can_place(sm, q)]
+        if not cands:
+            return None
+        return min(cands, key=lambda g: (g.gpu_type.price_per_slice_hour,
+                                         g.hgo)).uuid
 
     def prewarm(self, spec: FnSpec, expected_rps: float):
         import math as _m
         b, sm, q = self.fixed_config(spec)
-        cap = self.table.throughput(spec, b, sm, q)
+        ref = self._ref_type()
+        cap = self.table.throughput(spec, b, sm, q, gpu=ref)
         n = max(self.cfg.min_replicas,
                 _m.ceil(expected_rps /
                         max(cap * self.cfg.target_utilization, 1e-9)))
         for _ in range(n):
             pod = PodAlloc(fn_id=spec.fn_id, sm=sm, quota=q, batch=b)
-            gpu = None
-            cands = [g for g in self.recon.used_gpus() if g.can_place(sm, q)]
-            if cands:
-                gpu = min(cands, key=lambda g: g.hgo).uuid
-            self.recon.place_pod(pod, gpu, now=0.0, cold_start_s=0.0)
+            self.recon.place_pod(pod, self._choose_gpu(sm, q), now=0.0,
+                                 cold_start_s=0.0)
 
     def tick(self, now: float, spec: FnSpec, observed_rps: float):
         b, sm, q = self.fixed_config(spec)
-        cap = self.table.throughput(spec, b, sm, q)
+        ref = self._ref_type()
+        cap = self.table.throughput(spec, b, sm, q, gpu=ref)
         pods = self.recon.pods_of(spec.fn_id)
         desired = max(self.cfg.min_replicas,
                       math.ceil(observed_rps /
@@ -150,13 +188,9 @@ class FaSTGShareLikePolicy:
             self._below_since.pop(spec.fn_id, None)
             for _ in range(desired - cur):
                 pod = PodAlloc(fn_id=spec.fn_id, sm=sm, quota=q, batch=b)
-                gpu = None
-                cands = [g for g in self.recon.used_gpus()
-                         if g.can_place(sm, q)]
-                if cands:
-                    gpu = min(cands, key=lambda g: g.hgo).uuid
                 try:
-                    self.recon.place_pod(pod, gpu, now=now,
+                    self.recon.place_pod(pod, self._choose_gpu(sm, q),
+                                         now=now,
                                          cold_start_s=self.cfg.cold_start_s)
                 except RuntimeError:
                     break

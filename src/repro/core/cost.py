@@ -1,15 +1,39 @@
 """Function cost accounting (paper Fig 7).
 
-Costs use the Google Cloud V100 price ($2.48/hour). Fine-grained platforms
-(HAS, FaST-like) are charged for the fraction (sm/8 x quota) actually
-held; whole-GPU platforms (KServe-like) are charged the full chip for the
+Each chip is billed at its ``GPUType``'s price (``configs/gpus.py``;
+the reference device keeps the Google Cloud V100 price $2.48/hour the
+paper uses). Fine-grained platforms (HAS, FaST-like) are charged for
+the fraction ``(sm / sm_total) x quota`` actually held on each chip;
+whole-GPU platforms (KServe-like) are charged the full chip for the
 pod's lifetime.
+
+On a single-type fleet the per-type grouping below accumulates in
+exactly the legacy iteration order, so all-default-fleet runs reproduce
+the pre-heterogeneity cost streams bitwise.
+
+The old module-level ``GPU_PRICE_PER_HOUR`` constant is deprecated:
+price is a per-``GPUType`` field now. Accessing it still works (it
+returns the reference device's price) but emits a DeprecationWarning.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
-GPU_PRICE_PER_HOUR = 2.48
+from repro.configs.gpus import DEFAULT_GPU_TYPE
+
+_DEPRECATED = {"GPU_PRICE_PER_HOUR": DEFAULT_GPU_TYPE.price_per_hour}
+
+
+def __getattr__(name: str):
+    if name in _DEPRECATED:
+        warnings.warn(
+            "cost.GPU_PRICE_PER_HOUR is deprecated: GPU price is a "
+            "GPUType field (configs/gpus.py); this constant only "
+            "reflects the reference device.",
+            DeprecationWarning, stacklevel=2)
+        return _DEPRECATED[name]
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclasses.dataclass
@@ -21,13 +45,28 @@ class CostMeter:
     def rates(self, recon) -> tuple:
         """(usd/s, gpu-fraction) rates for the current allocation. The
         rate only changes when a policy mutates the cluster, so callers
-        integrating between events can sample it once per mutation."""
+        integrating between events can sample it once per mutation.
+
+        ``gpu-fraction`` is device-count-weighted (one whole chip of any
+        type contributes 1.0) while usd/s weights each chip's share by
+        its type's price."""
+        fracs = {}  # GPUType -> occupied fraction, first-seen order
         if self.whole_gpu:
-            frac = float(len(recon.used_gpus()))
+            for g in recon.used_gpus():
+                fracs[g.gpu_type] = fracs.get(g.gpu_type, 0.0) + 1.0
         else:
-            frac = sum((pod.sm / 8.0) * pod.quota
-                       for g in recon.used_gpus() for pod in g.pods)
-        return frac * GPU_PRICE_PER_HOUR / 3600.0, frac
+            for g in recon.used_gpus():
+                t = g.gpu_type
+                s = fracs.get(t, 0.0)
+                for pod in g.pods:
+                    s += (pod.sm / float(t.sm_total)) * pod.quota
+                fracs[t] = s
+        usd_rate = 0.0
+        frac = 0.0
+        for t, s in fracs.items():
+            usd_rate += s * t.price_per_hour / 3600.0
+            frac += s
+        return usd_rate, frac
 
     def accrue_rates(self, rates: tuple, dt: float) -> None:
         """Integrate a pre-sampled (usd/s, gpu-fraction) rate over dt."""

@@ -55,6 +55,11 @@ OBS_WINDOW_S = 5.0  # observed-rate sliding window (paper: short horizon)
 
 @dataclasses.dataclass
 class SimConfig:
+    """Simulation-run knobs shared by the event and tick engines:
+    horizon (``duration_s``), autoscale cadence, RNG ``seed``,
+    whole-GPU vs fine-grained billing, batch-formation wait, and the
+    drop-after aging bound. Invariant: a config is immutable for the
+    lifetime of one simulator run."""
     tick_s: float = 0.02         # used by the tick reference engine only
     autoscale_interval_s: float = 1.0
     duration_s: float = 300.0
@@ -66,6 +71,11 @@ class SimConfig:
 
 @dataclasses.dataclass
 class PodRuntime:
+    """Execution-side state of one pod: when its current batch finishes
+    (``busy_until``), the in-flight requests (delivered lazily at the
+    pod's next pull), and whether a cold-start wakeup is already
+    queued. Created on first dispatch, dropped when the pod is
+    removed."""
     pod_id: str
     busy_until: float = 0.0
     inflight: List[Request] = dataclasses.field(default_factory=list)
@@ -103,6 +113,7 @@ class FunctionState:
 
     @property
     def fn_id(self) -> str:
+        """The function's id (``FnSpec.fn_id``), the engine's key."""
         return self.fid
 
     def observed_in_window(self, t: float) -> int:
@@ -113,6 +124,10 @@ class FunctionState:
         return int(hi - lo)
 
     def work_left(self, now: float) -> bool:
+        """Whether this function still has pending work at ``now`` —
+        queued requests, uninjected arrivals, or batches still running
+        (used to decide if autoscale timers must keep firing past the
+        nominal horizon)."""
         if self.queue or self.next_arrival < len(self._arr):
             return True
         # a finished-but-undelivered batch (busy_until <= now, delivery is
@@ -149,6 +164,11 @@ class EventEngine:
             window_ms=recon.window_ms)
         self._ord_table = capacity_mod.shared_table()
         self._cost_rates = self.cost.rates(recon)
+        # spatial fragmentation is integrated over time exactly like
+        # cost: the value only changes when a policy mutates the
+        # cluster, so it is re-sampled at autoscale events
+        self._frag_rate = recon.fragmentation()
+        self.frag_integral = 0.0
 
     # ---- event queue -------------------------------------------------------
     def _push(self, t: float, kind: int, st: FunctionState) -> None:
@@ -156,18 +176,24 @@ class EventEngine:
 
     # ---- helpers -----------------------------------------------------------
     def _thpt(self, st: FunctionState, pod) -> float:
-        key = (st.fid, pod.batch, pod.sm, pod.quota)
+        """Dispatch-ordering throughput of one pod on its host device,
+        memoized per (fn, batch, sm, quota, device type)."""
+        t = pod.gpu_type
+        key = (st.fid, pod.batch, pod.sm, pod.quota,
+               t.name if t is not None else None)
         v = self._thpt_cache.get(key)
         if v is None:
             v = self._ord_table.throughput(st.spec, pod.batch, pod.sm,
-                                           pod.quota)
+                                           pod.quota, gpu=t)
             self._thpt_cache[key] = v
         return v
 
     def _service(self, st: FunctionState, batch: int, pod) -> float:
         """One batch's service time: the deterministic wall-clock from
-        the shared lattice table times a fresh lognormal noise draw."""
-        det = self._svc_table.lat(st.spec, batch, pod.sm, pod.quota)
+        the shared lattice table (on the pod's host device type) times
+        a fresh lognormal noise draw."""
+        det = self._svc_table.lat(st.spec, batch, pod.sm, pod.quota,
+                                  pod.gpu_type)
         return det * float(self.rng.lognormal(
             mean=0.0, sigma=perf_model.SERVICE_NOISE_SIGMA))
 
@@ -248,9 +274,11 @@ class EventEngine:
         self._refresh_pods(st)
         self._count_actions(t, st, before)
         self._cost_rates = self.cost.rates(self.recon)
+        self._frag_rate = self.recon.fragmentation()
         st.timeline.append(
             (t, observed, len(st.pod_order),
-             sum((p.sm / 8.0) * p.quota for p in st.pod_order)))
+             sum((p.sm / (p.gpu_type.sm_total if p.gpu_type else 8.0))
+                 * p.quota for p in st.pod_order)))
         if self.track_peak:
             self.peak_gpus = max(self.peak_gpus,
                                  len(self.recon.used_gpus()))
@@ -314,6 +342,12 @@ class EventEngine:
 
     # ---- main loop ---------------------------------------------------------
     def run(self) -> None:
+        """Drain the event heap to completion: seeds first arrivals and
+        autoscale timers, then processes events in (time, kind, seq)
+        order while integrating cost and fragmentation exactly between
+        events. Arrivals later than ``duration_s + drop_after_s`` are
+        shed. After return, every ``FunctionState`` holds its completed
+        requests and the cost meter its integrated totals."""
         cfg = self.cfg
         cutoff = cfg.duration_s + cfg.drop_after_s
         for st in self.fns.values():
@@ -322,8 +356,10 @@ class EventEngine:
                 self._push(st._arr[0], ARRIVAL, st)
             self._push(0.0, AUTOSCALE, st)
         self._cost_rates = self.cost.rates(self.recon)
+        self._frag_rate = self.recon.fragmentation()
         usd_rate, gsec_rate = self._cost_rates
-        usd = gsec = 0.0
+        frag_rate = self._frag_rate
+        usd = gsec = frag = 0.0
         last_t = 0.0
         heap = self._heap
         pop = heapq.heappop
@@ -333,11 +369,13 @@ class EventEngine:
                 # anything still queued has, by construction, aged out
                 usd += usd_rate * (cutoff - last_t)
                 gsec += gsec_rate * (cutoff - last_t)
+                frag += frag_rate * (cutoff - last_t)
                 last_t = cutoff
                 break
             if t > last_t:
                 usd += usd_rate * (t - last_t)
                 gsec += gsec_rate * (t - last_t)
+                frag += frag_rate * (t - last_t)
                 last_t = t
             self.now = t
             if kind == ARRIVAL:
@@ -345,14 +383,25 @@ class EventEngine:
             elif kind == AUTOSCALE:
                 self._on_autoscale(t, st)
                 usd_rate, gsec_rate = self._cost_rates
+                frag_rate = self._frag_rate
             else:
                 self._dispatch(t, st)
         if last_t < cfg.duration_s:  # idle pods accrue cost to end of run
             usd += usd_rate * (cfg.duration_s - last_t)
             gsec += gsec_rate * (cfg.duration_s - last_t)
+            frag += frag_rate * (cfg.duration_s - last_t)
         self.cost.total_usd += usd
         self.cost.gpu_seconds += gsec
+        self.frag_integral += frag
+        self._integrated_to = max(last_t, cfg.duration_s)
         self._flush()
+
+    def fragmentation_avg(self) -> float:
+        """Time-averaged fraction of slice capacity on used chips left
+        unallocated over the integrated horizon — the spatial-waste
+        metric mixed-fleet bin-packing (FleetPlacer) minimizes."""
+        horizon = getattr(self, "_integrated_to", 0.0)
+        return self.frag_integral / horizon if horizon > 0 else 0.0
 
     def _flush(self) -> None:
         for st in self.fns.values():

@@ -12,16 +12,24 @@ baseline) across functions, so multi-function runs aggregate without
 privileging any one function's absolute latency scale; dropped requests
 count as violations at every multiplier (normalized latency = inf),
 matching ``SimResult.violations``.
+
+Runs on a non-reference fleet (any declared GPU type other than the
+default) additionally carry ``fragmentation`` — the time-averaged
+free-slice fraction on used chips, the spatial-waste metric the
+placement-aware scheduler minimizes. The field is omitted from the
+serialized record for reference-fleet runs so every pre-heterogeneity
+golden stays byte-identical.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import math
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.configs.gpus import DEFAULT_GPU_TYPE
 from repro.core import perf_model
 from repro.core.slo import percentiles
 
@@ -71,6 +79,10 @@ class RunMetrics:
     cold_starts: int
     scaling_actions: Dict[str, int]       # vup / vdown / hup / hdown
     peak_gpus: int
+    # time-averaged free-slice fraction on used chips; None (and absent
+    # from the JSON) for reference-fleet runs — legacy goldens pin the
+    # exact serialized byte stream
+    fragmentation: Optional[float] = None
 
     # ---- construction ------------------------------------------------------
     @classmethod
@@ -104,6 +116,13 @@ class RunMetrics:
                                 else 1.0)
                 for m in slo_multipliers}
         cost = engine.cost
+        # surface fragmentation only for non-reference fleets: the
+        # serialized record of an all-default run must stay bitwise
+        # what it was before heterogeneity existed
+        frag = None
+        fleet = getattr(engine.recon, "fleet", ())
+        if any(t != DEFAULT_GPU_TYPE for t, _ in fleet):
+            frag = float(engine.fragmentation_avg())
         return cls(
             scenario=scenario, policy=policy, seed=int(seed),
             duration_s=float(engine.cfg.duration_s),
@@ -115,11 +134,16 @@ class RunMetrics:
             cost_per_1k_usd=cost.per_1k_requests(n_completed),
             gpu_seconds=cost.gpu_seconds,
             cold_starts=cold, scaling_actions=actions,
-            peak_gpus=int(engine.peak_gpus))
+            peak_gpus=int(engine.peak_gpus),
+            fragmentation=frag)
 
     # ---- serialization -----------------------------------------------------
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
+        if d.get("fragmentation") is None:
+            d.pop("fragmentation", None)   # reference-fleet runs omit it
+        else:
+            d["fragmentation"] = _jsonf(d["fragmentation"])
         for k in ("duration_s", "cost_usd", "cost_per_1k_usd",
                   "gpu_seconds"):
             d[k] = _jsonf(d[k])

@@ -17,6 +17,7 @@ from typing import List, Optional
 import numpy as np
 
 from repro.configs import ARCHS, ArchConfig, reduced
+from repro.configs.gpus import DEFAULT_GPU_TYPE, get_gpu_type
 from repro.core import perf_model
 from repro.core.perf_model import FnSpec
 from repro.core.rapp import features as F
@@ -75,10 +76,18 @@ class Dataset:
 def generate(corpus: Optional[List[ArchConfig]] = None,
              batches=BATCHES, sms=SMS, quotas=QUOTAS,
              samples_per_graph: int = 24, seed: int = 0,
-             with_runtime: bool = True, verbose: bool = False) -> Dataset:
-    """Sample (arch, batch) graphs x random (sm, quota) configs."""
+             with_runtime: bool = True, verbose: bool = False,
+             gpu_types=(DEFAULT_GPU_TYPE,)) -> Dataset:
+    """Sample (arch, batch) graphs x random (sm, quota) configs.
+
+    ``gpu_types`` widens the corpus across device classes: each sampled
+    config is measured (features AND label) on one of the given types,
+    so a single model learns the cross-device latency surface via the
+    device-descriptor features. The default single-reference tuple
+    reproduces the legacy dataset exactly."""
     rng = np.random.default_rng(seed)
     corpus = corpus or build_corpus()
+    gpu_types = [get_gpu_type(t) for t in gpu_types]
     rows = {k: [] for k in ("node_feats", "adj", "mask", "global", "prior")}
     labels, names = [], []
     for cfg in corpus:
@@ -90,21 +99,27 @@ def generate(corpus: Optional[List[ArchConfig]] = None,
                     print(f"skip {cfg.name} b={b}: {e}")
                 continue
             spec = FnSpec(cfg)
-            combos = list(itertools.product(sms, quotas))
-            pick = rng.choice(len(combos),
-                              size=min(samples_per_graph, len(combos)),
-                              replace=False)
-            for ci in pick:
-                sm, q = combos[ci]
-                t = F.tensorize(graph, spec, b, sm, q, rng,
-                                with_runtime=with_runtime)
-                label = perf_model.latency(spec, b, sm, q, rng=rng)
-                for k in rows:
-                    rows[k].append(t[k])
-                labels.append(np.log1p(label * 1e3))  # log(ms)
-                names.append(cfg.name)
+            n_rows = 0
+            for gpu in gpu_types:
+                # configs wider than the device saturate at its width
+                dev_sms = tuple(min(s, gpu.sm_total) for s in sms)
+                combos = sorted(set(itertools.product(dev_sms, quotas)))
+                pick = rng.choice(len(combos),
+                                  size=min(samples_per_graph, len(combos)),
+                                  replace=False)
+                for ci in pick:
+                    sm, q = combos[ci]
+                    t = F.tensorize(graph, spec, b, sm, q, rng,
+                                    with_runtime=with_runtime, gpu=gpu)
+                    label = perf_model.latency(spec, b, sm, q, rng=rng,
+                                               gpu=gpu)
+                    for k in rows:
+                        rows[k].append(t[k])
+                    labels.append(np.log1p(label * 1e3))  # log(ms)
+                    names.append(cfg.name)
+                n_rows += len(pick)
             if verbose:
-                print(f"{cfg.name} b={b}: {len(pick)} samples", flush=True)
+                print(f"{cfg.name} b={b}: {n_rows} samples", flush=True)
     return Dataset(
         node_feats=np.stack(rows["node_feats"]),
         adj=np.stack(rows["adj"]),

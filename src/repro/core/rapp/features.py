@@ -13,6 +13,12 @@ shape-driven roofline of each operator at slice granularity with
 measurement noise, standing in for TVM's debug-executor timings. RaPP
 never sees the simulator's full-model oracle; it must learn quota/window
 effects and graph aggregation from these per-op signals, as in the paper.
+
+Heterogeneous fleets: profiles are measured on the queried device (the
+profiler runs per device class, like any real benchmark harness), and
+the global feature vector carries a 3-dim device descriptor (log peak-
+FLOPs ratio, log bandwidth ratio, slice-count ratio vs the reference
+chip) so ONE RaPP model predicts across GPU types.
 """
 from __future__ import annotations
 
@@ -25,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ArchConfig
+from repro.configs.gpus import DEFAULT_GPU_TYPE, GPUType
 from repro.core.vgpu import TOTAL_SLICES
 
 OP_CLASSES = ("dot", "conv", "elementwise", "reduce", "gather",
@@ -33,8 +40,9 @@ N_OP_CLASSES = len(OP_CLASSES)
 SM_PROFILE_POINTS = (1, 2, 3, 4, 6, 8)       # paper: six SM configurations
 QUOTA_PROFILE_POINTS = (0.2, 0.4, 0.6, 0.8, 1.0)  # paper: five quotas
 
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
+PEAK_FLOPS = DEFAULT_GPU_TYPE.peak_flops
+HBM_BW = DEFAULT_GPU_TYPE.hbm_bw
+N_DEVICE_F = 3   # device descriptor dims in the global feature head
 
 _ELEMENTWISE = {"add", "sub", "mul", "div", "max", "min", "exp", "log",
                 "tanh", "logistic", "rsqrt", "sqrt", "pow", "integer_pow",
@@ -199,32 +207,36 @@ def extract_graph(cfg: ArchConfig, batch: int, seq: int = 128) -> OpGraph:
 
 
 # ------------------------------------------------------------- runtime prof
-def op_profile(node: OpNode, rng: np.random.Generator) -> np.ndarray:
+def op_profile(node: OpNode, rng: np.random.Generator,
+               gpu: GPUType = DEFAULT_GPU_TYPE) -> np.ndarray:
     """Per-operator latency at full quota under the 6 SM partitions —
-    the stand-in for the paper's TVM-debug-executor Runtime Profiler."""
+    the stand-in for the paper's TVM-debug-executor Runtime Profiler,
+    measured on the ``gpu`` device class (points wider than the device
+    saturate at its full width)."""
     out = np.zeros(len(SM_PROFILE_POINTS), np.float32)
     # shape-driven MXU efficiency: small contractions underfeed the MXU
     for i, sm in enumerate(SM_PROFILE_POINTS):
-        frac = sm / TOTAL_SLICES
+        frac = min(sm, gpu.sm_total) / gpu.sm_total
         eff = min(1.0, node.contraction / (128.0 * frac * 8)) \
             if node.op_class == OP_CLASSES.index("dot") else 1.0
         eff = max(eff, 0.05)
-        compute = node.flops / (frac * PEAK_FLOPS * eff)
-        memory = (node.bytes_in + node.bytes_out) / (frac * HBM_BW)
+        compute = node.flops / (frac * gpu.peak_flops * eff)
+        memory = (node.bytes_in + node.bytes_out) / (frac * gpu.hbm_bw)
         t = max(compute, memory) + 1e-6
         out[i] = t * rng.lognormal(0.0, 0.05)
     return out
 
 
-def graph_quota_profile(spec, batch: int,
-                        rng: np.random.Generator) -> np.ndarray:
+def graph_quota_profile(spec, batch: int, rng: np.random.Generator,
+                        gpu: GPUType = DEFAULT_GPU_TYPE) -> np.ndarray:
     """Whole-graph latency at full SM under the 5 quota points (paper:
     'runtime profiler evaluates the model under a full SM configuration
-    and five distinct quota configurations')."""
+    and five distinct quota configurations'), on the ``gpu`` device."""
     from repro.core import perf_model
     out = np.zeros(len(QUOTA_PROFILE_POINTS), np.float32)
     for i, q in enumerate(QUOTA_PROFILE_POINTS):
-        out[i] = perf_model.latency(spec, batch, TOTAL_SLICES, q, rng=rng)
+        out[i] = perf_model.latency(spec, batch, gpu.sm_total, q, rng=rng,
+                                    gpu=gpu)
     return out
 
 
@@ -233,7 +245,8 @@ MAX_NODES = 160
 NODE_STATIC_F = N_OP_CLASSES + 5
 NODE_RUNTIME_F = len(SM_PROFILE_POINTS)
 NODE_F = NODE_STATIC_F + NODE_RUNTIME_F
-GLOBAL_STATIC_F = 2 + N_OP_CLASSES + 3   # totals, counts, (b, sm, q)
+# totals, counts, (b, sm, q), device descriptor
+GLOBAL_STATIC_F = 2 + N_OP_CLASSES + 3 + N_DEVICE_F
 GLOBAL_RUNTIME_F = len(QUOTA_PROFILE_POINTS)
 GLOBAL_F = GLOBAL_STATIC_F + GLOBAL_RUNTIME_F
 
@@ -282,13 +295,25 @@ def _coarsen(graph: OpGraph, max_nodes: int) -> OpGraph:
                    graph.total_bytes, graph.class_counts)
 
 
+def device_descriptor(gpu: GPUType) -> np.ndarray:
+    """The 3-dim device embedding carried in the global features:
+    log peak-FLOPs ratio, log HBM-bandwidth ratio, and slice-count
+    ratio, all vs the reference device (so the reference embeds as
+    [0, 0, 1])."""
+    return np.array(
+        [np.log(gpu.peak_flops / DEFAULT_GPU_TYPE.peak_flops),
+         np.log(gpu.hbm_bw / DEFAULT_GPU_TYPE.hbm_bw),
+         gpu.sm_total / DEFAULT_GPU_TYPE.sm_total], np.float32)
+
+
 def tensorize_shared(graph: OpGraph, spec, batch: int,
-                     rng: np.random.Generator, with_runtime: bool = True):
+                     rng: np.random.Generator, with_runtime: bool = True,
+                     gpu: GPUType = DEFAULT_GPU_TYPE):
     """The (sm, quota)-independent part of tensorization: node features
-    (including the runtime profiles — measured once per (arch, batch),
-    like the paper's profiler, NOT per queried config), adjacency, node
-    mask, the global-feature head, and the raw quota profile. One call
-    serves an entire (sm x quota) config lattice."""
+    (including the runtime profiles — measured once per (arch, batch,
+    device), like the paper's profiler, NOT per queried config),
+    adjacency, node mask, the global-feature head, and the raw quota
+    profile. One call serves an entire (sm x quota) config lattice."""
     graph = _coarsen(graph, MAX_NODES)
     n = len(graph.nodes)
     feats = np.zeros((MAX_NODES, NODE_F), np.float32)
@@ -298,7 +323,7 @@ def tensorize_shared(graph: OpGraph, spec, batch: int,
         static = np.array([np.log1p(node.flops), np.log1p(node.bytes_in),
                            np.log1p(node.bytes_out), np.log1p(node.max_dim),
                            np.log1p(node.trips)], np.float32)
-        runtime = (np.log1p(op_profile(node, rng) * 1e6)
+        runtime = (np.log1p(op_profile(node, rng, gpu) * 1e6)
                    if with_runtime else np.zeros(NODE_RUNTIME_F, np.float32))
         feats[i] = np.concatenate([onehot, static, runtime])
     adj = np.zeros((MAX_NODES, MAX_NODES), np.float32)
@@ -313,19 +338,22 @@ def tensorize_shared(graph: OpGraph, spec, batch: int,
         [np.log1p(graph.total_flops), np.log1p(graph.total_bytes)],
         np.log1p(graph.class_counts), [np.log1p(batch)]])
     if with_runtime:
-        prof = graph_quota_profile(spec, batch, rng)  # seconds, full SM
+        prof = graph_quota_profile(spec, batch, rng, gpu)  # s, full SM
         g_rt = np.log1p(prof * 1e3)
     else:
         prof = None
         g_rt = np.zeros(GLOBAL_RUNTIME_F, np.float32)
     return {"node_feats": feats, "adj": adj, "mask": mask,
-            "head": head, "g_rt": g_rt, "prof": prof}
+            "head": head, "g_rt": g_rt, "prof": prof, "gpu": gpu}
 
 
 def _assemble(shared, sm: int, quota: float):
-    """Per-(sm, quota) completion of a shared tensorization."""
-    g_static = np.concatenate([shared["head"],
-                               [sm / TOTAL_SLICES, quota]]).astype(np.float32)
+    """Per-(sm, quota) completion of a shared tensorization (the device
+    comes from the shared dict — profiles were measured on it)."""
+    gpu = shared.get("gpu", DEFAULT_GPU_TYPE)
+    g_static = np.concatenate(
+        [shared["head"], [sm / gpu.sm_total, quota],
+         device_descriptor(gpu)]).astype(np.float32)
     prof = shared["prof"]
     if prof is not None:
         # closed-form prior: interpolate the quota profile at this quota,
@@ -333,7 +361,7 @@ def _assemble(shared, sm: int, quota: float):
         # refines (residual learning; the static-only baseline has no
         # profile, hence prior = 0 — the paper's DIPPM handicap)
         q_lat = float(np.interp(quota, QUOTA_PROFILE_POINTS, prof))
-        prior = np.log1p(q_lat * (TOTAL_SLICES / max(sm, 1)) * 1e3)
+        prior = np.log1p(q_lat * (gpu.sm_total / max(sm, 1)) * 1e3)
     else:
         prior = 0.0
     return (np.concatenate([g_static, shared["g_rt"]]).astype(np.float32),
@@ -341,11 +369,12 @@ def _assemble(shared, sm: int, quota: float):
 
 
 def tensorize(graph: OpGraph, spec, batch: int, sm: int, quota: float,
-              rng: np.random.Generator, with_runtime: bool = True):
+              rng: np.random.Generator, with_runtime: bool = True,
+              gpu: GPUType = DEFAULT_GPU_TYPE):
     """-> dict of numpy arrays: node_feats (MAX_NODES, NODE_F), adj mask,
     node mask, global feats (GLOBAL_F,)."""
     shared = tensorize_shared(graph, spec, batch, rng,
-                              with_runtime=with_runtime)
+                              with_runtime=with_runtime, gpu=gpu)
     g, prior = _assemble(shared, sm, quota)
     return {"node_feats": shared["node_feats"], "adj": shared["adj"],
             "mask": shared["mask"], "global": g, "prior": prior}
@@ -353,16 +382,17 @@ def tensorize(graph: OpGraph, spec, batch: int, sm: int, quota: float,
 
 def tensorize_lattice(graph: OpGraph, spec, batch: int, points,
                       rng: np.random.Generator, with_runtime: bool = True,
-                      shared=None):
+                      shared=None, gpu: GPUType = DEFAULT_GPU_TYPE):
     """Tensorize every (sm, quota) in ``points`` against ONE shared
     feature extraction: node features / adjacency / mask are common to
     the whole lattice (vmap them with in_axes=None); only the stacked
     global features and priors vary per point. Pass ``shared`` (a
-    cached `tensorize_shared` result) to skip re-extraction — `graph`
-    and `rng` are then unused."""
+    cached `tensorize_shared` result) to skip re-extraction — `graph`,
+    `rng`, and `gpu` are then unused (the shared dict pins the
+    device)."""
     if shared is None:
         shared = tensorize_shared(graph, spec, batch, rng,
-                                  with_runtime=with_runtime)
+                                  with_runtime=with_runtime, gpu=gpu)
     gs, priors = zip(*(_assemble(shared, sm, q) for sm, q in points))
     return {"node_feats": shared["node_feats"], "adj": shared["adj"],
             "mask": shared["mask"], "global": np.stack(gs),

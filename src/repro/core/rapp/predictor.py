@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.gpus import DEFAULT_GPU_TYPE
 from repro.core.rapp import features as F
 from repro.core.rapp import gat
 
@@ -79,19 +80,22 @@ def predict_latency_ms(params, batch_dict):
 _GRAPH_CACHE = {}   # (arch name, batch, seq) -> coarsened OpGraph
 
 
-def _profile_rng(seed: int, arch_name: str, batch: int, seq: int
-                 ) -> np.random.Generator:
+def _profile_rng(seed: int, arch_name: str, batch: int, seq: int,
+                 gpu=DEFAULT_GPU_TYPE) -> np.random.Generator:
     """Profiling-noise generator derived from the query key.
 
     The profile noise models *measurement* jitter, so it must be a
     fixed property of what was profiled — a shared generator made
     predicted latencies depend on query ORDER. The profiles are
-    measured once per (arch, batch) and reused for every queried
-    (sm, quota), exactly like the paper's runtime profiler, so the
-    seed covers the (arch, batch) part of the query key. blake2s (not
-    Python `hash`, which is salted per process) keys the stream
-    stably."""
+    measured once per (arch, batch, device) and reused for every
+    queried (sm, quota), exactly like the paper's runtime profiler, so
+    the seed covers the (arch, batch, device) part of the query key.
+    blake2s (not Python `hash`, which is salted per process) keys the
+    stream stably; the reference device keeps the legacy tag so its
+    streams (and hence predictions) are unchanged."""
     tag = f"{seed}|{arch_name}|{batch}|{seq}"
+    if gpu is not None and gpu != DEFAULT_GPU_TYPE:
+        tag += f"|{gpu.name}"
     digest = hashlib.blake2s(tag.encode(), digest_size=8).digest()
     return np.random.default_rng(int.from_bytes(digest, "little"))
 
@@ -127,20 +131,24 @@ class RaPPModel:
             _GRAPH_CACHE[key] = F._coarsen(g, F.MAX_NODES)
         return _GRAPH_CACHE[key]
 
-    def _shared_tensors(self, spec, batch):
-        key = (spec.arch.name, batch, spec.seq)
+    def _shared_tensors(self, spec, batch, gpu=None):
+        gpu = gpu or DEFAULT_GPU_TYPE
+        key = (spec.arch.name, batch, spec.seq, gpu.name)
         if key not in self._shared:
-            rng = _profile_rng(self.seed, spec.arch.name, batch, spec.seq)
+            rng = _profile_rng(self.seed, spec.arch.name, batch, spec.seq,
+                               gpu)
             self._shared[key] = F.tensorize_shared(
                 self._graph(spec, batch), spec, batch, rng,
-                with_runtime=self.cfg.with_runtime)
+                with_runtime=self.cfg.with_runtime, gpu=gpu)
         return self._shared[key]
 
-    def __call__(self, spec, batch, sm, quota) -> float:
-        key = (spec.arch.name, batch, spec.seq, sm, round(quota, 3))
+    def __call__(self, spec, batch, sm, quota, gpu=None) -> float:
+        gpu = gpu or DEFAULT_GPU_TYPE
+        key = (spec.arch.name, batch, spec.seq, sm, round(quota, 3),
+               gpu.name)
         if key in self._cache:
             return self._cache[key]
-        sh = self._shared_tensors(spec, batch)
+        sh = self._shared_tensors(spec, batch, gpu)
         g, prior = F._assemble(sh, sm, quota)
         logl = self._jit(self.params, sh["node_feats"], sh["adj"],
                          sh["mask"], g, prior)
@@ -148,11 +156,14 @@ class RaPPModel:
         self._cache[key] = lat_s
         return lat_s
 
-    def predict_lattice(self, spec, batch, sms, quotas) -> np.ndarray:
-        """(len(sms), len(quotas)) latency seconds for the full lattice,
-        evaluated in one batched forward pass."""
+    def predict_lattice(self, spec, batch, sms, quotas,
+                        gpu=None) -> np.ndarray:
+        """(len(sms), len(quotas)) latency seconds for the full lattice
+        on device ``gpu`` (reference when None), evaluated in one
+        batched forward pass."""
+        gpu = gpu or DEFAULT_GPU_TYPE
         points = [(int(sm), float(q)) for sm in sms for q in quotas]
-        sh = self._shared_tensors(spec, batch)
+        sh = self._shared_tensors(spec, batch, gpu)
         t = F.tensorize_lattice(None, spec, batch, points, None,
                                 shared=sh)
         logl = np.asarray(self._jit_lattice(
@@ -164,6 +175,7 @@ class RaPPModel:
             # first writer wins so scalar and lattice paths never
             # disagree about an already-served key
             self._cache.setdefault(
-                (spec.arch.name, batch, spec.seq, sm, round(q, 3)),
+                (spec.arch.name, batch, spec.seq, sm, round(q, 3),
+                 gpu.name),
                 float(v))
         return lat_s.reshape(len(sms), len(quotas))

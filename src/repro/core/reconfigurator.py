@@ -23,27 +23,62 @@ Cluster-state reads are indexed for the control plane's hot path:
     ZERO predictor calls per autoscale event. (The sum itself is
     re-folded in pod order rather than kept as a running float so the
     result is bitwise identical to the naive re-summation.)
+Heterogeneous fleets: a Reconfigurator can be constructed with a
+``fleet`` — an ordered list of ``(GPUType, max_chips)`` pairs — instead
+of the homogeneous ``max_gpus`` cap. ``add_gpu`` then allocates from
+the first type with remaining capacity (or a requested type), and the
+placement-aware policies read ``available_gpu_types`` /
+``is_heterogeneous`` / ``fragmentation`` to bin-pack across the mix.
+The default fleet is a single reference-type pool of ``max_gpus``
+chips, which reproduces the legacy behavior exactly.
 """
 from __future__ import annotations
 
 import itertools
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.configs.gpus import DEFAULT_GPU_TYPE, GPUType, get_gpu_type
 from repro.core.vgpu import PodAlloc, VirtualGPU
 
 
 class Reconfigurator:
     def __init__(self, num_gpus: int = 0, gpus_per_node: int = 1,
-                 window_ms: float = 100.0, max_gpus: Optional[int] = None):
+                 window_ms: float = 100.0, max_gpus: Optional[int] = None,
+                 fleet: Optional[Sequence[Tuple]] = None):
         self.gpus: Dict[str, VirtualGPU] = {}
         self.window_ms = window_ms
         self.gpus_per_node = gpus_per_node
         self.max_gpus = max_gpus
+        # fleet: ordered (GPUType, cap) pairs; None cap = unbounded.
+        # The default single-entry reference fleet IS the legacy
+        # homogeneous cluster (same uuids, same cap semantics).
+        if fleet is None:
+            self.fleet: Tuple[Tuple[GPUType, Optional[int]], ...] = (
+                (DEFAULT_GPU_TYPE, max_gpus),)
+        else:
+            # merge duplicate-type pools (first-occurrence order): caps
+            # sum, an unbounded pool makes the type unbounded — so
+            # _cap_of / available_gpu_types / max_gpus all agree on one
+            # number per type
+            merged: Dict[GPUType, Optional[int]] = {}
+            for t, cap in fleet:
+                t = get_gpu_type(t)
+                if t not in merged:
+                    merged[t] = cap
+                elif merged[t] is None or cap is None:
+                    merged[t] = None
+                else:
+                    merged[t] += cap
+            self.fleet = tuple(merged.items())
+            caps = [c for _, c in self.fleet]
+            self.max_gpus = (sum(caps) if all(c is not None for c in caps)
+                             else None)
         # per-instance counter: GPU uuids are a function of this
         # cluster's own history, not of how many Reconfigurators the
         # process created before it (a module-level count made runs
         # irreproducible within one process)
         self._gpu_counter = itertools.count()
+        self._type_counts: Dict[GPUType, int] = {}   # live chips per type
         # ---- hot-path indexes ----
         self._pods: Dict[str, PodAlloc] = {}          # pod_id -> pod
         self._pod_gpu: Dict[str, str] = {}            # pod_id -> gpu uuid
@@ -54,15 +89,62 @@ class Reconfigurator:
             self.add_gpu()
 
     # ---- topology ----------------------------------------------------------
-    def add_gpu(self) -> VirtualGPU:
-        if self.max_gpus is not None and len(self.gpus) >= self.max_gpus:
-            raise RuntimeError("cluster at max GPU capacity")
+    @property
+    def is_heterogeneous(self) -> bool:
+        """True when the fleet declares more than one device type."""
+        return len({t for t, _ in self.fleet}) > 1
+
+    def _cap_of(self, gpu_type: GPUType) -> Optional[int]:
+        for t, cap in self.fleet:
+            if t == gpu_type:
+                return cap
+        return 0   # type not in this fleet
+
+    def type_count(self, gpu_type: GPUType) -> int:
+        """Live chips of ``gpu_type`` currently in the cluster."""
+        return self._type_counts.get(gpu_type, 0)
+
+    def available_gpu_types(self, min_sm: int = 1) -> List[GPUType]:
+        """Fleet types (declaration order) that can still provision a
+        fresh chip wide enough for an ``sm >= min_sm`` pod."""
+        out = []
+        for t, cap in self.fleet:
+            if t.sm_total < min_sm or t in out:
+                continue
+            if cap is None or self.type_count(t) < cap:
+                out.append(t)
+        return out
+
+    def add_gpu(self, gpu_type=None, min_sm: int = 1) -> VirtualGPU:
+        """Provision one fresh chip.
+
+        Args:
+            gpu_type: a ``GPUType`` (or registry name) to allocate; None
+                picks the first fleet type with remaining capacity that
+                fits ``min_sm``.
+            min_sm: minimum slice width the chip must offer (so a pod
+                sized for an 8-slice device never lands on a 4-slice
+                one).
+        Raises: RuntimeError when the fleet is exhausted.
+        """
+        if gpu_type is not None:
+            t = get_gpu_type(gpu_type)
+            cap = self._cap_of(t)
+            if cap is not None and self.type_count(t) >= cap:
+                raise RuntimeError("cluster at max GPU capacity")
+        else:
+            avail = self.available_gpu_types(min_sm)
+            if not avail:
+                raise RuntimeError("cluster at max GPU capacity")
+            t = avail[0]
         i = next(self._gpu_counter)
         uuid = f"GPU-{i:04d}"
         node = f"node-{i // self.gpus_per_node}"
-        g = VirtualGPU(uuid, node=node, window_ms=self.window_ms, index=i)
+        g = VirtualGPU(uuid, node=node, window_ms=self.window_ms, index=i,
+                       gpu_type=t)
         g.owner = self   # direct GPU-level mutations keep indexes fresh
         self.gpus[uuid] = g
+        self._type_counts[t] = self._type_counts.get(t, 0) + 1
         return g
 
     def release_empty_gpus(self, keep: int = 0) -> List[str]:
@@ -72,7 +154,9 @@ class Reconfigurator:
         for u in empty:
             if len(self.gpus) <= keep:
                 break
-            self.gpus[u].owner = None
+            g = self.gpus[u]
+            g.owner = None
+            self._type_counts[g.gpu_type] -= 1
             del self.gpus[u]
             released.append(u)
         return released
@@ -102,6 +186,17 @@ class Reconfigurator:
         if not used:
             return None
         return min(used, key=lambda g: g.hgo)
+
+    def fragmentation(self) -> float:
+        """Fraction of slice capacity on USED chips left unallocated —
+        the spatial-waste metric mixed-fleet bin-packing minimizes
+        (0.0 for an empty cluster)."""
+        used = self.used_gpus()
+        total = sum(g.gpu_type.sm_total for g in used)
+        if not total:
+            return 0.0
+        free = sum(g.slices_free for g in used)
+        return free / total
 
     # ---- incremental per-function capacity ---------------------------------
     def register_capacity_model(self, fn_id: str,
@@ -155,9 +250,13 @@ class Reconfigurator:
 
     # ---- mutations ---------------------------------------------------------
     def place_pod(self, pod: PodAlloc, gpu_uuid: Optional[str] = None,
-                  now: float = 0.0, cold_start_s: float = 0.0) -> PodAlloc:
+                  now: float = 0.0, cold_start_s: float = 0.0,
+                  gpu_type=None) -> PodAlloc:
+        """Place ``pod`` on ``gpu_uuid``, or on a fresh chip when None
+        (of ``gpu_type`` if given, else the first fleet type with
+        capacity wide enough for ``pod.sm``)."""
         if gpu_uuid is None:
-            g = self.add_gpu()
+            g = self.add_gpu(gpu_type, min_sm=pod.sm)
         else:
             g = self.gpus[gpu_uuid]
         pod.created_at = now

@@ -14,6 +14,11 @@ SM alignment (paper Fig 2): pods within a GPU are stacked onto aligned
 partitions — a new pod either joins an existing partition of the same size
 (sharing its time window) or carves a new partition from free slices.
 This prevents spatial fragmentation.
+
+Since the heterogeneous-fleet refactor each ``VirtualGPU`` carries a
+``GPUType`` (``configs/gpus.py``): slice capacity is the type's
+``sm_total`` (``TOTAL_SLICES`` remains the reference device's 8), and
+occupancy/cost fractions are relative to that capacity.
 """
 from __future__ import annotations
 
@@ -21,23 +26,36 @@ import dataclasses
 import itertools
 from typing import Dict, List, Optional
 
-TOTAL_SLICES = 8          # slice granularity of one chip (1/8 .. 8/8)
+from repro.configs.gpus import DEFAULT_GPU_TYPE, GPU_TYPES, GPUType
+
+TOTAL_SLICES = 8          # slice granularity of the REFERENCE chip type
 DEFAULT_WINDOW_MS = 100.0  # time-token window (cgroups-like period)
+
+# pods can never be wider than the widest registered device
+_MAX_POD_SM = max(t.sm_total for t in GPU_TYPES.values())
 
 _pod_counter = itertools.count()
 
 
 @dataclasses.dataclass
 class PodAlloc:
-    """One function instance and its resource allocation."""
+    """One function instance and its resource allocation.
+
+    ``sm`` is validated against the widest registered device here; the
+    strict per-device bound (``sm <= gpu_type.sm_total``) is enforced at
+    placement, where the hosting chip is known. ``gpu_type`` is stamped
+    by ``VirtualGPU.place`` so the pod's physics (service times,
+    throughput, billing) follow the device actually hosting it.
+    """
     fn_id: str
-    sm: int                      # slices in its partition (1..TOTAL_SLICES)
+    sm: int                      # slices in its partition (1..sm_total)
     quota: float                 # time-token share of the partition window
     batch: int                   # serving batch size
     pod_id: str = ""
     gpu_uuid: str = ""
     created_at: float = 0.0
     ready_at: float = 0.0        # cold start completion time
+    gpu_type: Optional[GPUType] = None   # stamped at placement
 
     def __post_init__(self):
         if not self.pod_id:
@@ -45,7 +63,7 @@ class PodAlloc:
         self._validate()
 
     def _validate(self):
-        if not (1 <= self.sm <= TOTAL_SLICES):
+        if not (1 <= self.sm <= _MAX_POD_SM):
             raise ValueError(f"sm={self.sm} out of range")
         if not (0.0 < self.quota <= 1.0 + 1e-9):
             raise ValueError(f"quota={self.quota} out of range")
@@ -70,11 +88,13 @@ class VirtualGPU:
     """One physical chip under HAS scheduling."""
 
     def __init__(self, uuid: str, node: str = "node-0",
-                 window_ms: float = DEFAULT_WINDOW_MS, index: int = 0):
+                 window_ms: float = DEFAULT_WINDOW_MS, index: int = 0,
+                 gpu_type: GPUType = DEFAULT_GPU_TYPE):
         self.uuid = uuid
         self.node = node
         self.window_ms = window_ms
         self.index = index           # creation order within its cluster
+        self.gpu_type = gpu_type
         self.partitions: List[Partition] = []
         self._pod_part: Dict[str, Partition] = {}  # pod_id -> partition
         # the owning Reconfigurator (if any) keeps cluster-wide indexes;
@@ -84,12 +104,17 @@ class VirtualGPU:
 
     # ---- capacity queries -------------------------------------------------
     @property
+    def sm_total(self) -> int:
+        """Slice capacity of this chip (its type's granularity)."""
+        return self.gpu_type.sm_total
+
+    @property
     def slices_used(self) -> int:
         return sum(p.sm for p in self.partitions)
 
     @property
     def slices_free(self) -> int:
-        return TOTAL_SLICES - self.slices_used
+        return self.gpu_type.sm_total - self.slices_used
 
     @property
     def pods(self) -> List[PodAlloc]:
@@ -97,8 +122,10 @@ class VirtualGPU:
 
     @property
     def hgo(self) -> float:
-        """HAS GPU Occupancy: sum over pods of (sm/8) * quota (paper L11)."""
-        return sum((pod.sm / TOTAL_SLICES) * pod.quota for pod in self.pods)
+        """HAS GPU Occupancy: sum over pods of (sm/sm_total) * quota
+        (paper L11), relative to this chip's own slice capacity."""
+        return sum((pod.sm / self.gpu_type.sm_total) * pod.quota
+                   for pod in self.pods)
 
     def partition_of(self, pod_id: str) -> Optional[Partition]:
         return self._pod_part.get(pod_id)
@@ -144,9 +171,11 @@ class VirtualGPU:
             self.partitions.append(part)
         if part is None:
             raise RuntimeError(
-                f"GPU {self.uuid}: cannot place sm={pod.sm} "
-                f"q={pod.quota:.2f} (free slices {self.slices_free})")
+                f"GPU {self.uuid} ({self.gpu_type.name}): cannot place "
+                f"sm={pod.sm} q={pod.quota:.2f} "
+                f"(free slices {self.slices_free})")
         pod.gpu_uuid = self.uuid
+        pod.gpu_type = self.gpu_type
         self._pod_part[pod.pod_id] = part
         if self.owner is not None:
             self.owner._index_place(pod, self)
@@ -182,6 +211,6 @@ class VirtualGPU:
 
     def invariant_ok(self) -> bool:
         """Conservation invariants (used by property tests)."""
-        if self.slices_used > TOTAL_SLICES:
+        if self.slices_used > self.gpu_type.sm_total:
             return False
         return all(p.quota_used <= 1.0 + 1e-9 for p in self.partitions)

@@ -1,16 +1,18 @@
 """Scenario engine: named, seeded workload regimes bound to fleet configs.
 
 A ``Scenario`` binds an arrival-process generator (``generators.py`` /
-``azure.py``) to function specs, SLO multipliers, and a fleet config,
-and knows how to drive either simulator (``ClusterSimulator`` for one
-function, ``MultiFunctionSimulator`` for a co-located set) under any of
-the registered policies. Every run emits one ``RunMetrics`` record
-(``core/metrics.py``) — the unit the golden-trace regression suite
-pins.
+``azure.py``) to function specs, SLO multipliers, and a fleet config —
+homogeneous (``max_gpus`` chips of the reference type) or heterogeneous
+(an ordered ``fleet`` of ``(gpu_type_name, max_chips)`` pools from
+``configs/gpus.py``) — and knows how to drive either simulator
+(``ClusterSimulator`` for one function, ``MultiFunctionSimulator`` for
+a co-located set) under any of the registered policies. Every run emits
+one ``RunMetrics`` record (``core/metrics.py``) — the unit the
+golden-trace regression suite pins.
 
-Adding a scenario is one ``register(Scenario(...))`` call; see the
-README ("Scenario registry") for the golden-regeneration step that must
-accompany it.
+Adding a scenario is one ``register(Scenario(...))`` call; see
+``docs/scenarios.md`` (kept drift-free by ``tests/test_docs.py``) for
+the catalogue and the golden-regeneration step that must accompany it.
 """
 from __future__ import annotations
 
@@ -39,14 +41,24 @@ _FN_SEED_STRIDE = 7919
 
 
 def make_policy(name: str, recon: Reconfigurator):
+    """Instantiate the registered policy ``name`` (``has``/``kserve``/
+    ``fast``) with its default config against cluster ``recon``."""
     return POLICIES[name][0](recon)
 
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
-    """One named workload regime. ``trace`` follows the generator
-    calling convention ``(duration_s, base_rps, seed) -> arrival times``
-    and is re-invoked per function with decorrelated seeds."""
+    """One named workload regime.
+
+    ``trace`` follows the generator calling convention
+    ``(duration_s, base_rps, seed) -> sorted arrival times`` and is
+    re-invoked per function with decorrelated seeds. ``fleet`` is an
+    optional ordered tuple of ``(gpu_type_name, max_chips)`` pools
+    (``configs/gpus.py`` names); None means the legacy homogeneous
+    cluster of ``max_gpus`` reference-type chips — the construction
+    path, and therefore the golden traces, of every pre-heterogeneity
+    scenario.
+    """
     name: str
     description: str
     trace: Callable[[float, float, int], np.ndarray]
@@ -56,30 +68,56 @@ class Scenario:
     slo_multipliers: Tuple[float, ...] = DEFAULT_MULTIPLIERS
     max_gpus: int = 64
     colocated: bool = False
+    fleet: Optional[Tuple[Tuple[str, int], ...]] = None
 
     def with_(self, **overrides) -> "Scenario":
-        """A derived scenario (e.g. another arch or horizon)."""
+        """A derived scenario (e.g. another arch, horizon, or fleet)."""
         return dataclasses.replace(self, **overrides)
 
     def fn_specs(self):
+        """The ``FnSpec`` list this scenario serves (one per arch)."""
         return [FnSpec(ARCHS[a]) for a in self.archs]
+
+    def make_recon(self, fleet=None) -> Reconfigurator:
+        """Build this scenario's cluster. ``fleet`` overrides the
+        scenario's own fleet declaration (used by benchmark CLIs to
+        force e.g. an all-premium fleet); None falls through to the
+        scenario default."""
+        fleet = fleet if fleet is not None else self.fleet
+        if fleet is not None:
+            return Reconfigurator(num_gpus=0, fleet=fleet)
+        return Reconfigurator(num_gpus=0, max_gpus=self.max_gpus)
 
     def arrivals_for(self, fn_index: int, duration_s: float,
                      base_rps: float, seed: int) -> np.ndarray:
+        """The (decorrelated) arrival-time trace of function
+        ``fn_index`` for one run of this scenario."""
         return self.trace(duration_s, base_rps,
                           seed + _FN_SEED_STRIDE * fn_index)
 
     def run(self, policy: str = "has", seed: int = 0,
             duration_s: Optional[float] = None,
             base_rps: Optional[float] = None,
-            policy_factory: Optional[Callable] = None) -> "ScenarioOutcome":
+            policy_factory: Optional[Callable] = None,
+            fleet=None) -> "ScenarioOutcome":
         """Simulate this scenario under ``policy`` and fold the run into
-        a ``RunMetrics``. ``policy_factory(policy_name, recon)`` lets
-        ablations substitute custom-configured policies."""
+        a ``RunMetrics``.
+
+        Args:
+            policy: registered policy name (``has``/``kserve``/``fast``).
+            seed: RNG seed for traces and service noise.
+            duration_s/base_rps: optional overrides of the scenario's
+                horizon and load.
+            policy_factory: ``(policy_name, recon) -> policy`` hook for
+                ablations substituting custom-configured policies.
+            fleet: fleet-declaration override (see ``make_recon``).
+        Returns: a ``ScenarioOutcome`` with the run's ``RunMetrics``,
+        the engine-level result object, and the simulator itself.
+        """
         dur = self.duration_s if duration_s is None else duration_s
         rps = self.base_rps if base_rps is None else base_rps
         specs = self.fn_specs()
-        recon = Reconfigurator(num_gpus=0, max_gpus=self.max_gpus)
+        recon = self.make_recon(fleet)
         whole = POLICIES[policy][1]
         cfg = SimConfig(duration_s=dur, whole_gpu_cost=whole, seed=seed)
         factory = policy_factory or make_policy
@@ -105,6 +143,9 @@ class Scenario:
 
 @dataclasses.dataclass
 class ScenarioOutcome:
+    """What one ``Scenario.run`` returns: the unified ``RunMetrics``
+    record (what goldens pin), the engine-level result object, and the
+    simulator itself for introspection."""
     metrics: RunMetrics
     result: object       # SimResult or MultiSimResult
     simulator: object    # ClusterSimulator or MultiFunctionSimulator
@@ -116,6 +157,9 @@ SCENARIOS: Dict[str, Scenario] = {}
 
 
 def register(scenario: Scenario) -> Scenario:
+    """Add ``scenario`` to the registry (its golden must be generated
+    alongside — see docs/scenarios.md). Raises ValueError on duplicate
+    names; returns the scenario for chaining."""
     if scenario.name in SCENARIOS:
         raise ValueError(f"scenario {scenario.name!r} already registered")
     SCENARIOS[scenario.name] = scenario
@@ -123,6 +167,8 @@ def register(scenario: Scenario) -> Scenario:
 
 
 def get_scenario(name: str) -> Scenario:
+    """Look up a registered scenario by name; KeyError lists the
+    registered names on a miss."""
     try:
         return SCENARIOS[name]
     except KeyError:
@@ -131,6 +177,7 @@ def get_scenario(name: str) -> Scenario:
 
 
 def scenario_names():
+    """Sorted names of every registered scenario."""
     return sorted(SCENARIOS)
 
 
@@ -193,3 +240,29 @@ register(Scenario(
     base_rps=12.0,
     max_gpus=96,
     colocated=True))
+
+register(Scenario(
+    name="het_mix",
+    description="Diurnal load on a mixed a10g/a100/h100/t4 fleet — "
+                "placement-aware scheduling fills the cheap SLO-capable "
+                "a10g pool first and overflows onto premium chips, "
+                "undercutting an all-premium fleet severalfold in USD "
+                "(fig6 --scenario het_mix [--fleet all_premium]).",
+    trace=lambda d, r, s: generators.diurnal(d, r, amplitude=0.7,
+                                             period_s=180.0, seed=s),
+    base_rps=25.0,
+    fleet=(("a10g", 24), ("a100", 8), ("h100", 4), ("t4", 16))))
+
+register(Scenario(
+    name="spot_t4_burst",
+    description="Spot-first serving: calm load rides cheap t4 slivers "
+                "(eligible only at small batches, ~90 rps ceiling per "
+                "chip); a 10x flash crowd exceeds every spot-eligible "
+                "config, so burst capacity provisions on the on-demand "
+                "a100 pool and is released when the spike drains.",
+    trace=lambda d, r, s: generators.flash_crowd(d, r,
+                                                 spike_multiplier=10.0,
+                                                 ramp_s=2.0, hold_s=20.0,
+                                                 seed=s),
+    base_rps=30.0,
+    fleet=(("t4", 16), ("a100", 4))))

@@ -1,0 +1,72 @@
+"""Docs drift gates, run in tier-1 (not only in the CI docs job):
+
+  * docs/scenarios.md must document exactly the registered scenarios
+    (its ``## `` headings are compared to the registry by name);
+  * every intra-repo Markdown link in README.md / docs/*.md resolves
+    (tools/check_links.py);
+  * the designated public APIs stay documented
+    (tools/check_docstrings.py).
+"""
+import pathlib
+import re
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "tools"))
+
+import check_docstrings  # noqa: E402
+import check_links  # noqa: E402
+
+from repro.workloads.scenarios import get_scenario, scenario_names  # noqa: E402
+
+SCENARIOS_MD = REPO / "docs" / "scenarios.md"
+ARCHITECTURE_MD = REPO / "docs" / "architecture.md"
+
+
+def documented_scenarios():
+    """The ``## <name>`` headings of docs/scenarios.md, in file order."""
+    return re.findall(r"^## +(\S+) *$", SCENARIOS_MD.read_text(),
+                      flags=re.M)
+
+
+def test_docs_exist_and_are_linked_from_readme():
+    assert SCENARIOS_MD.exists() and ARCHITECTURE_MD.exists()
+    readme = (REPO / "README.md").read_text()
+    assert "docs/architecture.md" in readme
+    assert "docs/scenarios.md" in readme
+
+
+def test_scenarios_doc_matches_registry_exactly():
+    """The doc's heading set == the registry's name set: a scenario
+    cannot be added, renamed, or removed without updating the page."""
+    documented = documented_scenarios()
+    assert len(documented) == len(set(documented)), "duplicate headings"
+    assert set(documented) == set(scenario_names()), (
+        f"docs/scenarios.md drifted from the registry:\n"
+        f"  undocumented: {sorted(set(scenario_names()) - set(documented))}\n"
+        f"  stale:        {sorted(set(documented) - set(scenario_names()))}")
+
+
+def test_scenarios_doc_mentions_each_fleet():
+    """Heterogeneous scenarios must state their fleet in the doc."""
+    text = SCENARIOS_MD.read_text()
+    for name in scenario_names():
+        scen = get_scenario(name)
+        if scen.fleet:
+            for type_name, _cap in scen.fleet:
+                assert type_name in text, (
+                    f"{name}: fleet type {type_name!r} not mentioned in "
+                    f"docs/scenarios.md")
+
+
+def test_no_broken_intra_repo_links():
+    failures = check_links.run()
+    assert not failures, "broken links:\n  " + "\n  ".join(failures)
+
+
+def test_designated_public_apis_documented():
+    failures = check_docstrings.run()
+    assert not failures, ("undocumented public symbols:\n  "
+                          + "\n  ".join(failures))

@@ -75,6 +75,36 @@ def test_corpus_has_no_orphans():
     assert actual <= expected, f"orphan goldens: {sorted(actual - expected)}"
 
 
+HOMOGENEOUS_EQUIV_CASES = [("steady_poisson", "has"),
+                           ("steady_poisson", "kserve"),
+                           ("steady_poisson", "fast"),
+                           ("azure_standard", "has")]
+
+
+@pytest.mark.parametrize("name,policy", HOMOGENEOUS_EQUIV_CASES,
+                         ids=[f"{n}-{p}" for n, p in
+                              HOMOGENEOUS_EQUIV_CASES])
+def test_homogeneous_fleet_byte_identical_to_golden(name, policy):
+    """Heterogeneous-fleet equivalence: driving the mixed-fleet code
+    path with a single reference-type pool must produce RunMetrics
+    BYTE-identical to the pre-refactor goldens — not merely within
+    tolerance. Placement, physics, cost accounting, and serialization
+    must all collapse exactly to the legacy behavior when every chip is
+    the default type."""
+    path = golden_path(name, policy)
+    if not path.exists():
+        pytest.skip("corpus not generated yet")
+    scen = get_scenario(name)
+    # run through the explicit-fleet construction path (exercises the
+    # fleet plumbing, not the legacy max_gpus shortcut)
+    metrics = scen.run(policy=policy, seed=GOLDEN_SEED,
+                       duration_s=GOLDEN_DURATION_S,
+                       fleet=(("default", scen.max_gpus),)).metrics
+    assert metrics.to_json() == path.read_text(), (
+        f"{name}/{policy}: single-default-type fleet run is not "
+        f"byte-identical to the pre-heterogeneity golden")
+
+
 def test_goldens_carry_real_traffic():
     """Guard the corpus itself: a golden pinned on an empty or trivially
     idle run would regression-test nothing."""

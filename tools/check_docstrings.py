@@ -1,0 +1,101 @@
+"""pydocstyle-lite: docstring presence gate for designated modules.
+
+Not a style linter — a drift gate: every PUBLIC class, function, and
+method (no leading underscore, not a dunder except ``__init__`` which
+is exempt — its contract lives on the class) in the checked modules
+must carry a non-trivial docstring. Dataclasses' implicit methods and
+properties count like methods. The scope is deliberately small: the
+modules whose public APIs the docs site describes.
+
+Usage::
+
+    python tools/check_docstrings.py [MODULE_PATH ...]
+
+With no arguments, checks the default scope below. Exits non-zero
+listing every undocumented public symbol. Also invoked by
+``tests/test_docs.py`` so the gate runs in tier-1, not only in CI.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+from typing import List
+
+# the modules whose public APIs must stay documented
+DEFAULT_SCOPE = (
+    "src/repro/core/capacity.py",
+    "src/repro/core/events.py",
+    "src/repro/workloads/scenarios.py",
+)
+MIN_DOC_LEN = 10   # a docstring shorter than this is a placeholder
+
+
+def _is_public(name: str) -> bool:
+    return not name.startswith("_")
+
+
+def _has_docstring(node) -> bool:
+    doc = ast.get_docstring(node)
+    return doc is not None and len(doc.strip()) >= MIN_DOC_LEN
+
+
+def _check_function(node, qualname: str, failures: List[str]) -> None:
+    if not _is_public(node.name):
+        return
+    if not _has_docstring(node):
+        failures.append(f"{qualname}.{node.name} (function)")
+
+
+def _check_class(node, modname: str, failures: List[str]) -> None:
+    if not _is_public(node.name):
+        return
+    qual = f"{modname}.{node.name}"
+    if not _has_docstring(node):
+        failures.append(f"{qual} (class)")
+    for item in node.body:
+        if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            _check_function(item, qual, failures)
+
+
+def check_module(path: pathlib.Path) -> List[str]:
+    """-> qualified names of undocumented public symbols in ``path``."""
+    tree = ast.parse(path.read_text(encoding="utf-8"), filename=str(path))
+    modname = path.stem
+    failures: List[str] = []
+    if not _has_docstring(tree):
+        failures.append(f"{modname} (module)")
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            _check_function(node, modname, failures)
+        elif isinstance(node, ast.ClassDef):
+            _check_class(node, modname, failures)
+    return failures
+
+
+def run(paths=None, repo_root=None) -> List[str]:
+    """Check ``paths`` (default scope when falsy); returns failures."""
+    repo_root = pathlib.Path(repo_root
+                             or pathlib.Path(__file__).resolve().parents[1])
+    targets = [repo_root / p for p in (paths or DEFAULT_SCOPE)]
+    failures = []
+    for t in targets:
+        failures += [f"{t.relative_to(repo_root)}: {f}"
+                     for f in check_module(t)]
+    return failures
+
+
+def main(argv=None) -> int:
+    failures = run(argv if argv else None)
+    for f in failures:
+        print(f"UNDOCUMENTED {f}", file=sys.stderr)
+    if failures:
+        print(f"{len(failures)} undocumented public symbol(s)",
+              file=sys.stderr)
+        return 1
+    print("all public symbols documented")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,116 @@
+"""Intra-repo Markdown link checker (the docs CI gate).
+
+Scans Markdown files for ``[text](target)`` links and verifies that
+every RELATIVE target resolves to a real file (and, for ``#anchor``
+fragments, that the target file actually contains a heading that
+slugifies to the anchor). External links (http/https/mailto) are
+ignored — this is a drift gate for the repo's own docs, not a network
+crawler.
+
+Usage::
+
+    python tools/check_links.py [FILE_OR_DIR ...]
+
+With no arguments, checks ``README.md`` and ``docs/*.md``. Exits
+non-zero listing every broken link. Also invoked by
+``tests/test_docs.py`` so the gate runs in tier-1, not only in CI.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+from typing import List, Tuple
+
+# [text](target) — excluding images' leading ! is unnecessary (image
+# paths must resolve too); stop at the first closing paren without
+# swallowing nested parens in titles
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def _slugify(heading: str) -> str:
+    """GitHub-style anchor slug of a Markdown heading."""
+    slug = heading.strip().lower()
+    slug = re.sub(r"[^\w\- ]", "", slug)
+    return slug.replace(" ", "-")
+
+
+def _anchors(md_path: pathlib.Path) -> set:
+    """The set of heading anchors a Markdown file defines."""
+    out = set()
+    for line in md_path.read_text(encoding="utf-8").splitlines():
+        m = re.match(r"#{1,6}\s+(.*)", line)
+        if m:
+            out.add(_slugify(m.group(1)))
+    return out
+
+
+def check_file(md_path: pathlib.Path,
+               repo_root: pathlib.Path) -> List[Tuple[str, str]]:
+    """-> list of (link, reason) for every broken link in ``md_path``."""
+    broken = []
+    text = md_path.read_text(encoding="utf-8")
+    for m in _LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(_EXTERNAL):
+            continue
+        path_part, _, anchor = target.partition("#")
+        if not path_part:                       # same-file #anchor
+            if anchor and _slugify(anchor) not in _anchors(md_path):
+                broken.append((target, "missing anchor"))
+            continue
+        resolved = (md_path.parent / path_part).resolve()
+        try:
+            resolved.relative_to(repo_root.resolve())
+        except ValueError:
+            broken.append((target, "escapes the repository"))
+            continue
+        if not resolved.exists():
+            broken.append((target, "missing file"))
+            continue
+        if anchor and resolved.suffix == ".md" \
+                and _slugify(anchor) not in _anchors(resolved):
+            broken.append((target, "missing anchor"))
+    return broken
+
+
+def default_targets(repo_root: pathlib.Path) -> List[pathlib.Path]:
+    """README.md plus every Markdown file under docs/."""
+    targets = [repo_root / "README.md"]
+    targets += sorted((repo_root / "docs").glob("*.md"))
+    return [t for t in targets if t.exists()]
+
+
+def run(paths=None, repo_root=None) -> List[str]:
+    """Check ``paths`` (default: README + docs/) and return a list of
+    human-readable failure strings (empty = all links resolve)."""
+    repo_root = pathlib.Path(repo_root
+                             or pathlib.Path(__file__).resolve().parents[1])
+    if paths:
+        targets = []
+        for p in map(pathlib.Path, paths):
+            targets += sorted(p.glob("*.md")) if p.is_dir() else [p]
+    else:
+        targets = default_targets(repo_root)
+    failures = []
+    for md in targets:
+        for link, reason in check_file(md, repo_root):
+            failures.append(f"{md.relative_to(repo_root)}: "
+                            f"[{reason}] {link}")
+    return failures
+
+
+def main(argv=None) -> int:
+    failures = run(argv if argv else None)
+    for f in failures:
+        print(f"BROKEN {f}", file=sys.stderr)
+    if failures:
+        print(f"{len(failures)} broken link(s)", file=sys.stderr)
+        return 1
+    print("all intra-repo links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
