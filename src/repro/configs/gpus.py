@@ -51,6 +51,10 @@ class GPUType:
         hbm_bw: HBM bandwidth in bytes/s of the whole chip.
         price_per_hour: on-demand $/hour for the whole chip; fine-
             grained billing charges ``(sm / sm_total) * quota`` of it.
+        host_to_hbm_bw: host-RAM -> HBM transfer bandwidth in bytes/s
+            (the PCIe/interconnect generation of the device class) --
+            the model-state lifecycle engine (``core/modelstate.py``)
+            derives warm-start weight-load times from it.
 
     Invariants: all numeric fields are positive; instances are frozen
     (hashable) so they can key capacity-table lattices and memoized
@@ -61,13 +65,16 @@ class GPUType:
     peak_flops: float
     hbm_bw: float
     price_per_hour: float
+    host_to_hbm_bw: float = 25e9   # PCIe-gen4-class default
 
     def __post_init__(self):
         if self.sm_total < 1:
             raise ValueError(f"sm_total={self.sm_total} must be >= 1")
-        if min(self.peak_flops, self.hbm_bw, self.price_per_hour) <= 0:
+        if min(self.peak_flops, self.hbm_bw, self.price_per_hour,
+               self.host_to_hbm_bw) <= 0:
             raise ValueError(f"GPUType {self.name!r}: peak_flops/hbm_bw/"
-                             "price_per_hour must be positive")
+                             "price_per_hour/host_to_hbm_bw must be "
+                             "positive")
 
     @property
     def price_per_slice_hour(self) -> float:
@@ -80,20 +87,25 @@ class GPUType:
 # billed at the Google Cloud V100 price the paper's Fig 7 uses. Every
 # pre-heterogeneity golden trace was produced on (implicitly) this type.
 DEFAULT_GPU_TYPE = GPUType(name="v5e", sm_total=8, peak_flops=197e12,
-                           hbm_bw=819e9, price_per_hour=2.48)
+                           hbm_bw=819e9, price_per_hour=2.48,
+                           host_to_hbm_bw=32e9)
 
 GPU_TYPES: Dict[str, GPUType] = {
     t.name: t
     for t in (
         DEFAULT_GPU_TYPE,
         GPUType(name="h100", sm_total=8, peak_flops=989e12,
-                hbm_bw=3.35e12, price_per_hour=14.90),
+                hbm_bw=3.35e12, price_per_hour=14.90,
+                host_to_hbm_bw=55e9),
         GPUType(name="a100", sm_total=8, peak_flops=312e12,
-                hbm_bw=2.039e12, price_per_hour=4.10),
+                hbm_bw=2.039e12, price_per_hour=4.10,
+                host_to_hbm_bw=28e9),
         GPUType(name="a10g", sm_total=8, peak_flops=140e12,
-                hbm_bw=600e9, price_per_hour=1.58),
+                hbm_bw=600e9, price_per_hour=1.58,
+                host_to_hbm_bw=25e9),
         GPUType(name="t4", sm_total=4, peak_flops=65e12,
-                hbm_bw=320e9, price_per_hour=0.53),
+                hbm_bw=320e9, price_per_hour=0.53,
+                host_to_hbm_bw=12e9),
     )
 }
 GPU_TYPES["default"] = DEFAULT_GPU_TYPE  # alias: the reference device

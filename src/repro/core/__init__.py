@@ -13,6 +13,9 @@ from repro.core.baselines import (FaSTGShareLikeConfig, FaSTGShareLikePolicy,
 from repro.core.capacity import CapacityTable, shared_table
 from repro.core.kalman import KalmanPredictor, LastValuePredictor
 from repro.core.metrics import RunMetrics, baseline_batch_of
+from repro.core.modelstate import (ColdStartModel, LifecycleConfig,
+                                   ModelStateTracker, NodeWeightCache,
+                                   WeightState)
 from repro.core.perf_model import (FnSpec, cost_rate, exec_time, latency,
                                    most_efficient_config, slo_baseline,
                                    throughput)
@@ -39,4 +42,6 @@ __all__ = [
     "VirtualGPU",
     "GPUType", "GPU_TYPES", "DEFAULT_GPU_TYPE", "get_gpu_type",
     "FleetPlacer",
+    "ColdStartModel", "LifecycleConfig", "ModelStateTracker",
+    "NodeWeightCache", "WeightState",
 ]

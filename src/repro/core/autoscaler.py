@@ -32,6 +32,7 @@ from typing import Callable, Dict, List, Optional
 
 from repro.configs.gpus import DEFAULT_GPU_TYPE, GPUType
 from repro.core import capacity as capacity_mod
+from repro.core import modelstate as modelstate_mod
 from repro.core.kalman import KalmanPredictor
 from repro.core.perf_model import FnSpec
 from repro.core.reconfigurator import Reconfigurator
@@ -49,10 +50,17 @@ class AutoScalerConfig:
     r_min: float = 1.0         # minimum retained capacity (RPS)
     default_batch: int = 8
     default_sm: int = 4
-    cold_start_s: float = 2.5  # container + weight load on a warm chip
-    new_gpu_cold_start_s: float = 8.0   # + chip/program initialization
+    # cold-start physics: derived from the shared component sums in
+    # core/modelstate.py (2.5 s warm-chip / 8.0 s fresh-chip), the same
+    # source the baseline policies quote theirs from
+    cold_start_s: float = modelstate_mod.WARM_CHIP_COLD_START_S
+    new_gpu_cold_start_s: float = modelstate_mod.NEW_GPU_COLD_START_S
     slo_multiplier: float = 1.5  # latency cap: m x whole-chip baseline
     service_overhead_s: float = 0.02  # batching/dispatch overhead per cycle
+    # ---- model-state lifecycle knobs (inert without an attached
+    # ModelStateTracker; see core/modelstate.py) ----
+    keep_warm_pods: int = 0    # standby pods retained per fn on scale-down
+    prewarm_lead_s: float = 0.0  # forecast horizon for weight pre-warming
 
 
 @dataclasses.dataclass
@@ -69,6 +77,20 @@ class HybridAutoScaler:
                  cfg: AutoScalerConfig = AutoScalerConfig(),
                  window_ms: float = 100.0):
         self.recon = recon
+        # a cluster with an active ModelStateTracker carries the
+        # lifecycle knobs (keep-warm pool size, pre-warm lead) in its
+        # tracker config; adopt any the caller left at the inert
+        # defaults so EVERY construction path — including custom
+        # policy_factory hooks — honors the scenario's lifecycle
+        tracker = recon.modelstate
+        if tracker is not None and not tracker.is_passive:
+            adopt = {}
+            if cfg.keep_warm_pods == 0 and tracker.cfg.keep_warm_pods > 0:
+                adopt["keep_warm_pods"] = tracker.cfg.keep_warm_pods
+            if cfg.prewarm_lead_s == 0 and tracker.cfg.prewarm_lead_s > 0:
+                adopt["prewarm_lead_s"] = tracker.cfg.prewarm_lead_s
+            if adopt:
+                cfg = dataclasses.replace(cfg, **adopt)
         self.cfg = cfg
         self.window_ms = window_ms
         if predictor is None:
@@ -82,6 +104,16 @@ class HybridAutoScaler:
         self.kalman: Dict[str, KalmanPredictor] = {}
         self.last_scale_down: Dict[str, float] = {}
         self._cap_models: Dict[str, Callable] = {}
+        self._prev_pred: Dict[str, tuple] = {}   # fn -> (t, predicted R)
+        # quota a keep-warm pod served with before parking: reactivation
+        # restores the known-good allocation instead of re-deriving a
+        # borderline SLO-floor quota
+        self._parked_quota: Dict[str, float] = {}
+
+    def _tracker(self):
+        """The cluster's active ModelStateTracker, or None (legacy)."""
+        tr = self.recon.modelstate
+        return tr if tr is not None and not tr.is_passive else None
 
     # ---- throughput helpers ------------------------------------------------
     def thpt(self, spec: FnSpec, batch: int, sm: int, quota: float,
@@ -95,9 +127,10 @@ class HybridAutoScaler:
     def _ensure_capacity_model(self, spec: FnSpec) -> None:
         model = self._cap_models.get(spec.fn_id)
         if model is None:
+            # keep-warm standby pods hold weights, not capacity
             model = self._cap_models[spec.fn_id] = (
-                lambda p, _s=spec: self.thpt(_s, p.batch, p.sm, p.quota,
-                                             p.gpu_type))
+                lambda p, _s=spec: 0.0 if p.standby else
+                self.thpt(_s, p.batch, p.sm, p.quota, p.gpu_type))
         # no-op when already installed; re-registers (and recomputes
         # contributions) if another scaler on the same cluster took over
         self.recon.register_capacity_model(spec.fn_id, model)
@@ -111,7 +144,42 @@ class HybridAutoScaler:
              observed_rps: float) -> List[ScalingAction]:
         k = self.kalman.setdefault(spec.fn_id, KalmanPredictor())
         predicted = k.update(observed_rps)
+        self._maybe_prewarm(now, spec, predicted)
         return self.scale(now, spec, predicted)
+
+    # ---- forecast-driven pre-warming ---------------------------------------
+    def _maybe_prewarm(self, now: float, spec: FnSpec, R: float) -> None:
+        """Project the Kalman estimate ``prewarm_lead_s`` ahead; when
+        the projection crosses the scale-up trigger, start weight
+        fetches on the likely placement nodes (the least-occupied used
+        chips with room and the next fresh-chip node) so the coming
+        horizontal-ups find host-cached weights."""
+        tracker = self._tracker()
+        lead = self.cfg.prewarm_lead_s
+        prev = self._prev_pred.get(spec.fn_id)
+        self._prev_pred[spec.fn_id] = (now, R)
+        if tracker is None or lead <= 0 or prev is None:
+            return
+        t0, r0 = prev
+        if now <= t0:
+            return
+        slope = (R - r0) / (now - t0)
+        if slope <= 0:
+            return
+        if not self.recon.pods_of(spec.fn_id):
+            return
+        projected = R + slope * lead
+        if projected <= self.capacity(spec) * self.cfg.alpha:
+            return
+        nodes = []
+        used = sorted((g for g in self.recon.used_gpus()
+                       if g.slices_free > 0 or g.can_place(
+                           self.cfg.default_sm, self.cfg.min_quota)),
+                      key=lambda g: g.hgo)
+        nodes += [g.node for g in used[:2]]
+        nodes.append(self.recon.peek_next_node())
+        for node in dict.fromkeys(nodes):   # de-dup, keep order
+            tracker.promote(node, spec, now)
 
     def scale(self, now: float, spec: FnSpec, R: float) -> List[ScalingAction]:
         cfg = self.cfg
@@ -124,8 +192,11 @@ class HybridAutoScaler:
 
         if R > c_f * cfg.alpha:                      # ---- scale UP
             delta = R - c_f * cfg.alpha
-            delta, acts = self._vertical_up(spec, pods, delta)
+            delta, acts = self._reactivate_standby(now, spec, pods, delta)
             actions += acts
+            if delta > 0:
+                delta, acts = self._vertical_up(spec, pods, delta)
+                actions += acts
             if delta > 0:
                 delta, acts = self._horizontal_up_used(now, spec, delta)
                 actions += acts
@@ -135,7 +206,7 @@ class HybridAutoScaler:
               and now - self.last_scale_down.get(spec.fn_id, -1e18)
               >= cfg.cooldown_s):                    # ---- scale DOWN
             delta = c_f - max(R, cfg.r_min) / cfg.alpha
-            acts = self._scale_down(spec, pods, delta)
+            acts = self._scale_down(now, spec, pods, delta)
             if acts:
                 self.last_scale_down[spec.fn_id] = now
             actions += acts
@@ -155,26 +226,84 @@ class HybridAutoScaler:
         t, b, sm, q = self.table.best_config_over(
             spec, target_rps, self._placement_types(),
             slo_multiplier=self.cfg.slo_multiplier)
-        gpu = self._gpu_with_room(sm, q, t)
+        gpu = self._gpu_with_room(sm, q, t, fn_id=spec.fn_id, now=now)
         pod = PodAlloc(fn_id=spec.fn_id, sm=sm, quota=q, batch=b)
         cold = (self.cfg.cold_start_s if gpu is not None
                 else self.cfg.new_gpu_cold_start_s)
         self.recon.place_pod(pod, gpu.uuid if gpu else None, now=now,
-                             cold_start_s=cold, gpu_type=t)
+                             cold_start_s=cold, gpu_type=t, spec=spec)
         tag = "" if t == DEFAULT_GPU_TYPE else f" [{t.name}]"
         return [ScalingAction(spec.fn_id, pod.pod_id, "hup",
                               f"bootstrap b={b} sm={sm} q={q:.2f}{tag}")]
 
-    def _gpu_with_room(self, sm, q, gpu_type=None):
+    def _affinity_rank(self, g, fn_id: Optional[str], now: float):
+        """Weight-residency rank of chip ``g`` for ``fn_id`` at ``now``
+        (``ModelStateTracker.placement_rank``: HBM-resident < host-
+        cached < fetch in flight < cold) — constant 0 without an active
+        lifecycle tracker, so legacy ordering is untouched."""
+        tracker = self._tracker()
+        if tracker is None or fn_id is None:
+            return 0
+        return tracker.placement_rank(g, fn_id, now)
+
+    def _gpu_with_room(self, sm, q, gpu_type=None, fn_id=None, now=0.0):
         """Least-occupied used GPU that can host (sm, q) — restricted to
         ``gpu_type`` chips, since the config was priced for that device
-        (a no-op filter on a homogeneous fleet)."""
+        (a no-op filter on a homogeneous fleet). With an active
+        lifecycle tracker, chips already holding (or caching) the
+        function's weights rank first."""
         cands = [g for g in self.recon.used_gpus()
                  if (gpu_type is None or g.gpu_type == gpu_type)
                  and g.can_place(sm, q)]
         if not cands:
             return None
-        return min(cands, key=lambda g: g.hgo)
+        return min(cands,
+                   key=lambda g: (self._affinity_rank(g, fn_id, now), g.hgo))
+
+    # ---- keep-warm pool reactivation ---------------------------------------
+    def _reactivate_standby(self, now, spec, pods, delta):
+        """Reactivate keep-warm standby pods before any other scale-up
+        path: a quota rewrite on a pod whose weights never left HBM is
+        instant capacity (a "hot" start) at zero transfer cost."""
+        actions = []
+        tracker = self._tracker()
+        if tracker is None:
+            return delta, actions
+        step = self.cfg.quota_step
+        for pod in pods:
+            if delta <= 0:
+                break
+            if not pod.standby:
+                continue
+            gpu = self.recon.gpu_of_pod(pod.pod_id)
+            if gpu is None:
+                continue
+            avail = gpu.max_avail_quota_for(pod)
+            q_floor = self.table.min_quota_for_slo(
+                spec, pod.batch, pod.sm, self.cfg.slo_multiplier,
+                gpu=pod.gpu_type) or self.cfg.min_quota
+            floor = max(self.cfg.min_quota, q_floor)
+            if floor > avail + 1e-9:
+                continue   # partition filled up; stays standby
+            # restore the quota the pod served with before parking (a
+            # known-good allocation with SLO headroom), topped up by
+            # quota steps while the gap demands more
+            q = max(self._parked_quota.get(pod.pod_id, 0.0), floor)
+            if q > avail + 1e-9:
+                continue
+            while (q + step <= avail + 1e-9
+                   and self.thpt(spec, pod.batch, pod.sm, q,
+                                 pod.gpu_type) < delta):
+                q += step
+            self._parked_quota.pop(pod.pod_id, None)
+            pod.standby = False
+            pod.start_kind = "hot"
+            self.recon.set_quota(pod.pod_id, q)
+            tracker.record_start(spec.fn_id, "hot", 0.0)
+            delta -= self.thpt(spec, pod.batch, pod.sm, q, pod.gpu_type)
+            actions.append(ScalingAction(spec.fn_id, pod.pod_id, "hup",
+                                         f"reactivate q={q:.2f}"))
+        return delta, actions
 
     # ---- vertical scale-up (paper L3-9) ---------------------------------------
     def _vertical_up(self, spec, pods, delta):
@@ -182,6 +311,8 @@ class HybridAutoScaler:
         for pod in sorted(pods, key=lambda p: -p.sm):
             if delta <= 0:
                 break
+            if pod.standby:
+                continue   # keep-warm pods rejoin via reactivation only
             gpu = self.recon.gpu_of_pod(pod.pod_id)
             if gpu is None:
                 continue
@@ -219,12 +350,32 @@ class HybridAutoScaler:
         if self.recon.is_heterogeneous:
             # mixed fleet: SLO-capable device classes first (a cheap
             # spot chip would dead-end the used-GPU path), cheapest
-            # $/slice class next, HGO inside a class
+            # $/slice class next, weight affinity, HGO inside a class
             b0 = self.cfg.default_batch
             used = self.recon.used_gpus()
             gpu = min(used, key=lambda g: (
                 not self._type_slo_capable(spec, b0, g.gpu_type),
-                g.gpu_type.price_per_slice_hour, g.hgo)) if used else None
+                g.gpu_type.price_per_slice_hour,
+                self._affinity_rank(g, spec.fn_id, now),
+                g.hgo)) if used else None
+        elif self._tracker() is not None:
+            # lifecycle runs: the legacy capacity-seeking choice (lowest
+            # HGO — the chip that can host the widest/fastest config)
+            # with weight affinity only as the tie-break, restricted to
+            # chips that can actually host something. Affinity must NOT
+            # outrank HGO here: the pod's shape is chosen from the
+            # host's headroom, and a weight-affine but crowded chip
+            # yields slow slivers (or dead-ends the used-GPU path into
+            # fresh-chip spam) — a start is warm for ~2 s once; a bad
+            # (sm, quota) is slow for the pod's whole lifetime.
+            cands = []
+            for g in self.recon.used_gpus():
+                s_avail, q_avail = g.max_avail_alloc()
+                if s_avail > 0 and q_avail >= self.cfg.min_quota:
+                    cands.append(g)
+            gpu = min(cands, key=lambda g: (
+                g.hgo,
+                self._affinity_rank(g, spec.fn_id, now))) if cands else None
         else:
             gpu = self.recon.lowest_hgo_gpu()
         if gpu is None:
@@ -249,7 +400,7 @@ class HybridAutoScaler:
         q = max(step * max(n, 1), q_floor)
         pod = PodAlloc(fn_id=spec.fn_id, sm=s_max, quota=q, batch=b)
         self.recon.place_pod(pod, gpu.uuid, now=now,
-                             cold_start_s=self.cfg.cold_start_s)
+                             cold_start_s=self.cfg.cold_start_s, spec=spec)
         actions.append(ScalingAction(spec.fn_id, pod.pod_id, "hup",
                                      f"used-gpu {gpu.uuid} sm={s_max} "
                                      f"q={q:.2f}"))
@@ -291,7 +442,7 @@ class HybridAutoScaler:
                     self.recon.place_pod(
                         pod, None, now=now,
                         cold_start_s=self.cfg.new_gpu_cold_start_s,
-                        gpu_type=t)
+                        gpu_type=t, spec=spec)
                 except RuntimeError:   # cluster at capacity
                     break
             cap = self.thpt(spec, pod.batch, pod.sm, pod.quota, t)
@@ -303,21 +454,45 @@ class HybridAutoScaler:
         return actions
 
     # ---- scale-down (paper L20-26) ----------------------------------------------
-    def _scale_down(self, spec, pods, delta):
+    def _standby_count(self, fn_id: str) -> int:
+        """Keep-warm standby pods currently parked for ``fn_id``."""
+        return sum(1 for p in self.recon.pods_of(fn_id) if p.standby)
+
+    def _scale_down(self, now, spec, pods, delta):
         actions = []
+        tracker = self._tracker()
         # smallest-SM pods first, keep at least one pod
         for pod in sorted(pods, key=lambda p: p.sm):
             if delta <= 0:
                 break
-            remaining = self.recon.pods_of(spec.fn_id)
+            if pod.standby:
+                continue   # already parked in the keep-warm pool
+            remaining = [p for p in self.recon.pods_of(spec.fn_id)
+                         if not p.standby]
             is_last = len(remaining) == 1
             contrib = self.pod_thpt(spec, pod)
             step = self.cfg.quota_step
             if not is_last and contrib <= delta + 1e-9:
-                self.recon.remove_pod(pod.pod_id)
+                if (tracker is not None and pod.ready_at <= now
+                        and self._standby_count(spec.fn_id)
+                        < self.cfg.keep_warm_pods):
+                    # only READY pods qualify for keep-warm (a pod still
+                    # mid-cold-start has no warm state to keep, and its
+                    # later reactivation would be a bogus "hot" start)
+                    # keep-warm: park the pod at ~zero quota instead of
+                    # evicting — weights stay GPU-resident, reactivation
+                    # is a hot start; CostMeter bills idle retention
+                    self._parked_quota[pod.pod_id] = pod.quota
+                    pod.standby = True
+                    self.recon.set_quota(pod.pod_id,
+                                         modelstate_mod.KEEP_WARM_QUOTA)
+                    actions.append(ScalingAction(spec.fn_id, pod.pod_id,
+                                                 "hdown", "kept-warm"))
+                else:
+                    self.recon.remove_pod(pod.pod_id, now=now)
+                    actions.append(ScalingAction(spec.fn_id, pod.pod_id,
+                                                 "hdown", "removed"))
                 delta -= contrib
-                actions.append(ScalingAction(spec.fn_id, pod.pod_id, "hdown",
-                                             "removed"))
                 continue
             # vertical scale-down: shed quota stepwise (never below the
             # SLO-satisfying floor for this pod's (batch, sm) on its

@@ -28,6 +28,7 @@ import math
 from typing import Dict
 
 from repro.core import capacity as capacity_mod
+from repro.core import modelstate as modelstate_mod
 from repro.core.perf_model import FnSpec
 from repro.core.reconfigurator import Reconfigurator
 from repro.core.vgpu import DEFAULT_WINDOW_MS, PodAlloc
@@ -38,7 +39,14 @@ class KServeLikeConfig:
     target_utilization: float = 0.7
     min_replicas: int = 1
     stabilization_s: float = 300.0  # k8s HPA default scale-down window
-    cold_start_s: float = 15.0     # chip init + runtime + model load
+    # chip init + runtime + device plugin + model load: composed from
+    # the same physics components HAS quotes its constants from
+    # (core/modelstate.py), not an independent hand-tuned literal
+    cold_start_s: float = modelstate_mod.KSERVE_COLD_START_S
+    # extra bring-up beyond weight movement (runtime + device plugin) —
+    # what this policy keeps paying even under derived lifecycle physics
+    start_overhead_s: float = (modelstate_mod.RUNTIME_INIT_S
+                               + modelstate_mod.K8S_DEVICE_INIT_S)
     default_batch: int = 8
 
 
@@ -70,7 +78,9 @@ class KServeLikePolicy:
         pod = PodAlloc(fn_id=spec.fn_id, sm=g.gpu_type.sm_total, quota=1.0,
                        batch=self.cfg.default_batch)
         self.recon.place_pod(pod, g.uuid, now=now,
-                             cold_start_s=cold_start_s)
+                             cold_start_s=cold_start_s, spec=spec,
+                             fresh_chip=True,
+                             start_overhead_s=self.cfg.start_overhead_s)
 
     def prewarm(self, spec: FnSpec, expected_rps: float):
         import math as _m
@@ -100,7 +110,7 @@ class KServeLikePolicy:
             since = self._below_since.setdefault(spec.fn_id, now)
             if now - since >= self.cfg.stabilization_s:
                 for pod in pods[: cur - desired]:
-                    self.recon.remove_pod(pod.pod_id)
+                    self.recon.remove_pod(pod.pod_id, now=now)
                 self.recon.release_empty_gpus()
                 self._below_since.pop(spec.fn_id, None)
         else:
@@ -112,7 +122,10 @@ class FaSTGShareLikeConfig:
     target_utilization: float = 0.8
     min_replicas: int = 1
     stabilization_s: float = 30.0
-    cold_start_s: float = 5.0     # container + model load (no vertical path)
+    # container + full runtime + model load (no vertical path), composed
+    # from the shared physics components in core/modelstate.py
+    cold_start_s: float = modelstate_mod.FAST_GSHARE_COLD_START_S
+    start_overhead_s: float = modelstate_mod.RUNTIME_INIT_S
     default_batch: int = 8
     unit_rps: float = 20.0        # per-pod capacity the fixed config targets
 
@@ -173,7 +186,7 @@ class FaSTGShareLikePolicy:
         for _ in range(n):
             pod = PodAlloc(fn_id=spec.fn_id, sm=sm, quota=q, batch=b)
             self.recon.place_pod(pod, self._choose_gpu(sm, q), now=0.0,
-                                 cold_start_s=0.0)
+                                 cold_start_s=0.0, spec=spec)
 
     def tick(self, now: float, spec: FnSpec, observed_rps: float):
         b, sm, q = self.fixed_config(spec)
@@ -189,16 +202,17 @@ class FaSTGShareLikePolicy:
             for _ in range(desired - cur):
                 pod = PodAlloc(fn_id=spec.fn_id, sm=sm, quota=q, batch=b)
                 try:
-                    self.recon.place_pod(pod, self._choose_gpu(sm, q),
-                                         now=now,
-                                         cold_start_s=self.cfg.cold_start_s)
+                    self.recon.place_pod(
+                        pod, self._choose_gpu(sm, q), now=now,
+                        cold_start_s=self.cfg.cold_start_s, spec=spec,
+                        start_overhead_s=self.cfg.start_overhead_s)
                 except RuntimeError:
                     break
         elif desired < cur:
             since = self._below_since.setdefault(spec.fn_id, now)
             if now - since >= self.cfg.stabilization_s:
                 for pod in pods[: cur - desired]:
-                    self.recon.remove_pod(pod.pod_id)
+                    self.recon.remove_pod(pod.pod_id, now=now)
                 self.recon.release_empty_gpus()
                 self._below_since.pop(spec.fn_id, None)
         else:

@@ -21,17 +21,26 @@ import dataclasses
 import warnings
 
 from repro.configs.gpus import DEFAULT_GPU_TYPE
+from repro.core.modelstate import IDLE_RETENTION_FACTOR
 
 _DEPRECATED = {"GPU_PRICE_PER_HOUR": DEFAULT_GPU_TYPE.price_per_hour}
+_WARNED: set = set()   # each deprecated name warns exactly once/process
+
+
+def _reset_deprecation_warnings() -> None:
+    """Re-arm the once-per-process deprecation warnings (test hook)."""
+    _WARNED.clear()
 
 
 def __getattr__(name: str):
     if name in _DEPRECATED:
-        warnings.warn(
-            "cost.GPU_PRICE_PER_HOUR is deprecated: GPU price is a "
-            "GPUType field (configs/gpus.py); this constant only "
-            "reflects the reference device.",
-            DeprecationWarning, stacklevel=2)
+        if name not in _WARNED:
+            _WARNED.add(name)
+            warnings.warn(
+                "cost.GPU_PRICE_PER_HOUR is deprecated: GPU price is a "
+                "GPUType field (configs/gpus.py); this constant only "
+                "reflects the reference device.",
+                DeprecationWarning, stacklevel=2)
         return _DEPRECATED[name]
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
@@ -41,6 +50,11 @@ class CostMeter:
     whole_gpu: bool = False
     total_usd: float = 0.0
     gpu_seconds: float = 0.0
+    # fraction of a keep-warm standby pod's full-quota slice price that
+    # keeps accruing while it idles in the keep-warm pool (model-state
+    # lifecycle; default shared with LifecycleConfig — one source);
+    # irrelevant when no pod is standby
+    idle_retention_factor: float = IDLE_RETENTION_FACTOR
 
     def rates(self, recon) -> tuple:
         """(usd/s, gpu-fraction) rates for the current allocation. The
@@ -49,7 +63,9 @@ class CostMeter:
 
         ``gpu-fraction`` is device-count-weighted (one whole chip of any
         type contributes 1.0) while usd/s weights each chip's share by
-        its type's price."""
+        its type's price. Keep-warm standby pods are billed at
+        ``idle_retention_factor`` of their full-quota slice share (they
+        reserve slices and HBM, not execution time)."""
         fracs = {}  # GPUType -> occupied fraction, first-seen order
         if self.whole_gpu:
             for g in recon.used_gpus():
@@ -59,7 +75,11 @@ class CostMeter:
                 t = g.gpu_type
                 s = fracs.get(t, 0.0)
                 for pod in g.pods:
-                    s += (pod.sm / float(t.sm_total)) * pod.quota
+                    if pod.standby:
+                        s += (self.idle_retention_factor
+                              * (pod.sm / float(t.sm_total)))
+                    else:
+                        s += (pod.sm / float(t.sm_total)) * pod.quota
                 fracs[t] = s
         usd_rate = 0.0
         frac = 0.0

@@ -98,6 +98,12 @@ class FunctionState:
     # agnostic: derived by diffing the pod set, not from tick() returns)
     action_counts: Dict[str, int] = dataclasses.field(
         default_factory=lambda: {"vup": 0, "vdown": 0, "hup": 0, "hdown": 0})
+    # model-state lifecycle classification of pod starts (cold = weights
+    # fetched from the object store, warm = host-cached / in-flight
+    # prefetch, hot = GPU-resident incl. keep-warm reactivations);
+    # only populated when a lifecycle tracker stamps pod.start_kind
+    start_counts: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {"cold": 0, "warm": 0, "hot": 0})
     next_arrival: int = 0
     timeout_at: float = -np.inf   # latest batch-timeout wakeup scheduled
     pod_order: List = dataclasses.field(default_factory=list)
@@ -147,6 +153,13 @@ class EventEngine:
         self.cfg = cfg
         self.fns: Dict[str, FunctionState] = {st.fid: st for st in fns}
         self.cost = cost or CostMeter(whole_gpu=cfg.whole_gpu_cost)
+        # an active model-state lifecycle dictates the keep-warm idle-
+        # retention billing rate; adopt it so every construction path
+        # (not just the scenario engine) bills standby pods consistently
+        tracker = getattr(recon, "modelstate", None)
+        if tracker is not None and not tracker.is_passive:
+            self.cost.idle_retention_factor = \
+                tracker.cfg.idle_retention_factor
         self.rng = rng or np.random.default_rng(cfg.seed)
         self.track_peak = track_peak
         self.peak_gpus = 0
@@ -199,8 +212,10 @@ class EventEngine:
 
     def _refresh_pods(self, st: FunctionState) -> None:
         """Re-read the function's pod set after its policy may have
-        mutated the cluster; flush runtimes of removed pods."""
-        pods = self.recon.pods_of(st.fid)
+        mutated the cluster; flush runtimes of removed (or parked
+        keep-warm standby) pods — standby pods hold weights, not
+        serving capacity, so dispatch never sees them."""
+        pods = [p for p in self.recon.pods_of(st.fid) if not p.standby]
         alive = {p.pod_id for p in pods}
         for pid in list(st.runtimes):
             if pid not in alive:
@@ -240,7 +255,15 @@ class EventEngine:
             if pid not in before:
                 ac["hup"] += 1
                 if pod.ready_at > t:
-                    st.cold_starts += 1
+                    # lifecycle-classified starts count under their kind;
+                    # without a tracker every late-ready pod is "cold"
+                    kind = pod.start_kind or "cold"
+                    st.start_counts[kind] = st.start_counts.get(kind, 0) + 1
+                    if kind == "cold":
+                        st.cold_starts += 1
+                elif pod.start_kind == "hot":
+                    # keep-warm reactivation: instant capacity, no wait
+                    st.start_counts["hot"] += 1
 
     # ---- event handlers ----------------------------------------------------
     def _on_arrival(self, t: float, st: FunctionState) -> None:

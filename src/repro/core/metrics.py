@@ -83,6 +83,12 @@ class RunMetrics:
     # from the JSON) for reference-fleet runs — legacy goldens pin the
     # exact serialized byte stream
     fragmentation: Optional[float] = None
+    # model-state lifecycle metrics (core/modelstate.py): pod starts by
+    # residency tier and time-to-ready percentiles; None (and absent
+    # from the JSON) unless an active lifecycle tracker ran — legacy
+    # goldens stay byte-identical
+    start_kinds: Optional[Dict[str, int]] = None      # cold / warm / hot
+    time_to_ready_ms: Optional[Dict[str, float]] = None   # p50 / p99
 
     # ---- construction ------------------------------------------------------
     @classmethod
@@ -123,6 +129,18 @@ class RunMetrics:
         fleet = getattr(engine.recon, "fleet", ())
         if any(t != DEFAULT_GPU_TYPE for t, _ in fleet):
             frag = float(engine.fragmentation_avg())
+        # lifecycle runs additionally carry per-tier start counts and
+        # time-to-ready percentiles; absent otherwise (golden pin)
+        start_kinds = ttr_ms = None
+        tracker = getattr(engine.recon, "modelstate", None)
+        if tracker is not None and not tracker.is_passive:
+            start_kinds = {"cold": 0, "warm": 0, "hot": 0}
+            for st in engine.fns.values():
+                for k in start_kinds:
+                    start_kinds[k] += st.start_counts.get(k, 0)
+            pcts_s = tracker.ttr_percentiles()
+            if pcts_s is not None:
+                ttr_ms = {k: v * 1e3 for k, v in pcts_s.items()}
         return cls(
             scenario=scenario, policy=policy, seed=int(seed),
             duration_s=float(engine.cfg.duration_s),
@@ -135,7 +153,8 @@ class RunMetrics:
             gpu_seconds=cost.gpu_seconds,
             cold_starts=cold, scaling_actions=actions,
             peak_gpus=int(engine.peak_gpus),
-            fragmentation=frag)
+            fragmentation=frag,
+            start_kinds=start_kinds, time_to_ready_ms=ttr_ms)
 
     # ---- serialization -----------------------------------------------------
     def to_dict(self) -> dict:
@@ -144,6 +163,13 @@ class RunMetrics:
             d.pop("fragmentation", None)   # reference-fleet runs omit it
         else:
             d["fragmentation"] = _jsonf(d["fragmentation"])
+        if d.get("start_kinds") is None:   # non-lifecycle runs omit both
+            d.pop("start_kinds", None)
+        if d.get("time_to_ready_ms") is None:
+            d.pop("time_to_ready_ms", None)
+        else:
+            d["time_to_ready_ms"] = {
+                k: _jsonf(v) for k, v in sorted(d["time_to_ready_ms"].items())}
         for k in ("duration_s", "cost_usd", "cost_per_1k_usd",
                   "gpu_seconds"):
             d[k] = _jsonf(d[k])

@@ -79,6 +79,11 @@ class Reconfigurator:
         # irreproducible within one process)
         self._gpu_counter = itertools.count()
         self._type_counts: Dict[GPUType, int] = {}   # live chips per type
+        # node slots are reused: a released chip returns its slot to the
+        # pool, so the node's host RAM (and its weight cache, when a
+        # ModelStateTracker is attached) persists across scale cycles
+        self._node_counts: Dict[int, int] = {}       # node slot -> live chips
+        self.modelstate = None   # optional ModelStateTracker
         # ---- hot-path indexes ----
         self._pods: Dict[str, PodAlloc] = {}          # pod_id -> pod
         self._pod_gpu: Dict[str, str] = {}            # pod_id -> gpu uuid
@@ -87,6 +92,25 @@ class Reconfigurator:
         self._contrib: Dict[str, float] = {}          # pod_id -> thpt
         for _ in range(num_gpus):
             self.add_gpu()
+
+    # ---- model-state lifecycle ---------------------------------------------
+    def attach_modelstate(self, tracker) -> None:
+        """Install a ``ModelStateTracker`` (core/modelstate.py): from now
+        on placements consult it for start latencies and removals demote
+        weights into the pod's node host-RAM cache."""
+        self.modelstate = tracker
+
+    def _next_node_slot(self) -> int:
+        """Lowest node slot with room for another chip."""
+        n = 0
+        while self._node_counts.get(n, 0) >= self.gpus_per_node:
+            n += 1
+        return n
+
+    def peek_next_node(self) -> str:
+        """Node name the next fresh chip would land on (used by the
+        pre-warming policy to promote weights ahead of provisioning)."""
+        return f"node-{self._next_node_slot()}"
 
     # ---- topology ----------------------------------------------------------
     @property
@@ -139,12 +163,13 @@ class Reconfigurator:
             t = avail[0]
         i = next(self._gpu_counter)
         uuid = f"GPU-{i:04d}"
-        node = f"node-{i // self.gpus_per_node}"
-        g = VirtualGPU(uuid, node=node, window_ms=self.window_ms, index=i,
-                       gpu_type=t)
+        slot = self._next_node_slot()
+        g = VirtualGPU(uuid, node=f"node-{slot}", window_ms=self.window_ms,
+                       index=i, gpu_type=t)
         g.owner = self   # direct GPU-level mutations keep indexes fresh
         self.gpus[uuid] = g
         self._type_counts[t] = self._type_counts.get(t, 0) + 1
+        self._node_counts[slot] = self._node_counts.get(slot, 0) + 1
         return g
 
     def release_empty_gpus(self, keep: int = 0) -> List[str]:
@@ -157,6 +182,8 @@ class Reconfigurator:
             g = self.gpus[u]
             g.owner = None
             self._type_counts[g.gpu_type] -= 1
+            slot = int(g.node.rsplit("-", 1)[1])
+            self._node_counts[slot] -= 1
             del self.gpus[u]
             released.append(u)
         return released
@@ -251,22 +278,44 @@ class Reconfigurator:
     # ---- mutations ---------------------------------------------------------
     def place_pod(self, pod: PodAlloc, gpu_uuid: Optional[str] = None,
                   now: float = 0.0, cold_start_s: float = 0.0,
-                  gpu_type=None) -> PodAlloc:
+                  gpu_type=None, spec=None, fresh_chip: Optional[bool] = None,
+                  start_overhead_s: float = 0.0) -> PodAlloc:
         """Place ``pod`` on ``gpu_uuid``, or on a fresh chip when None
         (of ``gpu_type`` if given, else the first fleet type with
-        capacity wide enough for ``pod.sm``)."""
+        capacity wide enough for ``pod.sm``).
+
+        With an attached ``ModelStateTracker`` and a ``spec``, the
+        requested ``cold_start_s`` is re-derived from the weight
+        residency tier at ``now`` (cold / host-cached / GPU-resident);
+        ``fresh_chip`` forces the fresh-chip classification when the
+        caller provisioned the chip itself (default: inferred from
+        ``gpu_uuid is None``), and ``start_overhead_s`` carries
+        policy-specific extra bring-up (runtime / device plugin).
+        """
         if gpu_uuid is None:
             g = self.add_gpu(gpu_type, min_sm=pod.sm)
         else:
             g = self.gpus[gpu_uuid]
+        if self.modelstate is not None and spec is not None:
+            fresh = fresh_chip if fresh_chip is not None else gpu_uuid is None
+            cold_start_s = self.modelstate.on_pod_placed(
+                spec, pod, g, fresh, now, requested_s=cold_start_s,
+                overhead_s=start_overhead_s)
         pod.created_at = now
         pod.ready_at = now + cold_start_s
         g.place(pod)
         return pod
 
-    def remove_pod(self, pod_id: str) -> None:
+    def remove_pod(self, pod_id: str, now: Optional[float] = None) -> None:
+        """Remove ``pod_id`` from its chip; with an attached lifecycle
+        tracker its weights demote to the node's host cache as of
+        ``now`` (falling back to the tracker's last-seen time)."""
         g = self.gpu_of_pod(pod_id)
         if g is not None:
+            if self.modelstate is not None:
+                pod = self._pods.get(pod_id)
+                if pod is not None:
+                    self.modelstate.on_pod_removed(pod, g, now)
             g.remove(pod_id)
 
     def set_quota(self, pod_id: str, quota: float) -> None:

@@ -154,6 +154,18 @@ class FleetPlacer:
         self.table = table
         self.slo_multiplier = slo_multiplier
 
+    # ---- weight affinity ---------------------------------------------------
+    def _affinity_rank(self, g: VirtualGPU, fn_id: str, now: float) -> int:
+        """Model-state placement affinity at ``now``
+        (``ModelStateTracker.placement_rank``: HBM-resident <
+        host-cached < fetch in flight < cold) — constant 0 without an
+        active lifecycle tracker, so legacy packing order is
+        untouched."""
+        tracker = getattr(self.recon, "modelstate", None)
+        if tracker is None or tracker.is_passive:
+            return 0
+        return tracker.placement_rank(g, fn_id, now)
+
     # ---- SLO feasibility ---------------------------------------------------
     def slo_ok(self, spec, pod: PodAlloc, gpu_type: GPUType) -> bool:
         """Whether (pod.batch, pod.sm, pod.quota) on ``gpu_type`` meets
@@ -189,14 +201,16 @@ class FleetPlacer:
             new_gpu_cold_start_s = cold_start_s
         used = [g for g in self.recon.used_gpus()
                 if g.can_place(pod.sm, pod.quota)]
-        used.sort(key=lambda g: (g.gpu_type.price_per_slice_hour, g.index))
+        used.sort(key=lambda g: (g.gpu_type.price_per_slice_hour,
+                                 self._affinity_rank(g, pod.fn_id, now),
+                                 g.index))
         deferred: List = []
         for g in used:
             if not self.slo_ok(spec, pod, g.gpu_type):
                 deferred.append(g)
                 continue
             self.recon.place_pod(pod, g.uuid, now=now,
-                                 cold_start_s=cold_start_s)
+                                 cold_start_s=cold_start_s, spec=spec)
             return g
         fresh = sorted(
             (t for t in self.recon.available_gpu_types(min_sm=pod.sm)
@@ -205,7 +219,8 @@ class FleetPlacer:
         if fresh:
             g = self.recon.add_gpu(fresh[0])
             self.recon.place_pod(pod, g.uuid, now=now,
-                                 cold_start_s=new_gpu_cold_start_s)
+                                 cold_start_s=new_gpu_cold_start_s,
+                                 spec=spec, fresh_chip=True)
             return g
         if not allow_slo_overflow:
             return None
@@ -214,7 +229,7 @@ class FleetPlacer:
         if deferred:
             g = deferred[0]
             self.recon.place_pod(pod, g.uuid, now=now,
-                                 cold_start_s=cold_start_s)
+                                 cold_start_s=cold_start_s, spec=spec)
             return g
         types = self.recon.available_gpu_types(min_sm=pod.sm)
         if not types:
@@ -222,7 +237,8 @@ class FleetPlacer:
         t = min(types, key=lambda t: t.price_per_slice_hour)
         g = self.recon.add_gpu(t)
         self.recon.place_pod(pod, g.uuid, now=now,
-                             cold_start_s=new_gpu_cold_start_s)
+                             cold_start_s=new_gpu_cold_start_s,
+                             spec=spec, fresh_chip=True)
         return g
 
     # ---- batch packing (FFD) -----------------------------------------------

@@ -46,6 +46,12 @@ class PodAlloc:
     placement, where the hosting chip is known. ``gpu_type`` is stamped
     by ``VirtualGPU.place`` so the pod's physics (service times,
     throughput, billing) follow the device actually hosting it.
+
+    ``standby`` marks a keep-warm pod (quota parked near zero, weights
+    held in HBM, excluded from dispatch and capacity, billed at the
+    idle-retention price); ``start_kind`` is the model-state lifecycle
+    engine's cold/warm/hot classification of the pod's last start
+    (None outside lifecycle-enabled runs).
     """
     fn_id: str
     sm: int                      # slices in its partition (1..sm_total)
@@ -56,6 +62,8 @@ class PodAlloc:
     created_at: float = 0.0
     ready_at: float = 0.0        # cold start completion time
     gpu_type: Optional[GPUType] = None   # stamped at placement
+    standby: bool = False        # keep-warm pool member (not serving)
+    start_kind: Optional[str] = None     # cold | warm | hot (lifecycle)
 
     def __post_init__(self):
         if not self.pod_id:

@@ -23,8 +23,8 @@ import numpy as np
 
 from repro.configs import ARCHS
 from repro.core import (ClusterSimulator, FaSTGShareLikePolicy, FnSpec,
-                        HybridAutoScaler, KServeLikePolicy, Reconfigurator,
-                        SimConfig)
+                        HybridAutoScaler, KServeLikePolicy, LifecycleConfig,
+                        ModelStateTracker, Reconfigurator, SimConfig)
 from repro.core.metrics import DEFAULT_MULTIPLIERS, RunMetrics
 from repro.core.multisim import MultiFunctionSimulator
 from repro.workloads import azure, generators
@@ -39,10 +39,21 @@ POLICIES: Dict[str, tuple] = {
 # per-function seed decorrelation stride for co-located scenarios
 _FN_SEED_STRIDE = 7919
 
+#: Physics-derived lifecycle with host caching + one keep-warm pod —
+#: the configuration the scale-to-zero / churn scenarios run under.
+LIFECYCLE_CACHED = LifecycleConfig(derive_from_physics=True,
+                                   host_cache_gb=16.0, keep_warm_pods=1)
+#: As above plus forecast-driven pre-warming (fig6 ``--prewarm``).
+LIFECYCLE_PREWARM = dataclasses.replace(LIFECYCLE_CACHED,
+                                        prewarm_lead_s=5.0)
+
 
 def make_policy(name: str, recon: Reconfigurator):
     """Instantiate the registered policy ``name`` (``has``/``kserve``/
-    ``fast``) with its default config against cluster ``recon``."""
+    ``fast``) with its default config against cluster ``recon``. When
+    the cluster carries an active ``ModelStateTracker``, the HAS policy
+    adopts its keep-warm / pre-warm knobs automatically (so custom
+    ``policy_factory`` hooks honor a scenario's lifecycle too)."""
     return POLICIES[name][0](recon)
 
 
@@ -57,7 +68,10 @@ class Scenario:
     (``configs/gpus.py`` names); None means the legacy homogeneous
     cluster of ``max_gpus`` reference-type chips — the construction
     path, and therefore the golden traces, of every pre-heterogeneity
-    scenario.
+    scenario. ``lifecycle`` attaches the model-state lifecycle engine
+    (``core/modelstate.py``): physics-derived cold starts, host-RAM
+    weight caching, keep-warm pools, and pre-warming; None (the
+    default) runs the legacy flat-constant cold-start physics.
     """
     name: str
     description: str
@@ -69,6 +83,7 @@ class Scenario:
     max_gpus: int = 64
     colocated: bool = False
     fleet: Optional[Tuple[Tuple[str, int], ...]] = None
+    lifecycle: Optional[LifecycleConfig] = None
 
     def with_(self, **overrides) -> "Scenario":
         """A derived scenario (e.g. another arch, horizon, or fleet)."""
@@ -118,6 +133,16 @@ class Scenario:
         rps = self.base_rps if base_rps is None else base_rps
         specs = self.fn_specs()
         recon = self.make_recon(fleet)
+        lc = self.lifecycle
+        if lc is not None:
+            if policy != "has":
+                # baselines get the same start-latency physics but no
+                # cache / keep-warm / pre-warming — isolating what the
+                # lifecycle machinery (not the physics) buys HAS
+                lc = dataclasses.replace(lc, host_cache_gb=0.0,
+                                         keep_warm_pods=0,
+                                         prewarm_lead_s=0.0)
+            recon.attach_modelstate(ModelStateTracker(lc))
         whole = POLICIES[policy][1]
         cfg = SimConfig(duration_s=dur, whole_gpu_cost=whole, seed=seed)
         factory = policy_factory or make_policy
@@ -134,6 +159,10 @@ class Scenario:
             pol.prewarm(specs[0], rps)
             sim = ClusterSimulator(specs[0], pol, recon,
                                    self.arrivals_for(0, dur, rps, seed), cfg)
+        if recon.modelstate is not None:
+            # deploy-time prewarm placements are not run-time starts
+            # (the engine adopted lc.idle_retention_factor on its own)
+            recon.modelstate.reset_stats()
         result = sim.run()
         metrics = RunMetrics.from_sim(sim, self.name, policy, seed,
                                       self.slo_multipliers)
@@ -252,6 +281,49 @@ register(Scenario(
                                              period_s=180.0, seed=s),
     base_rps=25.0,
     fleet=(("a10g", 24), ("a100", 8), ("h100", 4), ("t4", 16))))
+
+register(Scenario(
+    name="scale_to_zero_lru",
+    description="On/off multi-tenant-style load (calm near-idle phases, "
+                "abrupt 15x bursts) under the model-state lifecycle engine: "
+                "scale-downs demote weights to the node host-RAM LRU cache "
+                "and one keep-warm pod stays parked, so burst re-scale-ups "
+                "start warm/hot instead of cold.",
+    trace=lambda d, r, s: generators.mmpp(d, r, burst_multiplier=15.0,
+                                          mean_calm_s=14.0, mean_burst_s=6.0,
+                                          seed=s),
+    base_rps=10.0,
+    lifecycle=dataclasses.replace(LIFECYCLE_CACHED, host_cache_gb=8.0)))
+
+register(Scenario(
+    name="multi_tenant_churn",
+    description="Three architectures churning in and out on one cluster "
+                "with a host-RAM weight-cache budget smaller than the sum "
+                "of their weights — LRU eviction pressure decides which "
+                "re-scale-ups stay warm (no keep-warm pods: the cache is "
+                "the only lifecycle mechanism at work).",
+    trace=lambda d, r, s: generators.mmpp(d, r, burst_multiplier=8.0,
+                                          mean_calm_s=12.0, mean_burst_s=5.0,
+                                          seed=s),
+    archs=("olmo-1b", "mamba2-2.7b", "whisper-medium"),
+    base_rps=8.0,
+    max_gpus=96,
+    colocated=True,
+    lifecycle=LifecycleConfig(derive_from_physics=True, host_cache_gb=6.0)))
+
+register(Scenario(
+    name="flash_crowd_prewarm",
+    description="The flash_crowd spike under forecast-driven pre-warming: "
+                "the Kalman slope projected prewarm_lead_s ahead starts "
+                "weight fetches onto the likely placement nodes before the "
+                "wave lands, so scale-up pods start warm — strictly fewer "
+                "cold starts and lower SLO violations than reactive HAS "
+                "on the same trace (the paper's cold-start argument, "
+                "quantified).",
+    trace=lambda d, r, s: generators.flash_crowd(d, r, spike_multiplier=8.0,
+                                                 ramp_s=5.0, hold_s=15.0,
+                                                 seed=s),
+    lifecycle=LIFECYCLE_PREWARM))
 
 register(Scenario(
     name="spot_t4_burst",

@@ -61,6 +61,28 @@ def test_scenarios_doc_mentions_each_fleet():
                     f"docs/scenarios.md")
 
 
+def test_cold_start_lifecycle_doc_drift():
+    """architecture.md's "life of a cold start" section must exist and
+    stay in sync with the code: every registered device type appears in
+    its tier-latency table (each type has a distinct host->HBM
+    bandwidth) and every weight-residency tier is named."""
+    from repro.configs.gpus import GPU_TYPES
+    from repro.core.modelstate import WeightState
+
+    text = ARCHITECTURE_MD.read_text()
+    assert "## The life of a cold start" in text
+    section = text.split("## The life of a cold start", 1)[1]
+    section = section.split("\n## ", 1)[0]
+    for name, t in GPU_TYPES.items():
+        if name == "default":
+            continue   # alias of v5e
+        assert f"`{name}`" in section, (
+            f"GPU type {name!r} missing from the cold-start tier table")
+    for tier in WeightState:
+        assert tier.name in section, (
+            f"weight tier {tier.name} not described in the cold-start doc")
+
+
 def test_no_broken_intra_repo_links():
     failures = check_links.run()
     assert not failures, "broken links:\n  " + "\n  ".join(failures)

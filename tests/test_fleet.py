@@ -215,6 +215,7 @@ def test_cost_meter_prices_by_type():
 def test_deprecated_price_constant_warns():
     import importlib
     cost_mod = importlib.import_module("repro.core.cost")
+    cost_mod._reset_deprecation_warnings()   # warning is once-per-process
     with pytest.warns(DeprecationWarning):
         value = cost_mod.GPU_PRICE_PER_HOUR
     assert value == DEFAULT_GPU_TYPE.price_per_hour
@@ -257,6 +258,127 @@ def test_spot_overflow_lands_on_slo_violating_type():
     strict = PodAlloc(fn_id="f", sm=4, quota=1.0, batch=8)
     assert placer.place_one(SPEC, strict,
                             allow_slo_overflow=False) is None
+
+
+# -------------------------------------------------- placer FFD properties
+# Property-based invariants of the first-fit-decreasing packer. The
+# hypothesis versions explore the request/fleet space; the seeded
+# versions below them always run (hypothesis is an optional dep).
+
+def _pack_and_check(fleet, reqs, slo_multiplier=2.0):
+    """Pack ``reqs`` = [(sm, quota)] into ``fleet``; return the placer,
+    cluster, and pack result after asserting the universal invariants:
+    no slice/quota overcommit anywhere and FFD (decreasing-sm) order."""
+    recon = Reconfigurator(num_gpus=0, fleet=fleet)
+    placer = FleetPlacer(recon, CapacityTable(),
+                         slo_multiplier=slo_multiplier)
+    pods = [(SPEC, PodAlloc(fn_id="f", sm=sm, quota=q, batch=8))
+            for sm, q in reqs]
+    placed = placer.pack(pods)
+    for g in recon.gpus.values():
+        assert g.invariant_ok()
+        assert g.slices_used <= g.gpu_type.sm_total
+    widths = [p.sm for p, _ in placed]
+    assert widths == sorted(widths, reverse=True), "not FFD order"
+    for pod, g in placed:
+        if g is not None:
+            assert pod in g.pods   # a reported host actually hosts it
+    return placer, recon, placed
+
+
+def _spot_last_ok(placer, placed):
+    """Spot-last: a pod may only sit on an SLO-violating host if no
+    SLO-capable type could have hosted a pod of its shape at all."""
+    for pod, g in placed:
+        if g is None or placer.slo_ok(SPEC, pod, g.gpu_type):
+            continue
+        capable = [t for t, _ in placer.recon.fleet
+                   if t.sm_total >= pod.sm
+                   and placer.slo_ok(SPEC, pod, t)]
+        # every SLO-capable type was at cap (otherwise the placer
+        # would have opened a fresh chip there before overflowing)
+        for t in capable:
+            cap = placer.recon._cap_of(t)
+            assert cap is not None and placer.recon.type_count(t) >= cap, (
+                f"pod {pod.pod_id} overflowed onto {g.gpu_type.name} while "
+                f"SLO-capable {t.name} still had capacity")
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # optional dep; seeded versions still run
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    fleet_strategy = st.lists(
+        st.tuples(st.sampled_from(["a10g", "a100", "h100", "t4", "v5e"]),
+                  st.integers(1, 4)),
+        min_size=1, max_size=4)
+    reqs_strategy = st.lists(
+        st.tuples(st.integers(1, 8),
+                  st.sampled_from([0.2, 0.5, 0.8, 1.0])),
+        min_size=1, max_size=16)
+
+    @given(fleet=fleet_strategy, reqs=reqs_strategy)
+    @settings(max_examples=60, deadline=None)
+    def test_ffd_never_overcommits_slices(fleet, reqs):
+        """Whatever the fleet and request mix, packing never violates
+        the per-chip slice/quota conservation invariants and the pack
+        order is decreasing-sm (FFD)."""
+        _pack_and_check(fleet, reqs)
+
+    @given(fleet=fleet_strategy, reqs=reqs_strategy)
+    @settings(max_examples=60, deadline=None)
+    def test_ffd_spot_types_are_last_resort(fleet, reqs):
+        """SLO-violating (spot) hosts are only used once every
+        SLO-capable type is exhausted."""
+        placer, _, placed = _pack_and_check(fleet, reqs)
+        _spot_last_ok(placer, placed)
+
+    @given(reqs=reqs_strategy)
+    @settings(max_examples=40, deadline=None)
+    def test_ffd_prefers_cheapest_slo_capable_type(reqs):
+        """On an uncapped all-SLO-capable two-type fleet with a huge
+        multiplier, every fresh chip the packer opens is of the
+        cheaper $/slice-hour class."""
+        fleet = (("a100", None), ("a10g", None))
+        recon = Reconfigurator(num_gpus=0, fleet=fleet)
+        placer = FleetPlacer(recon, CapacityTable(), slo_multiplier=50.0)
+        for sm, q in reqs:
+            pod = PodAlloc(fn_id="f", sm=sm, quota=q, batch=8)
+            g = placer.place_one(SPEC, pod)
+            assert g is not None
+            assert g.gpu_type is A10G   # strictly cheaper per slice
+
+    @given(reqs=reqs_strategy)
+    @settings(max_examples=40, deadline=None)
+    def test_strict_placer_never_violates_slo(reqs):
+        """With overflow disabled, every successful placement sits on
+        an SLO-capable host — or fails outright."""
+        recon = Reconfigurator(num_gpus=0, fleet=(("t4", 2), ("a100", 2)))
+        placer = FleetPlacer(recon, CapacityTable(), slo_multiplier=1.5)
+        for sm, q in reqs:
+            pod = PodAlloc(fn_id="f", sm=sm, quota=q, batch=8)
+            g = placer.place_one(SPEC, pod, allow_slo_overflow=False)
+            if g is not None:
+                assert placer.slo_ok(SPEC, pod, g.gpu_type)
+
+
+def test_ffd_invariants_seeded():
+    """Hypothesis-free sweep of the same FFD invariants on seeded
+    random fleets/requests (runs even without the optional dep)."""
+    rng = np.random.default_rng(11)
+    names = ["a10g", "a100", "h100", "t4", "v5e"]
+    for trial in range(25):
+        fleet = tuple(
+            (names[int(rng.integers(len(names)))], int(rng.integers(1, 5)))
+            for _ in range(int(rng.integers(1, 4))))
+        reqs = [(int(rng.integers(1, 9)),
+                 float(rng.choice([0.2, 0.5, 0.8, 1.0])))
+                for _ in range(int(rng.integers(1, 17)))]
+        placer, _, placed = _pack_and_check(fleet, reqs)
+        _spot_last_ok(placer, placed)
 
 
 # ---------------------------------------------------------------- policy

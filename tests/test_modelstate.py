@@ -1,0 +1,506 @@
+"""Cold-start test suite for the model-state lifecycle engine
+(core/modelstate.py).
+
+Pins, in order: the shared start-latency constants (the policies'
+cold-start fields must stay sums of one physics source), the
+state-machine transitions cold -> fetching -> host -> gpu -> host ->
+cold, LRU eviction order under a capacity budget, weight-transfer
+events racing arrivals and scale-downs (mirroring
+test_event_edge_cases.py), keep-warm standby pods (capacity exclusion,
+hot reactivation, idle-retention billing), forecast-driven pre-warming
+beating the reactive policy on the flash-crowd trace, and — the
+load-bearing one — byte-identical legacy goldens when a tracker with
+default (passive) lifecycle parameters is attached.
+"""
+import dataclasses
+import pathlib
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.configs.gpus import DEFAULT_GPU_TYPE, GPU_TYPES
+from repro.core import (AutoScalerConfig, ClusterSimulator, FnSpec,
+                        HybridAutoScaler, LifecycleConfig, ModelStateTracker,
+                        NodeWeightCache, Reconfigurator, SimConfig,
+                        WeightState)
+from repro.core import modelstate as ms
+from repro.core.baselines import FaSTGShareLikeConfig, KServeLikeConfig
+from repro.core.cost import CostMeter
+from repro.core.metrics import RunMetrics
+from repro.core.vgpu import PodAlloc
+from repro.workloads.scenarios import get_scenario
+
+SPEC = FnSpec(ARCHS["olmo-1b"])
+GOLDEN_DIR = pathlib.Path(__file__).parent / "goldens"
+
+PHYSICS = LifecycleConfig(derive_from_physics=True, host_cache_gb=16.0)
+
+
+def make_tracker(**kw) -> ModelStateTracker:
+    base = dict(derive_from_physics=True, host_cache_gb=16.0)
+    base.update(kw)
+    return ModelStateTracker(LifecycleConfig(**base))
+
+
+# ---------------------------------------------------------------- constants
+def test_legacy_constants_are_exact_component_sums():
+    """The flat cold-start constants every golden was produced with must
+    be EXACTLY the sums of the shared physics components — bitwise, so
+    the derivation can never drift the goldens."""
+    assert ms.WARM_CHIP_COLD_START_S == 2.5
+    assert ms.NEW_GPU_COLD_START_S == 8.0
+    assert ms.FAST_GSHARE_COLD_START_S == 5.0
+    assert ms.KSERVE_COLD_START_S == 15.0
+    assert ms.WARM_CHIP_COLD_START_S == (
+        ms.CONTAINER_INIT_S + ms.WEIGHT_FETCH_S + ms.WEIGHT_LOAD_S)
+    assert ms.NEW_GPU_COLD_START_S == (
+        ms.WARM_CHIP_COLD_START_S + ms.CHIP_INIT_S)
+
+
+def test_policies_share_one_cold_start_physics_source():
+    """Regression for the duplicated-constants bug: every policy config
+    quotes its cold-start default from core/modelstate.py, not from an
+    independent literal that can silently diverge."""
+    assert AutoScalerConfig().cold_start_s == ms.WARM_CHIP_COLD_START_S
+    assert AutoScalerConfig().new_gpu_cold_start_s == ms.NEW_GPU_COLD_START_S
+    assert KServeLikeConfig().cold_start_s == ms.KSERVE_COLD_START_S
+    assert FaSTGShareLikeConfig().cold_start_s == ms.FAST_GSHARE_COLD_START_S
+    # and the cross-policy relations hold by construction
+    assert KServeLikeConfig().cold_start_s == (
+        ms.NEW_GPU_COLD_START_S + KServeLikeConfig().start_overhead_s)
+    assert FaSTGShareLikeConfig().cold_start_s == (
+        ms.WARM_CHIP_COLD_START_S + FaSTGShareLikeConfig().start_overhead_s)
+
+
+def test_physics_scales_with_model_size_and_bus():
+    """Derived tier latencies follow the weight footprint and the
+    device's host->HBM bandwidth."""
+    small = ms.physics_cold_model(SPEC, DEFAULT_GPU_TYPE)
+    big = ms.physics_cold_model(FnSpec(ARCHS["mamba2-2.7b"]),
+                                DEFAULT_GPU_TYPE)
+    assert big.fetch_to_host_s > small.fetch_to_host_s
+    assert big.load_to_gpu_s > small.load_to_gpu_s
+    slow_bus = ms.physics_cold_model(SPEC, GPU_TYPES["t4"])
+    fast_bus = ms.physics_cold_model(SPEC, GPU_TYPES["h100"])
+    assert slow_bus.load_to_gpu_s > fast_bus.load_to_gpu_s
+    # fetch is an object-store property, not a device property
+    assert slow_bus.fetch_to_host_s == fast_bus.fetch_to_host_s
+
+
+def test_cold_start_model_tier_composition():
+    m = ms.ColdStartModel(container_init_s=0.3, fetch_to_host_s=2.0,
+                          load_to_gpu_s=0.1, chip_init_s=5.0)
+    assert m.time_to_ready(WeightState.COLD) == pytest.approx(2.4)
+    assert m.time_to_ready(WeightState.HOST) == pytest.approx(0.4)
+    assert m.time_to_ready(WeightState.GPU) == pytest.approx(0.3)
+    assert m.time_to_ready(WeightState.FETCHING,
+                           wait_s=0.7) == pytest.approx(1.1)
+    assert m.time_to_ready(WeightState.COLD,
+                           fresh_chip=True) == pytest.approx(7.4)
+    assert m.time_to_ready(WeightState.HOST,
+                           overhead_s=1.5) == pytest.approx(1.9)
+
+
+def test_lifecycle_config_validation():
+    with pytest.raises(ValueError):
+        LifecycleConfig(host_cache_gb=8.0)   # cache needs physics mode
+    with pytest.raises(ValueError):
+        LifecycleConfig(keep_warm_pods=1)
+    assert LifecycleConfig().is_passive
+    assert not LifecycleConfig(derive_from_physics=True).is_passive
+
+
+# ---------------------------------------------------------------- LRU cache
+def test_lru_eviction_order():
+    wb = 1.0
+    cache = NodeWeightCache(capacity_bytes=3.0)
+    assert cache.admit("a", wb) == []
+    assert cache.admit("b", wb) == []
+    assert cache.admit("c", wb) == []
+    cache.touch("a")                      # LRU order now b, c, a
+    assert cache.lru_order() == ["b", "c", "a"]
+    assert cache.admit("d", wb) == ["b"]  # least-recently-used evicted first
+    assert cache.admit("e", 2.0) == ["c", "a"]
+    assert cache.lru_order() == ["d", "e"]
+
+
+def test_lru_rejects_model_bigger_than_budget():
+    cache = NodeWeightCache(capacity_bytes=2.0)
+    cache.admit("small", 1.5)
+    assert cache.admit("huge", 5.0) == []   # not admitted, nothing flushed
+    assert cache.contains("small") and not cache.contains("huge")
+
+
+# ---------------------------------------------------------------- tracker
+def test_state_machine_transitions():
+    """COLD -> FETCHING -> HOST -> GPU -> (remove) -> HOST -> (evict)
+    -> COLD, with transfer completion folded in lazily."""
+    tr = make_tracker()
+    recon = Reconfigurator(num_gpus=0, max_gpus=4)
+    recon.attach_modelstate(tr)
+    assert tr.state("node-0", SPEC.fn_id, 0.0) is WeightState.COLD
+
+    done_at = tr.promote("node-0", SPEC, now=0.0)
+    assert done_at == pytest.approx(ms.weight_bytes(SPEC) / ms.OBJECT_STORE_BW)
+    assert tr.state("node-0", SPEC.fn_id, 0.5) is WeightState.FETCHING
+    # re-promoting mid-flight keeps the original completion time
+    assert tr.promote("node-0", SPEC, now=0.5) == done_at
+    assert tr.state("node-0", SPEC.fn_id, done_at + 0.1) is WeightState.HOST
+
+    pod = PodAlloc(fn_id=SPEC.fn_id, sm=4, quota=0.5, batch=8)
+    recon.place_pod(pod, None, now=done_at + 1.0, cold_start_s=2.5, spec=SPEC)
+    g = recon.gpu_of_pod(pod.pod_id)
+    # at the placement instant the HBM load is still in flight; the
+    # weights only count as GPU-resident once they have arrived
+    assert tr.state(g.node, SPEC.fn_id, done_at + 1.0,
+                    gpu_uuid=g.uuid) is WeightState.FETCHING
+    assert tr.state(g.node, SPEC.fn_id, pod.ready_at,
+                    gpu_uuid=g.uuid) is WeightState.GPU
+    assert pod.start_kind == "warm"       # host-cached at placement
+
+    recon.remove_pod(pod.pod_id)          # demote: HBM -> host cache
+    assert tr.state(g.node, SPEC.fn_id, done_at + 2.0,
+                    gpu_uuid=g.uuid) is WeightState.HOST
+
+    tr._cache(g.node).evict(SPEC.fn_id)   # pressure-evict -> COLD
+    assert tr.state(g.node, SPEC.fn_id, done_at + 3.0) is WeightState.COLD
+
+
+def test_placement_tier_latencies():
+    """A COLD placement pays fetch+load, a HOST placement only load, a
+    second pod on the same chip starts hot (container only)."""
+    tr = make_tracker()
+    recon = Reconfigurator(num_gpus=0, max_gpus=4)
+    recon.attach_modelstate(tr)
+    model = tr.cold_model(SPEC, DEFAULT_GPU_TYPE)
+
+    p1 = PodAlloc(fn_id=SPEC.fn_id, sm=4, quota=0.5, batch=8)
+    recon.place_pod(p1, None, now=0.0, cold_start_s=2.5, spec=SPEC)
+    assert p1.start_kind == "cold"
+    assert p1.ready_at == pytest.approx(
+        model.time_to_ready(WeightState.COLD, fresh_chip=True))
+
+    g = recon.gpu_of_pod(p1.pod_id)
+    p2 = PodAlloc(fn_id=SPEC.fn_id, sm=4, quota=0.4, batch=8)
+    recon.place_pod(p2, g.uuid, now=10.0, cold_start_s=2.5, spec=SPEC)
+    assert p2.start_kind == "hot"
+    assert p2.ready_at - 10.0 == pytest.approx(model.container_init_s)
+
+    # remove both -> host cache; a re-placement on the same node is warm
+    recon.remove_pod(p1.pod_id)
+    recon.remove_pod(p2.pod_id)
+    recon.release_empty_gpus()
+    p3 = PodAlloc(fn_id=SPEC.fn_id, sm=4, quota=0.5, batch=8)
+    recon.place_pod(p3, None, now=20.0, cold_start_s=2.5, spec=SPEC)
+    assert recon.gpu_of_pod(p3.pod_id).node == g.node  # node slot reused
+    assert p3.start_kind == "warm"
+    assert p3.ready_at - 20.0 == pytest.approx(model.time_to_ready(
+        WeightState.HOST, fresh_chip=True))
+
+
+def test_placement_mid_transfer_waits_remaining_time():
+    """A pod placed while the prewarm fetch is in flight pays only the
+    remaining transfer time plus the load — the race the pre-warming
+    policy wins."""
+    tr = make_tracker()
+    recon = Reconfigurator(num_gpus=0, max_gpus=4)
+    recon.attach_modelstate(tr)
+    done_at = tr.promote(recon.peek_next_node(), SPEC, now=0.0)
+    t_place = done_at * 0.5
+    pod = PodAlloc(fn_id=SPEC.fn_id, sm=4, quota=0.5, batch=8)
+    recon.place_pod(pod, None, now=t_place, cold_start_s=2.5, spec=SPEC)
+    assert pod.start_kind == "warm"
+    model = tr.cold_model(SPEC, DEFAULT_GPU_TYPE)
+    want = model.time_to_ready(WeightState.FETCHING, fresh_chip=True,
+                               wait_s=done_at - t_place)
+    assert pod.ready_at - t_place == pytest.approx(want)
+    assert pod.ready_at - t_place < model.time_to_ready(
+        WeightState.COLD, fresh_chip=True)
+
+
+# --------------------------------------------------- races inside the engine
+class ScriptedPolicy:
+    """Replays (time, fn) mutation callbacks against the Reconfigurator
+    (mirrors test_event_edge_cases.ScriptedPolicy)."""
+
+    def __init__(self, recon, script):
+        self.recon = recon
+        self.script = sorted(script, key=lambda s: s[0])
+
+    def prewarm(self, spec, expected_rps):
+        pass
+
+    def tick(self, now, spec, observed_rps):
+        while self.script and self.script[0][0] <= now:
+            _, fn = self.script.pop(0)
+            fn(self.recon, now)
+
+
+def test_weight_transfer_races_scale_down():
+    """A prewarm transfer is in flight when a scale-down removes every
+    pod of the function on that node: the engine must stay conservative
+    and the transfer must still complete into the host cache, so the
+    NEXT scale-up on the node is warm, not cold."""
+    tr = make_tracker()
+    recon = Reconfigurator(num_gpus=0, max_gpus=8)
+    recon.attach_modelstate(tr)
+    first = PodAlloc(fn_id=SPEC.fn_id, sm=4, quota=0.5, batch=8,
+                     pod_id="perm")
+    recon.place_pod(first, None, now=0.0, cold_start_s=0.0, spec=SPEC)
+    node = recon.gpu_of_pod("perm").node
+
+    def promote_other(recon_, now):
+        tr.promote("node-7", SPEC, now)      # transfer to an empty node
+
+    def add_pod(recon_, now):
+        recon_.place_pod(PodAlloc(fn_id=SPEC.fn_id, sm=4, quota=0.5,
+                                  batch=8, pod_id="victim"),
+                         None, now=now, cold_start_s=2.5, spec=SPEC)
+
+    def remove_pod(recon_, now):
+        recon_.remove_pod("victim")          # racing its own cold start
+        recon_.release_empty_gpus()
+
+    pol = ScriptedPolicy(recon, [(1.0, promote_other), (2.0, add_pod),
+                                 (3.0, remove_pod)])
+    arr = np.sort(np.random.default_rng(3).uniform(0, 15.0, size=200))
+    sim = ClusterSimulator(SPEC, pol, recon, arr, SimConfig(duration_s=15.0))
+    res = sim.run()
+    assert res.n_completed + res.n_dropped == res.n_arrived
+    assert "victim" not in sim.runtimes
+    # the removed pod demoted its weights into its node's host cache
+    victim_node = "node-1"   # second chip -> second node slot
+    assert tr.host_cached(victim_node, SPEC.fn_id, now=15.0)
+    # the raced transfer still completed into node-7's cache
+    assert tr.host_cached("node-7", SPEC.fn_id, now=15.0)
+    assert tr.state("node-7", SPEC.fn_id, 15.0) is WeightState.HOST
+
+
+# ------------------------------------------------------------ keep-warm pool
+def _keepwarm_scaler():
+    recon = Reconfigurator(num_gpus=0, max_gpus=8)
+    recon.attach_modelstate(make_tracker(keep_warm_pods=1))
+    scaler = HybridAutoScaler(recon, cfg=AutoScalerConfig(
+        cooldown_s=0.0, keep_warm_pods=1))
+    return recon, scaler
+
+
+def test_scale_down_parks_keep_warm_standby():
+    recon, scaler = _keepwarm_scaler()
+    scaler.prewarm(SPEC, 120.0)
+    assert len(recon.pods_of(SPEC.fn_id)) >= 2
+    scaler.scale(30.0, SPEC, 1.0)           # collapse demand
+    pods = recon.pods_of(SPEC.fn_id)
+    standby = [p for p in pods if p.standby]
+    active = [p for p in pods if not p.standby]
+    assert len(standby) == 1                # exactly the keep-warm budget
+    assert active                           # never scales to zero
+    assert standby[0].quota == ms.KEEP_WARM_QUOTA
+    # standby pods hold no capacity
+    assert scaler.capacity(SPEC) == pytest.approx(
+        sum(scaler.pod_thpt(SPEC, p) for p in active))
+    # ...but their chip stays provisioned (weights are HBM-resident)
+    g = recon.gpu_of_pod(standby[0].pod_id)
+    assert g is not None
+    assert recon.modelstate.gpu_resident(g.uuid, SPEC.fn_id)
+
+
+def test_standby_reactivation_is_hot_and_instant():
+    recon, scaler = _keepwarm_scaler()
+    scaler.prewarm(SPEC, 120.0)
+    scaler.scale(30.0, SPEC, 1.0)
+    standby = [p for p in recon.pods_of(SPEC.fn_id) if p.standby]
+    assert standby
+    before = recon.modelstate.start_counts()["hot"]
+    scaler.scale(31.0, SPEC, 200.0)         # demand returns
+    pod = standby[0]
+    assert not pod.standby
+    assert pod.start_kind == "hot"
+    assert pod.quota >= scaler.cfg.min_quota
+    assert recon.modelstate.start_counts()["hot"] == before + 1
+
+
+def test_standby_billed_at_idle_retention_price():
+    recon = Reconfigurator(num_gpus=0, max_gpus=4)
+    g = recon.add_gpu()
+    active = PodAlloc(fn_id="f", sm=4, quota=0.5, batch=8)
+    parked = PodAlloc(fn_id="f", sm=4, quota=ms.KEEP_WARM_QUOTA, batch=8,
+                      standby=True)
+    recon.place_pod(active, g.uuid)
+    recon.place_pod(parked, g.uuid)
+    meter = CostMeter(idle_retention_factor=0.2)
+    usd_rate, frac = meter.rates(recon)
+    want_frac = (4 / 8) * 0.5 + 0.2 * (4 / 8)
+    assert frac == pytest.approx(want_frac)
+    assert usd_rate == pytest.approx(
+        want_frac * DEFAULT_GPU_TYPE.price_per_hour / 3600.0)
+    # factor 0 parks for free; the active pod still bills
+    assert CostMeter(idle_retention_factor=0.0).rates(recon)[1] == \
+        pytest.approx((4 / 8) * 0.5)
+
+
+# ------------------------------------------------------- end-to-end behavior
+def test_legacy_goldens_byte_identical_with_passive_tracker():
+    """Attaching a tracker whose lifecycle defaults reproduce the old
+    constants must leave the serialized RunMetrics BYTE-identical to
+    the pre-lifecycle goldens — placement latencies, statistics
+    surfacing, everything."""
+    for name, policy in (("steady_poisson", "has"),
+                         ("steady_poisson", "kserve"),
+                         ("steady_poisson", "fast"),
+                         ("azure_standard", "has")):
+        path = GOLDEN_DIR / f"{name}__{policy}.json"
+        if not path.exists():
+            pytest.skip("corpus not generated yet")
+        scen = get_scenario(name).with_(lifecycle=LifecycleConfig())
+        metrics = scen.run(policy=policy, seed=42, duration_s=45.0).metrics
+        assert metrics.to_json() == path.read_text(), (name, policy)
+
+
+def test_prewarm_beats_reactive_on_flash_crowd():
+    """Forecast-driven pre-warming on the flash-crowd trace: strictly
+    fewer cold starts and lower time-to-ready than the identical
+    lifecycle config without pre-warming, and strictly fewer cold
+    starts plus a lower SLO violation rate than the reactive legacy
+    HAS policy on the same arrivals."""
+    prewarm_scen = get_scenario("flash_crowd_prewarm")
+    no_prewarm = prewarm_scen.with_(
+        name="flash_crowd_no_prewarm",
+        lifecycle=dataclasses.replace(prewarm_scen.lifecycle,
+                                      prewarm_lead_s=0.0))
+    pre = prewarm_scen.run(policy="has", seed=42, duration_s=45.0).metrics
+    rea = no_prewarm.run(policy="has", seed=42, duration_s=45.0).metrics
+    assert rea.start_kinds["cold"] > 0
+    assert pre.start_kinds["cold"] < rea.start_kinds["cold"]
+    # pre-warmed starts exist and reach ready faster end to end
+    assert pre.start_kinds["warm"] + pre.start_kinds["hot"] > 0
+    assert pre.time_to_ready_ms["p99"] < rea.time_to_ready_ms["p99"]
+    assert pre.slo_violation_rate["1.5"] <= rea.slo_violation_rate["1.5"]
+    # and vs the reactive legacy policy (flat constants, no lifecycle)
+    legacy = get_scenario("flash_crowd").run(policy="has", seed=42,
+                                             duration_s=45.0).metrics
+    assert pre.cold_starts < legacy.cold_starts
+    assert pre.slo_violation_rate["1.5"] < legacy.slo_violation_rate["1.5"]
+
+
+def test_prewarm_golden_pins_fewer_cold_starts_than_reactive_golden():
+    """The acceptance pin: the flash_crowd_prewarm golden shows strictly
+    fewer cold starts and lower violations than the reactive HAS golden
+    on the same arrival process."""
+    pre_path = GOLDEN_DIR / "flash_crowd_prewarm__has.json"
+    rea_path = GOLDEN_DIR / "flash_crowd__has.json"
+    if not (pre_path.exists() and rea_path.exists()):
+        pytest.skip("corpus not generated yet")
+    pre = RunMetrics.load(pre_path)
+    rea = RunMetrics.load(rea_path)
+    assert rea.cold_starts > 0
+    assert pre.cold_starts < rea.cold_starts
+    for mult in ("1.5", "2.0", "2.5"):
+        assert pre.slo_violation_rate[mult] <= rea.slo_violation_rate[mult]
+    assert pre.slo_violation_rate["1.5"] < rea.slo_violation_rate["1.5"]
+
+
+def test_lifecycle_metrics_round_trip():
+    m = get_scenario("scale_to_zero_lru").run(policy="has", seed=7,
+                                              duration_s=45.0).metrics
+    assert m.start_kinds is not None
+    assert set(m.start_kinds) == {"cold", "warm", "hot"}
+    back = RunMetrics.from_json(m.to_json())
+    assert back.to_json() == m.to_json()
+    assert back.start_kinds == m.start_kinds
+    # legacy records still round-trip without the lifecycle fields
+    legacy = get_scenario("steady_poisson").run(policy="has", seed=7,
+                                                duration_s=30.0).metrics
+    assert legacy.start_kinds is None
+    assert "start_kinds" not in legacy.to_dict()
+
+
+def test_baselines_get_physics_but_no_cache():
+    """On a lifecycle scenario the baselines run the same derived
+    start-latency physics but with caching/keep-warm/pre-warm stripped
+    — their tracker is active yet cache-less."""
+    scen = get_scenario("scale_to_zero_lru")
+    out = scen.run(policy="kserve", seed=42, duration_s=45.0)
+    tracker = out.simulator.recon.modelstate
+    assert tracker is not None and not tracker.is_passive
+    assert tracker.cfg.derive_from_physics
+    assert tracker.cfg.host_cache_gb == 0.0
+    assert tracker.cfg.keep_warm_pods == 0
+    assert out.metrics.start_kinds is not None
+
+
+def test_scaler_adopts_lifecycle_knobs_from_tracker():
+    """Any HybridAutoScaler built against a cluster with an active
+    tracker — including custom policy_factory hooks that know nothing
+    about lifecycles — honors the tracker's keep-warm/pre-warm knobs;
+    explicit config values still win."""
+    recon = Reconfigurator(num_gpus=0, max_gpus=4)
+    recon.attach_modelstate(make_tracker(keep_warm_pods=2,
+                                         prewarm_lead_s=7.0))
+    adopted = HybridAutoScaler(recon)
+    assert adopted.cfg.keep_warm_pods == 2
+    assert adopted.cfg.prewarm_lead_s == 7.0
+    explicit = HybridAutoScaler(recon, cfg=AutoScalerConfig(
+        keep_warm_pods=1))
+    assert explicit.cfg.keep_warm_pods == 1      # explicit beats adopted
+    assert explicit.cfg.prewarm_lead_s == 7.0    # unset still adopted
+    # no tracker: defaults untouched
+    legacy = HybridAutoScaler(Reconfigurator(num_gpus=0, max_gpus=4))
+    assert legacy.cfg.keep_warm_pods == 0
+    assert legacy.cfg.prewarm_lead_s == 0.0
+
+
+def test_placement_prefers_weight_affine_chip_with_room():
+    """Used-chip selection ranks weight affinity only among chips that
+    can actually host a pod: a full chip holding the weights must not
+    dead-end the used-GPU path into a fresh-chip provision."""
+    recon = Reconfigurator(num_gpus=0, max_gpus=8)
+    recon.attach_modelstate(make_tracker())
+    scaler = HybridAutoScaler(recon)
+    # chip A: full (8 slices, quota 1.0) and weight-affine
+    a = PodAlloc(fn_id=SPEC.fn_id, sm=8, quota=1.0, batch=8)
+    recon.place_pod(a, None, now=0.0, cold_start_s=2.5, spec=SPEC)
+    # chip B: a different function's half-empty chip, no affinity
+    b = PodAlloc(fn_id="fn-other", sm=4, quota=0.5, batch=8)
+    recon.place_pod(b, None, now=0.0, cold_start_s=0.0)
+    scaler._ensure_capacity_model(SPEC)
+    n_gpus = len(recon.gpus)
+    delta, acts = scaler._horizontal_up_used(5.0, SPEC, 1.0)
+    assert acts, "used-GPU path dead-ended despite a chip with room"
+    assert len(recon.gpus) == n_gpus   # no fresh chip was provisioned
+    host = recon.gpu_of_pod(acts[0].pod_id)
+    assert host is not None and host.uuid != recon.gpu_of_pod(a.pod_id).uuid
+
+
+# --------------------------------------------------- CostMeter deprecation
+def test_gpu_price_deprecation_warns_exactly_once():
+    """The deprecated module constant warns on first access only (a hot
+    loop reading it must not flood the warning stream)."""
+    from repro.core import cost as cost_mod
+    cost_mod._reset_deprecation_warnings()
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        v1 = cost_mod.GPU_PRICE_PER_HOUR
+        v2 = cost_mod.GPU_PRICE_PER_HOUR
+        v3 = cost_mod.GPU_PRICE_PER_HOUR
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1
+    assert v1 == v2 == v3 == DEFAULT_GPU_TYPE.price_per_hour
+
+
+def test_deprecated_and_new_accounting_agree_on_reference_trace():
+    """On an all-reference fleet the legacy flat-price accounting
+    (gpu_seconds x GPU_PRICE_PER_HOUR) must equal the per-type meter."""
+    from repro.core import cost as cost_mod
+    cost_mod._reset_deprecation_warnings()
+    out = get_scenario("steady_poisson").run(policy="has", seed=3,
+                                             duration_s=30.0)
+    m = out.metrics
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        price = cost_mod.GPU_PRICE_PER_HOUR
+    assert m.cost_usd == pytest.approx(m.gpu_seconds * price / 3600.0,
+                                       rel=1e-12)
+    assert m.cost_usd > 0

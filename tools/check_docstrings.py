@@ -26,6 +26,7 @@ from typing import List
 DEFAULT_SCOPE = (
     "src/repro/core/capacity.py",
     "src/repro/core/events.py",
+    "src/repro/core/modelstate.py",
     "src/repro/workloads/scenarios.py",
 )
 MIN_DOC_LEN = 10   # a docstring shorter than this is a placeholder
