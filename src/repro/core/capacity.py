@@ -35,6 +35,14 @@ Off-lattice quotas (vertical scaling accumulates ``quota + n*step``
 float sums that are not bitwise lattice points) fall back to the exact
 scalar path and are memoized, so correctness never depends on grid
 snapping.
+
+The sim-to-silicon loop: passing ``calibration=`` (a
+``repro.profiling.CalibrationTable`` built by
+``benchmarks/profile_stack.py`` from the REAL jitted serving path)
+overlays measured latencies onto every lattice point the table covers,
+interpolating inside its measured hull and falling back to the
+analytic physics off-grid. The default (no calibration) keeps every
+golden trace byte-identical.
 """
 from __future__ import annotations
 
@@ -63,7 +71,8 @@ class CapacityTable:
 
     def __init__(self, predictor: Optional[Callable] = None,
                  quota_step: float = 0.1,
-                 window_ms: float = DEFAULT_WINDOW_MS):
+                 window_ms: float = DEFAULT_WINDOW_MS,
+                 calibration=None):
         """Args:
             predictor: optional latency model ``(spec, b, sm, q[, gpu])
                 -> seconds``; None uses the roofline oracle. Objects
@@ -72,10 +81,18 @@ class CapacityTable:
             quota_step: grid pitch of the quota axis (control-plane
                 loops enumerate ``qi * quota_step``).
             window_ms: time-token window the latencies are quoted at.
+            calibration: optional ``repro.profiling.CalibrationTable``
+                of MEASURED latencies (the sim-to-silicon loop):
+                lattice points and scalar lookups it covers — exactly
+                or by interpolation inside its measured hull — resolve
+                to measured seconds, everything else falls back to the
+                predictor/oracle. Default None: fully analytic, every
+                golden trace byte-identical.
         """
         self.predictor = predictor
         self.quota_step = quota_step
         self.window_ms = window_ms
+        self.calibration = calibration
         self.sms = np.arange(1, TOTAL_SLICES + 1)  # reference device grid
         self.quotas = perf_model.quota_grid(quota_step)
         self._sms_by_type: Dict[GPUType, np.ndarray] = {
@@ -123,8 +140,23 @@ class CapacityTable:
                     [[pred(spec, batch, int(sm), float(q))
                       for q in self.quotas] for sm in sms],
                     dtype=np.float64)
+            if self.calibration is not None:
+                tab = self._overlay_calibration(tab, spec, batch, gpu)
             self._lattices[key] = tab
         return tab
+
+    def _overlay_calibration(self, tab: np.ndarray, spec: FnSpec,
+                             batch: int, gpu: GPUType) -> np.ndarray:
+        """Replace lattice points the calibration table covers with
+        measured seconds; analytic values survive everywhere else."""
+        out = tab.copy()
+        for si, sm in enumerate(self.sms_for(gpu)):
+            for qi, q in enumerate(self.quotas):
+                v = self.calibration.latency(spec, batch, int(sm),
+                                             float(q), gpu=gpu)
+                if v is not None:
+                    out[si, qi] = v
+        return out
 
     # ---- predictor protocol ------------------------------------------------
     def _scalar_lat(self, spec: FnSpec, b: int, sm: int, q: float,
@@ -133,6 +165,11 @@ class CapacityTable:
         key = (gpu, spec, b, sm, q)
         v = self._scalar.get(key)
         if v is None:
+            if self.calibration is not None:
+                v = self.calibration.latency(spec, b, sm, q, gpu=gpu)
+                if v is not None:
+                    self._scalar[key] = v
+                    return v
             if self.predictor is None:
                 v = perf_model.latency(spec, b, sm, q,
                                        window_ms=self.window_ms, gpu=gpu)

@@ -77,14 +77,20 @@ def generate(corpus: Optional[List[ArchConfig]] = None,
              batches=BATCHES, sms=SMS, quotas=QUOTAS,
              samples_per_graph: int = 24, seed: int = 0,
              with_runtime: bool = True, verbose: bool = False,
-             gpu_types=(DEFAULT_GPU_TYPE,)) -> Dataset:
+             gpu_types=(DEFAULT_GPU_TYPE,), calibration=None) -> Dataset:
     """Sample (arch, batch) graphs x random (sm, quota) configs.
 
     ``gpu_types`` widens the corpus across device classes: each sampled
     config is measured (features AND label) on one of the given types,
     so a single model learns the cross-device latency surface via the
     device-descriptor features. The default single-reference tuple
-    reproduces the legacy dataset exactly."""
+    reproduces the legacy dataset exactly.
+
+    ``calibration`` (a ``repro.profiling.CalibrationTable``) replaces
+    the oracle label with the MEASURED latency for every sampled config
+    the table covers — the paper's setting, where RaPP trains on models
+    profiled on hardware. Configs the table misses keep the noisy
+    oracle label, so a partial profile still yields a full dataset."""
     rng = np.random.default_rng(seed)
     corpus = corpus or build_corpus()
     gpu_types = [get_gpu_type(t) for t in gpu_types]
@@ -111,8 +117,13 @@ def generate(corpus: Optional[List[ArchConfig]] = None,
                     sm, q = combos[ci]
                     t = F.tensorize(graph, spec, b, sm, q, rng,
                                     with_runtime=with_runtime, gpu=gpu)
-                    label = perf_model.latency(spec, b, sm, q, rng=rng,
-                                               gpu=gpu)
+                    label = None
+                    if calibration is not None:
+                        label = calibration.latency(spec, b, sm, q,
+                                                    gpu=gpu)
+                    if label is None:
+                        label = perf_model.latency(spec, b, sm, q,
+                                                   rng=rng, gpu=gpu)
                     for k in rows:
                         rows[k].append(t[k])
                     labels.append(np.log1p(label * 1e3))  # log(ms)

@@ -1,0 +1,23 @@
+"""Measured-profile calibration: the sim-to-silicon loop.
+
+Everything the simulator reports is derived from the analytic roofline
+in ``core/perf_model.py``. This package closes the loop against the
+repo's REAL serving stack: ``harness.py`` times the actual jitted
+prefill/decode dispatch path of ``serving.PodEngine`` (and, optionally,
+the individual Pallas kernels against their ``kernels/ref.py`` oracles)
+across a deterministic (arch, batch, sm, quota, GPU type) grid, and
+``table.py`` turns the emitted calibration table into a latency source
+that ``core.capacity.CapacityTable`` and the RaPP dataset builder can
+consume in place of the synthetic roofline.
+
+CLI entry point: ``python -m benchmarks.profile_stack``.
+"""
+from repro.profiling.harness import (SCHEMA, GridSpec, ProfilePoint,
+                                     build_grid, check_report,
+                                     error_summary, profile_kernels,
+                                     run_profile, windowed_wall)
+from repro.profiling.table import CalibrationTable
+
+__all__ = ["SCHEMA", "GridSpec", "ProfilePoint", "build_grid",
+           "check_report", "error_summary", "profile_kernels",
+           "run_profile", "windowed_wall", "CalibrationTable"]

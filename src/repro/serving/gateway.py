@@ -6,6 +6,7 @@ from __future__ import annotations
 
 from typing import Dict, List
 
+from repro.configs.gpus import DEFAULT_GPU_TYPE
 from repro.core.perf_model import FnSpec, throughput
 from repro.serving.batcher import InferenceRequest
 from repro.serving.engine import PodEngine
@@ -19,16 +20,20 @@ class Gateway:
         self.engines.setdefault(fn_id, []).append(engine)
 
     def deregister(self, fn_id: str, pod_id: str) -> None:
-        self.engines[fn_id] = [e for e in self.engines.get(fn_id, [])
+        if fn_id not in self.engines:
+            return
+        self.engines[fn_id] = [e for e in self.engines[fn_id]
                                if e.pod.pod_id != pod_id]
 
     def route(self, fn_id: str, req: InferenceRequest) -> PodEngine:
         pods = self.engines.get(fn_id, [])
         if not pods:
             raise KeyError(f"no pods for {fn_id}")
-        # least normalized backlog: queue / predicted throughput
+        # least normalized backlog: queue / predicted throughput on the
+        # pod's OWN device — on a mixed fleet, capability differs per chip
         def score(e: PodEngine) -> float:
-            cap = throughput(e.spec, e.pod.batch, e.pod.sm, e.pod.quota)
+            cap = throughput(e.spec, e.pod.batch, e.pod.sm, e.pod.quota,
+                             gpu=e.pod.gpu_type or DEFAULT_GPU_TYPE)
             return len(e.batcher.queue) / max(cap, 1e-9)
         eng = min(pods, key=score)
         eng.submit(req)

@@ -83,6 +83,32 @@ def test_cold_start_lifecycle_doc_drift():
             f"weight tier {tier.name} not described in the cold-start doc")
 
 
+def test_calibration_doc_drift():
+    """architecture.md's "Calibrating the physics" section must exist
+    and name the load-bearing pieces of the sim-to-silicon loop: the
+    CLI entry point, the report schema, the committed CPU reference the
+    CI gate compares against, and both consumers of a table."""
+    from repro.profiling import SCHEMA
+    REF_PATH = "benchmarks/ref_profile_cpu.json"
+
+    text = ARCHITECTURE_MD.read_text()
+    assert "## Calibrating the physics" in text
+    section = text.split("## Calibrating the physics", 1)[1]
+    section = section.split("\n## ", 1)[0]
+    for needle in ("benchmarks.profile_stack", SCHEMA, REF_PATH,
+                   "CalibrationTable", "calibration=...", "--update-ref"):
+        assert needle in section, (
+            f"{needle!r} missing from the calibration section")
+    assert (REPO / REF_PATH).exists(), (
+        f"{REF_PATH} (the CI gate's committed reference) is missing; "
+        f"regenerate with: python -m benchmarks.profile_stack --smoke "
+        f"--update-ref")
+    readme = (REPO / "README.md").read_text()
+    assert "calibrating-the-physics" in readme.lower() or \
+        "Calibrating the physics" in readme, (
+        "README must point at the calibration section")
+
+
 def test_no_broken_intra_repo_links():
     failures = check_links.run()
     assert not failures, "broken links:\n  " + "\n  ".join(failures)

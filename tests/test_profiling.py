@@ -1,0 +1,245 @@
+"""Tests for the measured-profile calibration loop: grid enumeration,
+the analytic twins, the CI gate, the calibration table lookup, and its
+consumers (``CapacityTable(calibration=...)``, the RaPP dataset)."""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.configs.gpus import get_gpu_type
+from repro.core import perf_model
+from repro.core.capacity import CapacityTable
+from repro.core.perf_model import FnSpec
+from repro.core.rapp import dataset as rapp_dataset
+from repro.profiling import (SCHEMA, CalibrationTable, GridSpec,
+                             build_grid, check_report, error_summary,
+                             run_profile, windowed_wall)
+from repro.profiling.harness import prompt_len
+
+
+def _pt(arch, gpu, batch, sm, quota, phase, measured, analytic=1e-3):
+    return {"arch": arch, "gpu": gpu, "batch": batch, "sm": sm,
+            "quota": quota, "phase": phase, "measured_s": measured,
+            "analytic_s": analytic,
+            "rel_err": abs(measured - analytic) / max(analytic, 1e-12)}
+
+
+def _report(points, seq=32, reduced_flag=True, grid=None, smoke=True):
+    grid = grid or GridSpec()
+    return {"schema": SCHEMA, "smoke": smoke,
+            "meta": {"backend": "cpu", "device_kind": "cpu",
+                     "jax_version": "0", "reduced": reduced_flag,
+                     "seq": seq, "window_ms": 20.0, "warmup": 1,
+                     "iters": 3, "grid": grid.grid_meta()},
+            "points": points, "error": error_summary(points)}
+
+
+# ---------------------------------------------------------------------------
+# grid + analytic twins
+# ---------------------------------------------------------------------------
+
+def test_build_grid_deterministic_order_and_device_width():
+    spec = GridSpec(archs=("olmo-1b",), gpu_types=("t4",), batches=(2, 1),
+                    sms=(2, 8), quotas=(1.0,))
+    pts = build_grid(spec)
+    assert pts == build_grid(spec)             # deterministic
+    # sm=8 exceeds the t4's 4 slices and is skipped; tuple order is
+    # preserved literally (batches stay (2, 1))
+    assert [(p.batch, p.sm, p.phase) for p in pts] == [
+        (2, 2, "prefill"), (2, 2, "decode"),
+        (1, 2, "prefill"), (1, 2, "decode")]
+    assert all(p.gpu == "t4" and p.quota == 1.0 for p in pts)
+
+
+def test_build_grid_rejects_unknown_arch():
+    with pytest.raises(KeyError):
+        build_grid(GridSpec(archs=("no-such-arch",)))
+
+
+def test_windowed_wall_matches_latency_quantization():
+    spec = FnSpec(ARCHS["olmo-1b"])
+    for batch, sm, q in ((2, 4, 0.3), (1, 8, 0.7), (4, 2, 1.0)):
+        t = perf_model.exec_time(spec, batch, sm)
+        assert windowed_wall(t, q, 0.1) == perf_model.latency(
+            spec, batch, sm, q)
+    assert windowed_wall(0.42, 1.0, 0.1) == 0.42   # full quota: no stall
+
+
+def test_error_summary_percentiles():
+    pts = [_pt("a", "v5e", 1, 2, 1.0, "prefill", m, analytic=1.0)
+           for m in (1.0, 2.0, 3.0, 4.0)]          # rel errs 0,1,2,3
+    s = error_summary(pts)
+    assert s["overall"]["p50"] == pytest.approx(1.5)
+    assert s["overall"]["n"] == 4
+    assert set(s["per_arch"]) == {"a"}
+
+
+# ---------------------------------------------------------------------------
+# the CI gate
+# ---------------------------------------------------------------------------
+
+def _base_reports():
+    vals = iter(range(1, 9))
+    pts = [_pt("olmo-1b", "v5e", 1, sm, q, phase, next(vals) * 1e-3)
+           for sm in (2, 4) for q in (0.5, 1.0)
+           for phase in ("prefill", "decode")]
+    ref = _report(pts)
+    return copy.deepcopy(ref), ref
+
+
+def test_check_report_identical_passes():
+    new, ref = _base_reports()
+    assert check_report(new, ref) == []
+
+
+def test_check_report_uniform_machine_speed_is_cancelled():
+    new, ref = _base_reports()
+    for p in new["points"]:
+        p["measured_s"] *= 7.0                 # a 7x slower machine
+    assert check_report(new, ref) == []
+
+
+@pytest.mark.parametrize("mutate,expect", [
+    (lambda r: r.update(schema="other/v0"), "schema mismatch"),
+    (lambda r: r["meta"].update(seq=64), "meta.seq mismatch"),
+    (lambda r: r["points"].reverse(), "point set/order drifted"),
+    (lambda r: r["points"][2].update(analytic_s=9.9), "analytic drift"),
+    (lambda r: r["points"][3].update(measured_s=4e3),
+     "measured-shape drift"),
+])
+def test_check_report_failures(mutate, expect):
+    new, ref = _base_reports()
+    mutate(new)
+    failures = check_report(new, ref)
+    assert any(expect in f for f in failures), failures
+
+
+# ---------------------------------------------------------------------------
+# CalibrationTable
+# ---------------------------------------------------------------------------
+
+def _surface_report():
+    """Measured prefill surface: sm in {2,4} x quota in {0.5,1.0}."""
+    vals = {(2, 0.5): 0.01, (2, 1.0): 0.02, (4, 0.5): 0.03,
+            (4, 1.0): 0.04}
+    pts = [_pt("olmo-1b", "v5e", 1, sm, q, "prefill", m)
+           for (sm, q), m in sorted(vals.items())]
+    # decode points must not leak into the latency surface
+    pts.append(_pt("olmo-1b", "v5e", 1, 2, 0.5, "decode", 999.0))
+    return _report(pts)
+
+
+def test_calibration_table_exact_and_interpolated_lookup():
+    tab = CalibrationTable(_surface_report())
+    assert len(tab) == 1
+    assert tab.latency("olmo-1b", 1, 2, 0.5) == pytest.approx(0.01)
+    assert tab.latency("olmo-1b", 1, 4, 1.0) == pytest.approx(0.04)
+    # bilinear interior points
+    assert tab.latency("olmo-1b", 1, 3, 0.5) == pytest.approx(0.02)
+    assert tab.latency("olmo-1b", 1, 2, 0.75) == pytest.approx(0.015)
+    assert tab.latency("olmo-1b", 1, 3, 0.75) == pytest.approx(0.025)
+    # off-hull / unmeasured keys -> None (caller falls back to analytic)
+    assert tab.latency("olmo-1b", 1, 1, 0.5) is None
+    assert tab.latency("olmo-1b", 1, 5, 0.5) is None
+    assert tab.latency("olmo-1b", 1, 2, 0.4) is None
+    assert tab.latency("olmo-1b", 2, 2, 0.5) is None
+    assert tab.latency("olmo-1b", 1, 2, 0.5,
+                       gpu=get_gpu_type("t4")) is None
+    assert tab.latency("qwen2.5-3b", 1, 2, 0.5) is None
+
+
+def test_calibration_table_spec_guard_and_schema():
+    tab = CalibrationTable(_surface_report())
+    cfg = reduced(ARCHS["olmo-1b"])
+    good = FnSpec(cfg, seq=prompt_len(cfg, 32))
+    assert tab.latency(good, 1, 2, 0.5) == pytest.approx(0.01)
+    # the full (non-reduced) arch shares the name but not the physics
+    assert tab.latency(FnSpec(ARCHS["olmo-1b"]), 1, 2, 0.5) is None
+    # a different profiled seq is a different measured quantity
+    assert tab.latency(FnSpec(cfg, seq=24), 1, 2, 0.5) is None
+    with pytest.raises(ValueError):
+        CalibrationTable({"schema": "bogus", "points": []})
+
+
+def test_calibration_table_refuses_ragged_grid():
+    pts = [_pt("olmo-1b", "v5e", 1, sm, q, "prefill", 0.01)
+           for sm, q in ((2, 0.5), (2, 1.0), (4, 0.5))]  # missing corner
+    tab = CalibrationTable(_report(pts))
+    assert tab.latency("olmo-1b", 1, 2, 0.5) == pytest.approx(0.01)
+    assert tab.latency("olmo-1b", 1, 3, 0.75) is None
+
+
+# ---------------------------------------------------------------------------
+# consumers
+# ---------------------------------------------------------------------------
+
+def test_capacity_table_calibration_overlay():
+    cfg = reduced(ARCHS["olmo-1b"])
+    spec = FnSpec(cfg, seq=prompt_len(cfg, 32))
+    cal = CalibrationTable(_surface_report())
+    cap = CapacityTable(calibration=cal)
+    base = CapacityTable()
+    lat_cal = cap.lattice(spec, 1)
+    lat_base = base.lattice(spec, 1)
+    # measured hits on the lattice (rows sm-1, cols quota/0.1 - 1)
+    assert lat_cal[1, 4] == pytest.approx(0.01)   # sm=2, q=0.5
+    assert lat_cal[3, 9] == pytest.approx(0.04)   # sm=4, q=1.0
+    assert lat_cal[2, 4] == pytest.approx(0.02)   # sm=3: interpolated
+    assert lat_cal[1, 6] == pytest.approx(
+        0.01 + 0.01 * (0.7 - 0.5) / 0.5)          # q=0.7: interpolated
+    # everything off the measured hull keeps the analytic physics
+    np.testing.assert_array_equal(lat_cal[0], lat_base[0])   # sm=1 row
+    np.testing.assert_array_equal(lat_cal[:, :4], lat_base[:, :4])
+    np.testing.assert_array_equal(lat_cal[4:], lat_base[4:])
+    # scalar (off-grid quota) path: measured inside the hull, analytic
+    # outside it
+    assert cap.lat(spec, 1, 3, 0.75) == pytest.approx(0.025)
+    assert cap.lat(spec, 1, 6, 0.55) == base.lat(spec, 1, 6, 0.55)
+    # default (no calibration) stays bitwise the oracle lattice
+    np.testing.assert_array_equal(
+        lat_base, perf_model.latency_lattice(spec, 1, base.sms,
+                                             base.quotas, base.window_ms))
+
+
+def test_rapp_dataset_samples_measured_labels():
+    cfg = ARCHS["olmo-1b"]
+    # profiled at seq=256 (prompt_len 128) on the FULL config: exactly
+    # the FnSpec the dataset builder queries
+    pts = [_pt("olmo-1b", "v5e", 1, sm, q, "prefill", 0.002)
+           for sm in (2, 4) for q in (0.5, 1.0)]
+    cal = CalibrationTable(_report(pts, seq=256, reduced_flag=False))
+    assert cal.latency(FnSpec(cfg), 1, 2, 0.5) == pytest.approx(0.002)
+    ds = rapp_dataset.generate(corpus=[cfg], batches=(1,), sms=(2,),
+                               quotas=(0.5,), samples_per_graph=1,
+                               calibration=cal)
+    assert len(ds) == 1
+    assert ds.labels_logms[0] == pytest.approx(np.log1p(0.002 * 1e3))
+    # uncovered configs keep the (noisy) oracle label
+    ds_miss = rapp_dataset.generate(corpus=[cfg], batches=(1,), sms=(2,),
+                                    quotas=(0.4,), samples_per_graph=1,
+                                    calibration=cal)
+    assert ds_miss.labels_logms[0] != pytest.approx(np.log1p(2.0))
+
+
+# ---------------------------------------------------------------------------
+# one real end-to-end point (reduced config, CPU)
+# ---------------------------------------------------------------------------
+
+def test_run_profile_single_point_end_to_end():
+    grid = GridSpec(archs=("olmo-1b",), gpu_types=("v5e",), batches=(1,),
+                    sms=(4,), quotas=(1.0,), seq=32, warmup=1, iters=1)
+    report = run_profile(grid, smoke=True)
+    assert report["schema"] == SCHEMA
+    assert [p["phase"] for p in report["points"]] == ["prefill", "decode"]
+    assert all(p["measured_s"] > 0 for p in report["points"])
+    cfg = reduced(ARCHS["olmo-1b"])
+    spec = FnSpec(cfg, seq=prompt_len(cfg, 32))
+    assert report["points"][0]["analytic_s"] == perf_model.latency(
+        spec, 1, 4, 1.0, window_ms=20.0)
+    assert report["error"]["overall"]["n"] == 2
+    # a fresh report round-trips through its own CI gate and the table
+    assert check_report(copy.deepcopy(report), report) == []
+    tab = CalibrationTable(report)
+    assert tab.latency(spec, 1, 4, 1.0) == pytest.approx(
+        report["points"][0]["measured_s"])
