@@ -182,6 +182,49 @@ def bench_het(spec: FnSpec, iters: int) -> list:
     return out
 
 
+def bench_reclaim(spec: FnSpec, iters: int) -> dict:
+    """Reclaim-reaction latency on a hybrid on-demand/spot fleet: one
+    full notice -> react -> kill -> recover cycle, i.e. the control
+    plane's end-to-end cost of losing a spot chip — `mark_doomed`, the
+    router's replacement scale tick (doomed pods contribute zero
+    capacity, new placements avoid the doomed chip), `remove_gpu`, and
+    the recovery tick that restores steady state."""
+    from repro.configs.gpus import GPUMarket, spot
+
+    market = GPUMarket(price_multiplier=0.3, reclaim_rate_per_hour=6.0,
+                       grace_period_s=5.0)
+    fleet = (("v5e", 8), (spot("v5e", market), 24))
+    recon = Reconfigurator(num_gpus=0, fleet=fleet)
+    scaler = HybridAutoScaler(recon, cfg=AutoScalerConfig(cooldown_s=0.0))
+    state = {"now": 0.0}
+    for _ in range(6):   # converge a standing hybrid fleet
+        state["now"] += 1.0
+        scaler.scale(state["now"], spec, 400.0)
+
+    def one_cycle():
+        state["now"] += 1.0
+        now = state["now"]
+        victim = next((g for g in recon.used_gpus()
+                       if g.gpu_type.market is not None and not g.doomed),
+                      None)
+        if victim is not None:
+            recon.mark_doomed(victim.uuid, kill_at=now + 5.0, now=now)
+            scaler.scale(now, spec, 400.0)        # replacement decision
+            recon.remove_gpu(victim.uuid, now=now)
+        state["now"] += 1.0
+        scaler.scale(state["now"], spec, 400.0)   # recovery tick
+
+    one_cycle()
+    r = _timed(one_cycle, iters)
+    return {"name": "reclaim_react_hybrid",
+            "fleet": [f"{get_type_name(t)}:{c}" for t, c in fleet], **r}
+
+
+def get_type_name(t) -> str:
+    """Fleet-entry display name (str entries or GPUType instances)."""
+    return getattr(t, "name", t)
+
+
 def run(smoke: bool = False, het: bool = False) -> dict:
     spec = FnSpec(ARCHS[ARCH])
     results = []
@@ -193,6 +236,7 @@ def run(smoke: bool = False, het: bool = False) -> dict:
                                    iters=240 if smoke else 600))
     if het:
         results += bench_het(spec, iters=5 if smoke else 25)
+        results.append(bench_reclaim(spec, iters=60 if smoke else 300))
     return {"schema": "bench_control_plane/v1", "smoke": smoke,
             "arch": ARCH, "results": results}
 
@@ -239,7 +283,7 @@ def check(report: dict, ref_path: str, factor: float,
         if base is None or r["name"] == CALIBRATION_ENTRY:
             continue
         mismatch = [k for k in ("batches", "fleet_pods", "gpu_types",
-                                "pods")
+                                "pods", "fleet")
                     if base.get(k) != r.get(k)]
         if mismatch:
             print(f"FAIL  {r['name']:<24} parameter mismatch vs reference:"

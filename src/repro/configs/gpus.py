@@ -36,7 +36,116 @@ overflow (the ``spot_t4_burst`` scenario exercises exactly this).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+import math
+from typing import Dict, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class GPUMarket:
+    """Spot-market descriptor of a device class: the discounted price
+    and the reclaim process that comes with it.
+
+    A ``GPUType`` carrying a market is *spot capacity*: chips of that
+    type can be reclaimed by the provider at any time. Reclaims follow
+    a per-chip Poisson process with a piecewise-constant hazard — a calm
+    base rate (``reclaim_rate_per_hour``) optionally multiplied by
+    ``storm_multiplier`` inside deterministic periodic *storm windows*
+    (``storm_start_s + k * storm_period_s`` for ``storm_duration_s``
+    seconds). Because the windows are shared by every chip of the type,
+    storms model *correlated* reclaims — the provider draining a whole
+    capacity pool at once (e.g. the evening on-demand peak).
+
+    A reclaim is delivered as a ``RECLAIM_NOTICE`` event opening a
+    ``grace_period_s`` drain window, followed by ``RECLAIM_KILL``
+    (see ``core/events.py``).
+
+    Fields:
+        price_multiplier: spot price as a fraction of the on-demand
+            ``price_per_hour`` (``0 <`` x ``<= 1``).
+        reclaim_rate_per_hour: base per-chip reclaim hazard (0 = never
+            reclaimed; the market is then a pure discount).
+        grace_period_s: notice-to-kill drain window.
+        storm_multiplier: hazard multiplier inside storm windows
+            (>= 1; 1 = no storms).
+        storm_period_s: storm window period (0 = no storms).
+        storm_duration_s: length of each storm window.
+        storm_start_s: start of the first storm window.
+    """
+    price_multiplier: float = 0.35
+    reclaim_rate_per_hour: float = 0.0
+    grace_period_s: float = 120.0
+    storm_multiplier: float = 1.0
+    storm_period_s: float = 0.0
+    storm_duration_s: float = 0.0
+    storm_start_s: float = 0.0
+
+    def __post_init__(self):
+        if not (0.0 < self.price_multiplier <= 1.0):
+            raise ValueError(f"price_multiplier={self.price_multiplier} "
+                             "must be in (0, 1]")
+        if self.reclaim_rate_per_hour < 0 or self.grace_period_s < 0:
+            raise ValueError("reclaim_rate_per_hour and grace_period_s "
+                             "must be >= 0")
+        if self.storm_multiplier < 1.0:
+            raise ValueError(f"storm_multiplier={self.storm_multiplier} "
+                             "must be >= 1")
+        if min(self.storm_period_s, self.storm_duration_s,
+               self.storm_start_s) < 0:
+            raise ValueError("storm timing fields must be >= 0")
+        if 0 < self.storm_period_s <= self.storm_duration_s:
+            raise ValueError("storm_duration_s must be shorter than "
+                             "storm_period_s")
+
+    @property
+    def has_storms(self) -> bool:
+        """Whether this market defines correlated storm windows."""
+        return (self.storm_period_s > 0 and self.storm_duration_s > 0
+                and self.storm_multiplier > 1.0)
+
+    def rate_at(self, t: float) -> float:
+        """Per-second reclaim hazard at absolute sim time ``t``."""
+        base = self.reclaim_rate_per_hour / 3600.0
+        if self.has_storms and t >= self.storm_start_s:
+            phase = (t - self.storm_start_s) % self.storm_period_s
+            if phase < self.storm_duration_s:
+                return base * self.storm_multiplier
+        return base
+
+    def _segment_end(self, t: float) -> float:
+        """End of the constant-hazard segment containing ``t``."""
+        if not self.has_storms:
+            return math.inf
+        if t < self.storm_start_s:
+            return self.storm_start_s
+        phase = (t - self.storm_start_s) % self.storm_period_s
+        if phase < self.storm_duration_s:
+            return t + (self.storm_duration_s - phase)
+        return t + (self.storm_period_s - phase)
+
+    def sample_reclaim(self, after: float, rng) -> float:
+        """Draw the next reclaim-notice time for one chip alive at
+        ``after`` from the piecewise-constant hazard (inverse-CDF in
+        integrated-hazard space: one Exp(1) draw walked through the
+        calm/storm segments).
+
+        Args:
+            after: absolute sim time the chip came under observation.
+            rng: a ``numpy.random.Generator`` (the engine's dedicated
+                reclaim stream — never the service-noise stream).
+        Returns: the absolute notice time, or ``inf`` when the market
+        never reclaims.
+        """
+        if self.reclaim_rate_per_hour <= 0:
+            return math.inf
+        target = float(rng.exponential(1.0))   # integrated hazard to burn
+        t = after
+        while True:
+            rate = self.rate_at(t)   # > 0: base hazard is positive here
+            end = self._segment_end(t)
+            if t + target / rate <= end:
+                return t + target / rate
+            target -= rate * (end - t)
+            t = end
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +164,14 @@ class GPUType:
             (the PCIe/interconnect generation of the device class) --
             the model-state lifecycle engine (``core/modelstate.py``)
             derives warm-start weight-load times from it.
+        market: optional ``GPUMarket`` spot descriptor. None (every
+            registered preset) means reliable on-demand capacity; a
+            market marks the type as reclaimable spot capacity (its
+            ``price_per_hour`` is then the already-discounted spot
+            price — see ``spot()``). Spot variants are distinct types:
+            they key their own capacity lattices, cost pools, and fleet
+            pools, so the on-demand flavor of the same silicon is never
+            conflated with it.
 
     Invariants: all numeric fields are positive; instances are frozen
     (hashable) so they can key capacity-table lattices and memoized
@@ -66,6 +183,7 @@ class GPUType:
     hbm_bw: float
     price_per_hour: float
     host_to_hbm_bw: float = 25e9   # PCIe-gen4-class default
+    market: Optional[GPUMarket] = None   # None = on-demand capacity
 
     def __post_init__(self):
         if self.sm_total < 1:
@@ -129,6 +247,27 @@ def get_gpu_type(name) -> GPUType:
     except KeyError:
         raise KeyError(f"unknown GPU type {name!r}; available: "
                        f"{sorted(GPU_TYPES)}") from None
+
+
+def spot(base, market: GPUMarket) -> GPUType:
+    """Derive the spot variant of a device class.
+
+    Same silicon (slices, FLOPs, bandwidth), discounted price, and the
+    market's reclaim process attached. The variant is named
+    ``"<base>-spot"`` and is NOT added to ``GPU_TYPES`` — fleets carry
+    the instance directly (``get_gpu_type`` passes instances through).
+
+    Args:
+        base: a registered type name or ``GPUType``.
+        market: the ``GPUMarket`` describing discount and reclaims.
+    Returns: a new frozen ``GPUType`` with ``market`` attached and
+    ``price_per_hour`` scaled by ``market.price_multiplier``.
+    """
+    base = get_gpu_type(base)
+    return dataclasses.replace(
+        base, name=f"{base.name}-spot",
+        price_per_hour=base.price_per_hour * market.price_multiplier,
+        market=market)
 
 
 def fleet_from_names(fleet) -> Tuple[Tuple[GPUType, int], ...]:

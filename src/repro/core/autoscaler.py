@@ -23,6 +23,24 @@ search (`CapacityTable.best_config_over`) plus first-fit-decreasing
 fragment packing (`core/scheduler.FleetPlacer`). On a single-type fleet
 every one of those paths degenerates to the legacy behavior — the
 homogeneous golden traces are reproduced bitwise.
+
+Spot fleets (any ``GPUType`` carrying a ``GPUMarket``) additionally
+activate the hybrid cost/SLO router: an always-warm ON-DEMAND FLOOR
+(``spot_od_floor`` of predicted demand must be served by reliable
+capacity before any new pod may land on spot), a reclaim-pressure
+breaker (when more than ``reclaim_pressure_max`` reclaim notices landed
+within ``reclaim_pressure_window_s``, overflow shifts to on-demand
+until the storm passes), doomed-chip avoidance (chips inside a reclaim
+grace window are never placement targets and their pods contribute
+zero capacity — so reclaimed capacity is replaced within the grace
+window by the ordinary scale-up paths), and floor-guarded scale-down
+(on-demand pods above the floor are shed first — they are the expensive
+ones — but the floor itself is never breached, so a demand trough can
+not leave a spot-only rump that a reclaim storm would wipe out). When
+demand falls, ``_rebalance_to_spot`` migrates overflow back from
+on-demand to spot make-before-break: the spot replacement is placed
+first and the on-demand pod is only retired once the replacement is
+ready. All of it is inert — bitwise — on fleets without a market.
 """
 from __future__ import annotations
 
@@ -61,6 +79,10 @@ class AutoScalerConfig:
     # ModelStateTracker; see core/modelstate.py) ----
     keep_warm_pods: int = 0    # standby pods retained per fn on scale-down
     prewarm_lead_s: float = 0.0  # forecast horizon for weight pre-warming
+    # ---- hybrid spot router knobs (inert on market-free fleets) ----
+    spot_od_floor: float = 0.25       # demand fraction kept on on-demand
+    reclaim_pressure_window_s: float = 12.0   # pressure lookback window
+    reclaim_pressure_max: int = 2     # notices/window before spot is cut
 
 
 @dataclasses.dataclass
@@ -109,6 +131,12 @@ class HybridAutoScaler:
         # restores the known-good allocation instead of re-deriving a
         # borderline SLO-floor quota
         self._parked_quota: Dict[str, float] = {}
+        # hybrid spot router active iff the fleet declares a market
+        self._spot_fleet = any(t.market is not None
+                               for t, _ in getattr(recon, "fleet", ()))
+        # in-flight od->spot migrations: fn_id -> (od_pod_id, spot_pod_id);
+        # the od pod retires only once its spot replacement is ready
+        self._migrations: Dict[str, tuple] = {}
 
     def _tracker(self):
         """The cluster's active ModelStateTracker, or None (legacy)."""
@@ -127,9 +155,12 @@ class HybridAutoScaler:
     def _ensure_capacity_model(self, spec: FnSpec) -> None:
         model = self._cap_models.get(spec.fn_id)
         if model is None:
-            # keep-warm standby pods hold weights, not capacity
+            # keep-warm standby pods hold weights, not capacity; doomed
+            # pods are draining toward a reclaim kill — writing them off
+            # now is what makes the scaler replace them inside the
+            # grace window
             model = self._cap_models[spec.fn_id] = (
-                lambda p, _s=spec: 0.0 if p.standby else
+                lambda p, _s=spec: 0.0 if (p.standby or p.doomed) else
                 self.thpt(_s, p.batch, p.sm, p.quota, p.gpu_type))
         # no-op when already installed; re-registers (and recomputes
         # contributions) if another scaler on the same cluster took over
@@ -198,33 +229,145 @@ class HybridAutoScaler:
                 delta, acts = self._vertical_up(spec, pods, delta)
                 actions += acts
             if delta > 0:
-                delta, acts = self._horizontal_up_used(now, spec, delta)
+                delta, acts = self._horizontal_up_used(now, spec, delta, R)
                 actions += acts
             if delta > 0:
-                actions += self._horizontal_up_new(now, spec, delta)
+                actions += self._horizontal_up_new(now, spec, delta, R)
         elif (R < c_f * cfg.beta and c_f > cfg.r_min
               and now - self.last_scale_down.get(spec.fn_id, -1e18)
               >= cfg.cooldown_s):                    # ---- scale DOWN
             delta = c_f - max(R, cfg.r_min) / cfg.alpha
-            acts = self._scale_down(now, spec, pods, delta)
+            acts = self._scale_down(now, spec, pods, delta, R)
             if acts:
                 self.last_scale_down[spec.fn_id] = now
             actions += acts
             self.recon.release_empty_gpus()
+        if self._spot_fleet and now > 0.0:
+            # now > 0: prewarm drives scale() at t=0 to lay out the
+            # steady state — migrating it mid-deploy would churn pods
+            # before traffic even starts
+            actions += self._rebalance_to_spot(now, spec, R)
+        return actions
+
+    # ---- hybrid spot router ------------------------------------------------
+    def _od_capacity(self, spec: FnSpec, pods) -> float:
+        """Serving capacity on RELIABLE (market-free) devices — the
+        quantity the on-demand floor is measured against."""
+        return sum(self.pod_thpt(spec, p) for p in pods
+                   if not p.standby and not p.doomed
+                   and (p.gpu_type is None or p.gpu_type.market is None))
+
+    def _reclaim_pressure(self, now: float) -> int:
+        """Reclaim notices within the trailing pressure window."""
+        log = getattr(self.recon, "reclaim_log", ())
+        lo = now - self.cfg.reclaim_pressure_window_s
+        n = 0
+        for t in reversed(log):
+            if t < lo:
+                break
+            n += 1
+        return n
+
+    def _spot_allowed(self, now: float, spec: FnSpec, R: float) -> bool:
+        """Whether NEW capacity may land on spot right now: the
+        on-demand floor must already hold and recent reclaim pressure
+        must be below the breaker threshold."""
+        pods = self.recon.pods_of(spec.fn_id)
+        if self._od_capacity(spec, pods) < self.cfg.spot_od_floor * R - 1e-9:
+            return False
+        return self._reclaim_pressure(now) <= self.cfg.reclaim_pressure_max
+
+    def _route_types(self, types: List[GPUType],
+                     spot_ok: bool) -> List[GPUType]:
+        """Filter candidate fresh-chip types by the router decision —
+        never down to nothing (an all-spot fleet still serves)."""
+        if spot_ok:
+            return types
+        od = [t for t in types if t.market is None]
+        return od or types
+
+    def _rebalance_to_spot(self, now, spec, R) -> List[ScalingAction]:
+        """Shift on-demand overflow back onto spot once reclaim pressure
+        subsides: place one spot replacement sized like the largest
+        above-floor on-demand pod, and retire that pod only when the
+        replacement is ready (make-before-break: no capacity dip). One
+        migration in flight per function — the cold start self-throttles
+        the drain rate. This is the return direction of the router: the
+        storm response converts spot capacity to on-demand, and without
+        it the expensive bulge would persist under the scale-down
+        hysteresis (beta) long after the market calmed down."""
+        actions: List[ScalingAction] = []
+        pend = self._migrations.get(spec.fn_id)
+        pods = self.recon.pods_of(spec.fn_id)
+        by_id = {p.pod_id: p for p in pods}
+        if pend is not None:
+            od_pod = by_id.get(pend[0])
+            spot_pod = by_id.get(pend[1])
+            if (od_pod is None or spot_pod is None or spot_pod.doomed
+                    or od_pod.standby):
+                # handover lost its endpoints (scale-down took the od
+                # pod, or the replacement was itself reclaimed) — abort
+                self._migrations.pop(spec.fn_id, None)
+            elif spot_pod.ready_at <= now:
+                self.recon.remove_pod(od_pod.pod_id, now=now)
+                self.recon.release_empty_gpus()
+                self._migrations.pop(spec.fn_id, None)
+                actions.append(ScalingAction(
+                    spec.fn_id, od_pod.pod_id, "hdown",
+                    f"migrated to spot ({spot_pod.pod_id})"))
+            return actions
+        c_f = self.capacity(spec)
+        if (R > c_f * self.cfg.alpha            # scale-up owns this tick
+                or not self._spot_allowed(now, spec, R)):
+            return actions
+        od_cap = self._od_capacity(spec, pods)
+        floor = self.cfg.spot_od_floor * R
+        cands = [p for p in pods
+                 if not p.standby and not p.doomed
+                 and (p.gpu_type is None or p.gpu_type.market is None)
+                 and od_cap - self.pod_thpt(spec, p) >= floor - 1e-9]
+        if not cands:
+            return actions
+        victim = max(cands, key=lambda p: self.pod_thpt(spec, p))
+        need = max(self.pod_thpt(spec, victim), self.cfg.r_min)
+        spot_types = list(dict.fromkeys(
+            t for t, _ in self.recon.fleet if t.market is not None))
+        t, b, sm, q = self.table.best_config_over(
+            spec, need, spot_types, slo_multiplier=self.cfg.slo_multiplier)
+        pod = PodAlloc(fn_id=spec.fn_id, sm=sm, quota=q, batch=b)
+        host = self.placer.place_one(
+            spec, pod, now=now, cold_start_s=self.cfg.cold_start_s,
+            new_gpu_cold_start_s=self.cfg.new_gpu_cold_start_s,
+            allowed_types=spot_types)
+        if host is None:          # spot pool exhausted — nothing to do
+            return actions
+        self._migrations[spec.fn_id] = (victim.pod_id, pod.pod_id)
+        actions.append(ScalingAction(
+            spec.fn_id, pod.pod_id, "hup",
+            f"spot takeover of {victim.pod_id} (b={b} sm={sm} "
+            f"q={q:.2f} [{t.name}])"))
         return actions
 
     # ---- bootstrap -----------------------------------------------------------
-    def _placement_types(self) -> List[GPUType]:
+    def _placement_types(self, now: float = 0.0, spec: Optional[FnSpec] = None,
+                         R: float = 0.0) -> List[GPUType]:
         """Device types a fresh chip could come from, in fleet order —
         when every cap is reached, all fleet types (the config is still
-        computed; placement may then fail exactly as before)."""
+        computed; placement may then fail exactly as before). On a spot
+        fleet the hybrid router additionally filters reclaimable types
+        out while the on-demand floor is unmet or reclaim pressure is
+        high."""
         avail = self.recon.available_gpu_types()
-        return avail or [t for t, _ in self.recon.fleet]
+        types = avail or [t for t, _ in self.recon.fleet]
+        if self._spot_fleet and spec is not None:
+            types = self._route_types(types,
+                                      self._spot_allowed(now, spec, R))
+        return types
 
     def _bootstrap(self, now, spec, target_rps) -> List[ScalingAction]:
         self._ensure_capacity_model(spec)
         t, b, sm, q = self.table.best_config_over(
-            spec, target_rps, self._placement_types(),
+            spec, target_rps, self._placement_types(now, spec, target_rps),
             slo_multiplier=self.cfg.slo_multiplier)
         gpu = self._gpu_with_room(sm, q, t, fn_id=spec.fn_id, now=now)
         pod = PodAlloc(fn_id=spec.fn_id, sm=sm, quota=q, batch=b)
@@ -254,7 +397,7 @@ class HybridAutoScaler:
         function's weights rank first."""
         cands = [g for g in self.recon.used_gpus()
                  if (gpu_type is None or g.gpu_type == gpu_type)
-                 and g.can_place(sm, q)]
+                 and not g.doomed and g.can_place(sm, q)]
         if not cands:
             return None
         return min(cands,
@@ -273,7 +416,7 @@ class HybridAutoScaler:
         for pod in pods:
             if delta <= 0:
                 break
-            if not pod.standby:
+            if not pod.standby or pod.doomed:
                 continue
             gpu = self.recon.gpu_of_pod(pod.pod_id)
             if gpu is None:
@@ -311,8 +454,9 @@ class HybridAutoScaler:
         for pod in sorted(pods, key=lambda p: -p.sm):
             if delta <= 0:
                 break
-            if pod.standby:
-                continue   # keep-warm pods rejoin via reactivation only
+            if pod.standby or pod.doomed:
+                continue   # keep-warm pods rejoin via reactivation only;
+                           # doomed pods drain toward a reclaim kill
             gpu = self.recon.gpu_of_pod(pod.pod_id)
             if gpu is None:
                 continue
@@ -345,14 +489,19 @@ class HybridAutoScaler:
             spec, batch, t.sm_total, self.cfg.slo_multiplier,
             gpu=t) is not None
 
-    def _horizontal_up_used(self, now, spec, delta):
+    def _horizontal_up_used(self, now, spec, delta, R=0.0):
         actions = []
         if self.recon.is_heterogeneous:
             # mixed fleet: SLO-capable device classes first (a cheap
             # spot chip would dead-end the used-GPU path), cheapest
-            # $/slice class next, weight affinity, HGO inside a class
+            # $/slice class next, weight affinity, HGO inside a class.
+            # Doomed chips are draining toward a kill; on a spot fleet
+            # the router may additionally bar reclaimable chips.
             b0 = self.cfg.default_batch
-            used = self.recon.used_gpus()
+            used = [g for g in self.recon.used_gpus() if not g.doomed]
+            if self._spot_fleet and not self._spot_allowed(now, spec, R):
+                od = [g for g in used if g.gpu_type.market is None]
+                used = od or used
             gpu = min(used, key=lambda g: (
                 not self._type_slo_capable(spec, b0, g.gpu_type),
                 g.gpu_type.price_per_slice_hour,
@@ -370,6 +519,8 @@ class HybridAutoScaler:
             # (sm, quota) is slow for the pod's whole lifetime.
             cands = []
             for g in self.recon.used_gpus():
+                if g.doomed:
+                    continue
                 s_avail, q_avail = g.max_avail_alloc()
                 if s_avail > 0 and q_avail >= self.cfg.min_quota:
                     cands.append(g)
@@ -419,21 +570,34 @@ class HybridAutoScaler:
         for pod in self.recon.pods_of(spec.fn_id):
             pod.ready_at = 0.0
 
-    def _horizontal_up_new(self, now, spec, delta):
+    def _horizontal_up_new(self, now, spec, delta, R=0.0):
         actions = []
         het = self.recon.is_heterogeneous
         while delta > 0:
+            # the router decision is re-taken per placement: each pod
+            # landing on on-demand grows the floor until spot opens up
+            types = self._placement_types(now, spec, R)
             t, b, sm, q = self.table.best_config_over(
-                spec, delta, self._placement_types(),
+                spec, delta, types,
                 slo_multiplier=self.cfg.slo_multiplier)
             pod = PodAlloc(fn_id=spec.fn_id, sm=sm, quota=q, batch=b)
             if het:
                 # mixed fleet: FFD-pack onto existing fragments of a
-                # cheaper SLO-capable type before opening a fresh chip
+                # cheaper SLO-capable type before opening a fresh chip.
+                # On a spot fleet the placer is held to the router's
+                # type set; if those pools are exhausted, fall back to
+                # anything rather than under-provision.
+                allowed = types if self._spot_fleet else None
                 host = self.placer.place_one(
                     spec, pod, now=now,
                     cold_start_s=self.cfg.cold_start_s,
-                    new_gpu_cold_start_s=self.cfg.new_gpu_cold_start_s)
+                    new_gpu_cold_start_s=self.cfg.new_gpu_cold_start_s,
+                    allowed_types=allowed)
+                if host is None and allowed is not None:
+                    host = self.placer.place_one(
+                        spec, pod, now=now,
+                        cold_start_s=self.cfg.cold_start_s,
+                        new_gpu_cold_start_s=self.cfg.new_gpu_cold_start_s)
                 if host is None:   # fleet exhausted
                     break
                 t = host.gpu_type
@@ -458,15 +622,44 @@ class HybridAutoScaler:
         """Keep-warm standby pods currently parked for ``fn_id``."""
         return sum(1 for p in self.recon.pods_of(fn_id) if p.standby)
 
-    def _scale_down(self, now, spec, pods, delta):
+    def _scale_down(self, now, spec, pods, delta, R=0.0):
         actions = []
         tracker = self._tracker()
-        # smallest-SM pods first, keep at least one pod
-        for pod in sorted(pods, key=lambda p: p.sm):
+        # Expensive on-demand pods shed first on a spot fleet (the spot
+        # discount is the whole point of carrying reclaim risk), BUT
+        # never below the router's on-demand floor — that floor is what
+        # absorbs the next reclaim storm. On a market-free fleet the
+        # spot key is constant and the stable sort degenerates to the
+        # legacy smallest-SM order bitwise.
+        def _down_key(p):
+            is_spot = p.gpu_type is not None and p.gpu_type.market is not None
+            return (1 if is_spot else 0, p.sm)
+        # Floor the demand estimate at the scale-down trigger line
+        # (c_f * beta) and at r_min: a transient predictor collapse
+        # (R ~ 0 while traffic is live) must not shed the on-demand
+        # floor down to a spot-only rump — rebuilding it on fresh
+        # reclaimable chips is slow and swamps the queue. Under a
+        # sustained real trough c_f itself decays, so the floor follows
+        # demand down geometrically instead of instantly.
+        od_floor = 0.0
+        if self._spot_fleet:
+            c_now = sum(self.pod_thpt(spec, p) for p in pods
+                        if not p.standby and not p.doomed)
+            od_floor = self.cfg.spot_od_floor * max(
+                R, c_now * self.cfg.beta, self.cfg.r_min)
+        for pod in sorted(pods, key=_down_key):
             if delta <= 0:
                 break
             if pod.standby:
                 continue   # already parked in the keep-warm pool
+            if pod.doomed:
+                continue   # draining toward a reclaim kill; not ours
+            is_od = pod.gpu_type is None or pod.gpu_type.market is None
+            if (od_floor > 0.0 and is_od
+                    and self._od_capacity(spec,
+                                          self.recon.pods_of(spec.fn_id))
+                    - self.pod_thpt(spec, pod) < od_floor - 1e-9):
+                continue   # shedding this pod would breach the od floor
             remaining = [p for p in self.recon.pods_of(spec.fn_id)
                          if not p.standby]
             is_last = len(remaining) == 1

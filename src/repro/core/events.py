@@ -20,12 +20,26 @@ Semantics are those of the reference tick engine
     observed arrival rate plus backlog drain demand;
   * cost — integrated exactly between events; the $/s rate only changes
     when a policy mutates the cluster, so it is re-sampled after each
-    autoscale event rather than every tick.
+    autoscale event rather than every tick;
+  * spot reclaims — chips of a ``GPUType`` carrying a ``GPUMarket``
+    (configs/gpus.py) draw reclaim times from the market's hazard
+    process on a DEDICATED rng stream (service noise is untouched, so
+    reclaim-free runs are bitwise identical to pre-spot traces). A
+    `RECLAIM_NOTICE` opens the grace window: every pod on the chip is
+    marked doomed (drains — finishes in-flight batches, takes no new
+    ones, contributes zero capacity, so the very next autoscale tick
+    replaces it). `RECLAIM_KILL` then removes the chip: finished
+    batches deliver, still-running batches are requeued at the head of
+    the function queue (or dropped, per ``SimConfig.reclaim_requeue``),
+    and with a lifecycle tracker attached the weights demote to the
+    node's host cache (``modelstate.on_pod_removed``).
 
 Invariant: between two consecutive autoscale events of a function, its
 pod set and every pod's (sm, quota) are immutable — policies are the
-only mutators and they run inside autoscale events. The engine exploits
-this by caching each function's throughput-sorted pod order, per-config
+only mutators and they run inside autoscale events, EXCEPT for spot
+reclaim events, which re-sample the caches they invalidate (pod order,
+cost/fragmentation rates) themselves. The engine exploits this by
+caching each function's throughput-sorted pod order, per-config
 service times (deterministic part; noise is drawn per batch), and the
 cluster cost rate.
 """
@@ -47,8 +61,11 @@ from repro.core.reconfigurator import Reconfigurator
 from repro.core.slo import Request
 
 # Event kinds double as same-timestamp priorities, mirroring the tick
-# engine's per-tick order: arrivals, then autoscale, then execution.
-ARRIVAL, AUTOSCALE, DISPATCH = 0, 1, 2
+# engine's per-tick order: arrivals, then reclaim notices (so a policy
+# ticking at the same instant already sees the doomed capacity), then
+# autoscale, then kills, then execution. Only the RELATIVE order of
+# ARRIVAL < AUTOSCALE < DISPATCH matters for legacy traces.
+ARRIVAL, RECLAIM_NOTICE, AUTOSCALE, RECLAIM_KILL, DISPATCH = 0, 1, 2, 3, 4
 
 OBS_WINDOW_S = 5.0  # observed-rate sliding window (paper: short horizon)
 
@@ -67,6 +84,10 @@ class SimConfig:
     whole_gpu_cost: bool = False
     batch_wait_s: float = 0.01   # max wait to fill a batch
     drop_after_s: float = 60.0   # requests older than this count as violations
+    # spot reclaims: requeue a killed batch's in-flight requests at the
+    # queue head (latency keeps accruing from the original arrival) —
+    # False drops them instead (counted as violations)
+    reclaim_requeue: bool = True
 
 
 @dataclasses.dataclass
@@ -182,9 +203,23 @@ class EventEngine:
         # cluster, so it is re-sampled at autoscale events
         self._frag_rate = recon.fragmentation()
         self.frag_integral = 0.0
+        # ---- spot reclaims ----
+        # active only when the fleet declares a reclaiming market; the
+        # reclaim stream is SEPARATE from the service-noise rng so
+        # reclaim-free runs stay bitwise identical to legacy traces
+        self._has_spot = any(
+            t.market is not None and t.market.reclaim_rate_per_hour > 0
+            for t, _ in getattr(recon, "fleet", ()))
+        self._reclaim_rng = np.random.default_rng([cfg.seed, 0x5EC1A13])
+        self._reclaim_scheduled: set = set()   # chip uuids with a draw
+        self.preempt: Dict[str, int] = {
+            "reclaims": 0, "drained_batches": 0, "killed_batches": 0,
+            "requeued_requests": 0, "dropped_in_flight": 0}
 
     # ---- event queue -------------------------------------------------------
-    def _push(self, t: float, kind: int, st: FunctionState) -> None:
+    def _push(self, t: float, kind: int, st) -> None:
+        # payload is the FunctionState for function events, the chip
+        # uuid (str) for reclaim events; seq keeps tuples comparable
         heapq.heappush(self._heap, (t, kind, next(self._seq), st))
 
     # ---- helpers -----------------------------------------------------------
@@ -308,7 +343,96 @@ class EventEngine:
         nxt = t + cfg.autoscale_interval_s
         if nxt <= cfg.duration_s or self._any_work_left(t):
             self._push(nxt, AUTOSCALE, st)
+        self._schedule_reclaims(t)
         self._dispatch(t, st)
+
+    # ---- spot reclaims -----------------------------------------------------
+    def _schedule_reclaims(self, t: float) -> None:
+        """Draw a reclaim-notice time for every live spot chip that has
+        none yet (fresh chips appear at autoscale events, so this runs
+        at seed time and after each policy tick). Draws come from the
+        dedicated reclaim rng in chip-creation order — deterministic
+        for a given seed and decision history."""
+        if not self._has_spot:
+            return
+        horizon = self.cfg.duration_s + self.cfg.drop_after_s
+        for g in self.recon.gpus.values():
+            m = g.gpu_type.market
+            if (m is None or m.reclaim_rate_per_hour <= 0
+                    or g.uuid in self._reclaim_scheduled):
+                continue
+            self._reclaim_scheduled.add(g.uuid)
+            tr = m.sample_reclaim(t, self._reclaim_rng)
+            if tr <= horizon:
+                self._push(tr, RECLAIM_NOTICE, g.uuid)
+
+    def _on_reclaim_notice(self, t: float, uuid: str) -> None:
+        """Open the grace window on chip ``uuid``: mark its pods doomed
+        (capacity drops to zero, so the next autoscale tick starts
+        replacing them), count batches that will finish inside the
+        window as drained, and schedule the kill. A chip the policy
+        already released is ignored."""
+        g = self.recon.gpus.get(uuid)
+        if g is None or g.doomed:
+            return
+        kill_at = t + g.gpu_type.market.grace_period_s
+        self.recon.mark_doomed(uuid, kill_at, now=t)
+        self.preempt["reclaims"] += 1
+        for pod in g.pods:
+            st = self.fns.get(pod.fn_id)
+            if st is None:
+                continue
+            rt = st.runtimes.get(pod.pod_id)
+            if rt is not None and rt.inflight and t < rt.busy_until <= kill_at:
+                self.preempt["drained_batches"] += 1
+        self._push(kill_at, RECLAIM_KILL, uuid)
+
+    def _on_reclaim_kill(self, t: float, uuid: str) -> None:
+        """Close the grace window: deliver batches that finished in
+        time, requeue (or drop) still-running ones at the queue head,
+        remove every pod through the indexed path (demoting weights
+        when a lifecycle tracker is attached), and drop the chip. The
+        cost/fragmentation rates are re-sampled by the caller."""
+        g = self.recon.gpus.get(uuid)
+        if g is None:
+            return
+        affected: Dict[str, FunctionState] = {}
+        requeue: Dict[str, List[Request]] = {}
+        for pod in g.pods:
+            st = self.fns.get(pod.fn_id)
+            if st is None:
+                continue
+            affected[st.fid] = st
+            rt = st.runtimes.pop(pod.pod_id, None)
+            if rt is None or not rt.inflight:
+                continue
+            if rt.busy_until <= t:   # drained: finished, delivery was lazy
+                for r in rt.inflight:
+                    r.completion = rt.busy_until
+                st.completed.extend(rt.inflight)
+            else:                    # killed mid-batch
+                self.preempt["killed_batches"] += 1
+                if self.cfg.reclaim_requeue:
+                    requeue.setdefault(st.fid, []).extend(rt.inflight)
+                    self.preempt["requeued_requests"] += len(rt.inflight)
+                else:
+                    st.dropped += len(rt.inflight)
+                    self.preempt["dropped_in_flight"] += len(rt.inflight)
+            rt.inflight = []
+        for fid, reqs in requeue.items():
+            st = affected[fid]
+            # rejoin at the queue head in arrival order (they are older
+            # than anything still queued — FIFO and _shed rely on it)
+            for r in sorted(reqs, key=lambda r: r.arrival, reverse=True):
+                r.start = None
+                st.queue.appendleft(r)
+        self.recon.remove_gpu(uuid, now=t)
+        self._reclaim_scheduled.discard(uuid)
+        for st in affected.values():
+            self._refresh_pods(st)
+            self._dispatch(t, st)
+        self._cost_rates = self.cost.rates(self.recon)
+        self._frag_rate = self.recon.fragmentation()
 
     def _dispatch(self, t: float, st: FunctionState) -> None:
         """Idle ready pods pull batches, highest-throughput first.
@@ -334,6 +458,8 @@ class EventEngine:
                     r.completion = rt.busy_until
                 st.completed.extend(rt.inflight)
                 rt.inflight = []
+            if pod.doomed:
+                continue   # draining toward a reclaim kill: no new work
             if not q:
                 any_idle = True  # free pod waiting for work
                 break
@@ -378,6 +504,7 @@ class EventEngine:
             if st._arr:
                 self._push(st._arr[0], ARRIVAL, st)
             self._push(0.0, AUTOSCALE, st)
+        self._schedule_reclaims(0.0)   # chips provisioned at prewarm
         self._cost_rates = self.cost.rates(self.recon)
         self._frag_rate = self.recon.fragmentation()
         usd_rate, gsec_rate = self._cost_rates
@@ -405,6 +532,12 @@ class EventEngine:
                 self._on_arrival(t, st)
             elif kind == AUTOSCALE:
                 self._on_autoscale(t, st)
+                usd_rate, gsec_rate = self._cost_rates
+                frag_rate = self._frag_rate
+            elif kind == RECLAIM_NOTICE:   # payload is the chip uuid
+                self._on_reclaim_notice(t, st)
+            elif kind == RECLAIM_KILL:     # chip leaves: rates change
+                self._on_reclaim_kill(t, st)
                 usd_rate, gsec_rate = self._cost_rates
                 frag_rate = self._frag_rate
             else:

@@ -89,6 +89,10 @@ class RunMetrics:
     # goldens stay byte-identical
     start_kinds: Optional[Dict[str, int]] = None      # cold / warm / hot
     time_to_ready_ms: Optional[Dict[str, float]] = None   # p50 / p99
+    # spot preemption accounting (core/events.py reclaim path); None
+    # (and absent from the JSON) unless the fleet declares a spot
+    # market — legacy goldens stay byte-identical
+    preemptions: Optional[Dict[str, int]] = None
 
     # ---- construction ------------------------------------------------------
     @classmethod
@@ -141,6 +145,10 @@ class RunMetrics:
             pcts_s = tracker.ttr_percentiles()
             if pcts_s is not None:
                 ttr_ms = {k: v * 1e3 for k, v in pcts_s.items()}
+        # spot fleets additionally carry the preemption counters
+        preempt = None
+        if any(getattr(t, "market", None) is not None for t, _ in fleet):
+            preempt = dict(getattr(engine, "preempt", {}) or {})
         return cls(
             scenario=scenario, policy=policy, seed=int(seed),
             duration_s=float(engine.cfg.duration_s),
@@ -154,7 +162,8 @@ class RunMetrics:
             cold_starts=cold, scaling_actions=actions,
             peak_gpus=int(engine.peak_gpus),
             fragmentation=frag,
-            start_kinds=start_kinds, time_to_ready_ms=ttr_ms)
+            start_kinds=start_kinds, time_to_ready_ms=ttr_ms,
+            preemptions=preempt)
 
     # ---- serialization -----------------------------------------------------
     def to_dict(self) -> dict:
@@ -170,6 +179,10 @@ class RunMetrics:
         else:
             d["time_to_ready_ms"] = {
                 k: _jsonf(v) for k, v in sorted(d["time_to_ready_ms"].items())}
+        if d.get("preemptions") is None:   # market-free runs omit it
+            d.pop("preemptions", None)
+        else:
+            d["preemptions"] = dict(sorted(d["preemptions"].items()))
         for k in ("duration_s", "cost_usd", "cost_per_1k_usd",
                   "gpu_seconds"):
             d[k] = _jsonf(d[k])
@@ -192,6 +205,12 @@ class RunMetrics:
             d[k] = _unjsonf(d.get(k))
         for k in ("latency_ms", "slo_violation_rate"):
             d[k] = {sub: _unjsonf(v) for sub, v in d.get(k, {}).items()}
+        # optional float dicts must round-trip non-finite values too:
+        # to_dict nulls them via _jsonf, so from_dict must _unjsonf them
+        # symmetrically (a loaded golden otherwise compares None != inf)
+        if d.get("time_to_ready_ms") is not None:
+            d["time_to_ready_ms"] = {
+                sub: _unjsonf(v) for sub, v in d["time_to_ready_ms"].items()}
         return cls(**d)
 
     @classmethod

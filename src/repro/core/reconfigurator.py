@@ -84,6 +84,9 @@ class Reconfigurator:
         # ModelStateTracker is attached) persists across scale cycles
         self._node_counts: Dict[int, int] = {}       # node slot -> live chips
         self.modelstate = None   # optional ModelStateTracker
+        # spot-reclaim notice times (appended by mark_doomed): the
+        # hybrid router's reclaim-pressure signal reads the tail
+        self.reclaim_log: List[float] = []
         # ---- hot-path indexes ----
         self._pods: Dict[str, PodAlloc] = {}          # pod_id -> pod
         self._pod_gpu: Dict[str, str] = {}            # pod_id -> gpu uuid
@@ -179,14 +182,53 @@ class Reconfigurator:
         for u in empty:
             if len(self.gpus) <= keep:
                 break
-            g = self.gpus[u]
-            g.owner = None
-            self._type_counts[g.gpu_type] -= 1
-            slot = int(g.node.rsplit("-", 1)[1])
-            self._node_counts[slot] -= 1
-            del self.gpus[u]
+            self._drop_gpu(self.gpus[u])
             released.append(u)
         return released
+
+    def _drop_gpu(self, g: VirtualGPU) -> None:
+        """Unregister an (empty) chip and return its node slot."""
+        g.owner = None
+        self._type_counts[g.gpu_type] -= 1
+        slot = int(g.node.rsplit("-", 1)[1])
+        self._node_counts[slot] -= 1
+        del self.gpus[g.uuid]
+
+    # ---- spot reclaims -----------------------------------------------------
+    def mark_doomed(self, uuid: str, kill_at: float,
+                    now: Optional[float] = None) -> None:
+        """Open the reclaim grace window on chip ``uuid``: stamp its
+        kill time, mark every hosted pod ``doomed`` (their cached
+        capacity contributions drop to whatever the registered model
+        says about doomed pods — the HAS model says zero), and append
+        the notice to ``reclaim_log`` for the router's pressure signal.
+
+        Args:
+            uuid: the chip under notice (must be live).
+            kill_at: absolute time ``RECLAIM_KILL`` will fire.
+            now: notice time for the log (defaults to ``kill_at``).
+        """
+        g = self.gpus[uuid]
+        g.reclaim_at = kill_at
+        for p in g.pods:
+            p.doomed = True
+            self._update_contrib(p)
+        self.reclaim_log.append(kill_at if now is None else now)
+
+    def remove_gpu(self, uuid: str, now: Optional[float] = None) -> None:
+        """Forcibly remove chip ``uuid`` (spot ``RECLAIM_KILL``): every
+        hosted pod is removed through the ordinary indexed path — with
+        an attached lifecycle tracker their weights demote to the
+        node's host cache as of ``now`` — then the chip itself leaves
+        the cluster, returning its node slot. No-op for unknown uuids
+        (the chip may have been scaled away inside the grace window).
+        """
+        g = self.gpus.get(uuid)
+        if g is None:
+            return
+        for p in list(g.pods):
+            self.remove_pod(p.pod_id, now=now)
+        self._drop_gpu(g)
 
     # ---- views -------------------------------------------------------------
     def used_gpus(self) -> List[VirtualGPU]:
@@ -209,7 +251,10 @@ class Reconfigurator:
         return self._pods.get(pod_id)
 
     def lowest_hgo_gpu(self, exclude=()) -> Optional[VirtualGPU]:
-        used = [g for g in self.used_gpus() if g.uuid not in exclude]
+        # doomed chips are draining toward a reclaim kill: never a
+        # horizontal-up target (no-op filter on reclaim-free fleets)
+        used = [g for g in self.used_gpus()
+                if g.uuid not in exclude and not g.doomed]
         if not used:
             return None
         return min(used, key=lambda g: g.hgo)

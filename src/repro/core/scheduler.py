@@ -45,8 +45,17 @@ class TokenLedger:
     def quota_of(self, pod_id: str) -> float:
         part = self.vgpu.partition_of(pod_id)
         if part is None:
-            raise KeyError(pod_id)
+            raise KeyError(
+                f"pod {pod_id!r} is not placed on GPU {self.vgpu.uuid} "
+                "(removed, reclaimed, or never placed) — stale client?")
         return next(p.quota for p in part.pods if p.pod_id == pod_id)
+
+    def release(self, pod_id: str) -> None:
+        """Drop the pod's window/budget state (idempotent). Must be
+        called when the pod leaves the GPU, or the ledger leaks one
+        entry per departed pod for the life of the chip."""
+        self._window_start.pop(pod_id, None)
+        self._budget.pop(pod_id, None)
 
     def acquire(self, pod_id: str, cost_s: float, now: float) -> float:
         """Virtual-time acquire: returns completion time of the task."""
@@ -106,8 +115,22 @@ class HASGPUScheduler:
         self.clients: Dict[str, GPUClient] = {}
 
     def register_gpu(self, vgpu: VirtualGPU) -> TokenLedger:
-        ledger = self.ledgers.setdefault(vgpu.uuid, TokenLedger(vgpu))
+        ledger = self.ledgers.get(vgpu.uuid)
+        if ledger is None:
+            ledger = self.ledgers[vgpu.uuid] = TokenLedger(vgpu)
+            # pod churn (scale-down, spot reclaims) must not leak ledger
+            # or client state: release on every removal, however driven
+            vgpu.remove_listeners.append(
+                lambda g, pod: self.release(g.uuid, pod.pod_id))
         return ledger
+
+    def release(self, gpu_uuid: str, pod_id: str) -> None:
+        """Release all scheduler state of one departed pod (idempotent):
+        its token-ledger window/budget entries and its client handle."""
+        ledger = self.ledgers.get(gpu_uuid)
+        if ledger is not None:
+            ledger.release(pod_id)
+        self.clients.pop(f"{gpu_uuid}/{pod_id}", None)
 
     def client_for(self, vgpu: VirtualGPU, pod_id: str) -> GPUClient:
         ledger = self.register_gpu(vgpu)
@@ -180,10 +203,13 @@ class FleetPlacer:
     def place_one(self, spec, pod: PodAlloc, now: float = 0.0,
                   cold_start_s: float = 0.0,
                   new_gpu_cold_start_s: Optional[float] = None,
-                  allow_slo_overflow: bool = True) -> Optional[VirtualGPU]:
+                  allow_slo_overflow: bool = True,
+                  allowed_types: Optional[Sequence[GPUType]] = None,
+                  ) -> Optional[VirtualGPU]:
         """Place one pod: cheapest SLO-capable fragment first, then a
         fresh chip of the cheapest SLO-capable type, then (optionally)
-        any type that physically fits.
+        any type that physically fits. Chips inside a spot-reclaim
+        grace window (``doomed``) are never candidates.
 
         Args:
             spec: the pod's function (for SLO feasibility checks).
@@ -194,13 +220,19 @@ class FleetPlacer:
                 provisioned; defaults to ``cold_start_s``.
             allow_slo_overflow: permit SLO-violating hosts when nothing
                 SLO-capable remains (spot overflow) instead of failing.
+            allowed_types: optional device-type restriction (the hybrid
+                router's on-demand-only routing during reclaim
+                pressure); None = all fleet types.
         Returns: the hosting GPU, or None when the fleet cannot host
-        the pod at all.
+        the pod at all (under the restriction, if any).
         """
         if new_gpu_cold_start_s is None:
             new_gpu_cold_start_s = cold_start_s
+        type_ok = (lambda t: True) if allowed_types is None \
+            else set(allowed_types).__contains__
         used = [g for g in self.recon.used_gpus()
-                if g.can_place(pod.sm, pod.quota)]
+                if not g.doomed and type_ok(g.gpu_type)
+                and g.can_place(pod.sm, pod.quota)]
         used.sort(key=lambda g: (g.gpu_type.price_per_slice_hour,
                                  self._affinity_rank(g, pod.fn_id, now),
                                  g.index))
@@ -214,7 +246,7 @@ class FleetPlacer:
             return g
         fresh = sorted(
             (t for t in self.recon.available_gpu_types(min_sm=pod.sm)
-             if self.slo_ok(spec, pod, t)),
+             if type_ok(t) and self.slo_ok(spec, pod, t)),
             key=lambda t: t.price_per_slice_hour)
         if fresh:
             g = self.recon.add_gpu(fresh[0])
@@ -231,7 +263,8 @@ class FleetPlacer:
             self.recon.place_pod(pod, g.uuid, now=now,
                                  cold_start_s=cold_start_s, spec=spec)
             return g
-        types = self.recon.available_gpu_types(min_sm=pod.sm)
+        types = [t for t in self.recon.available_gpu_types(min_sm=pod.sm)
+                 if type_ok(t)]
         if not types:
             return None
         t = min(types, key=lambda t: t.price_per_slice_hour)

@@ -51,7 +51,10 @@ class PodAlloc:
     held in HBM, excluded from dispatch and capacity, billed at the
     idle-retention price); ``start_kind`` is the model-state lifecycle
     engine's cold/warm/hot classification of the pod's last start
-    (None outside lifecycle-enabled runs).
+    (None outside lifecycle-enabled runs). ``doomed`` marks a pod whose
+    host chip received a spot ``RECLAIM_NOTICE``: it drains (finishes
+    in-flight work, contributes zero capacity, receives no new batches)
+    until the grace window closes and the chip is killed.
     """
     fn_id: str
     sm: int                      # slices in its partition (1..sm_total)
@@ -64,6 +67,7 @@ class PodAlloc:
     gpu_type: Optional[GPUType] = None   # stamped at placement
     standby: bool = False        # keep-warm pool member (not serving)
     start_kind: Optional[str] = None     # cold | warm | hot (lifecycle)
+    doomed: bool = False         # host chip inside a reclaim grace window
 
     def __post_init__(self):
         if not self.pod_id:
@@ -109,6 +113,17 @@ class VirtualGPU:
         # mutations made directly on the GPU notify it so those indexes
         # stay authoritative regardless of which API level is used
         self.owner = None
+        # spot reclaim: kill time once a RECLAIM_NOTICE opened the grace
+        # window (None = chip not under notice)
+        self.reclaim_at: Optional[float] = None
+        # observers called as listener(gpu, pod) after a pod is removed
+        # (e.g. HASGPUScheduler releasing the pod's token-ledger state)
+        self.remove_listeners: List = []
+
+    @property
+    def doomed(self) -> bool:
+        """Whether this chip is inside a spot-reclaim grace window."""
+        return self.reclaim_at is not None
 
     # ---- capacity queries -------------------------------------------------
     @property
@@ -197,8 +212,11 @@ class VirtualGPU:
         for part in self.partitions:
             part.pods = [p for p in part.pods if p.pod_id != pod_id]
         self.partitions = [p for p in self.partitions if p.pods]
-        if pod is not None and self.owner is not None:
-            self.owner._index_remove(pod, self)
+        if pod is not None:
+            if self.owner is not None:
+                self.owner._index_remove(pod, self)
+            for listener in self.remove_listeners:
+                listener(self, pod)
 
     # ---- vertical scaling (runtime quota reallocation, paper Fig 2) -------
     def set_quota(self, pod_id: str, quota: float) -> None:

@@ -56,9 +56,30 @@ class Batcher:
     @staticmethod
     def pad_prompts(reqs: List[InferenceRequest], pad_id: int = 0,
                     pad_to: Optional[int] = None) -> np.ndarray:
-        """Left-pad to a common length so decode positions align."""
-        L = pad_to or max(len(r.prompt) for r in reqs)
+        """Left-pad to a common length so decode positions align.
+
+        Args:
+            reqs: non-empty list of requests.
+            pad_id: fill token for the left padding.
+            pad_to: fixed output width. None (the default) pads to the
+                longest prompt in the batch; an explicit width must be
+                >= 1, and prompts longer than it are truncated to their
+                TRAILING ``pad_to`` tokens — with left padding the tail
+                of the prompt is what sits next to the decode position.
+        Returns: ``(len(reqs), L) int32`` array.
+        Raises: ``ValueError`` for an empty batch or ``pad_to < 1``.
+        """
+        if not reqs:
+            raise ValueError("pad_prompts: empty request list")
+        if pad_to is None:
+            L = max(len(r.prompt) for r in reqs)
+        else:
+            L = int(pad_to)
+            if L < 1:
+                raise ValueError(f"pad_prompts: pad_to={pad_to} must be "
+                                 ">= 1 (or None to fit the batch)")
         out = np.full((len(reqs), L), pad_id, np.int32)
         for i, r in enumerate(reqs):
-            out[i, L - len(r.prompt):] = r.prompt
+            p = r.prompt[-L:]   # keep the tail when truncating
+            out[i, L - len(p):] = p
         return out

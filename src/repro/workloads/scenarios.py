@@ -22,6 +22,7 @@ from typing import Callable, Dict, Optional, Tuple
 import numpy as np
 
 from repro.configs import ARCHS
+from repro.configs.gpus import GPUMarket, spot
 from repro.core import (ClusterSimulator, FaSTGShareLikePolicy, FnSpec,
                         HybridAutoScaler, KServeLikePolicy, LifecycleConfig,
                         ModelStateTracker, Reconfigurator, SimConfig)
@@ -64,8 +65,10 @@ class Scenario:
     ``trace`` follows the generator calling convention
     ``(duration_s, base_rps, seed) -> sorted arrival times`` and is
     re-invoked per function with decorrelated seeds. ``fleet`` is an
-    optional ordered tuple of ``(gpu_type_name, max_chips)`` pools
-    (``configs/gpus.py`` names); None means the legacy homogeneous
+    optional ordered tuple of ``(gpu_type, max_chips)`` pools — each
+    ``gpu_type`` a ``configs/gpus.py`` registry name or a ``GPUType``
+    instance (unregistered spot variants from ``spot()`` are passed as
+    instances); None means the legacy homogeneous
     cluster of ``max_gpus`` reference-type chips — the construction
     path, and therefore the golden traces, of every pre-heterogeneity
     scenario. ``lifecycle`` attaches the model-state lifecycle engine
@@ -338,3 +341,85 @@ register(Scenario(
                                                  seed=s),
     base_rps=30.0,
     fleet=(("t4", 16), ("a100", 4))))
+
+
+# ---- spot preemption scenarios ---------------------------------------------
+#
+# Markets are tuned so the interesting dynamics land inside the 45 s
+# golden window: the EVENING market's correlated storm (60x hazard for
+# 8 s every 90 s, first at t=12 s) coincides with the diurnal load
+# peak; the STORM market reclaims hard enough that an all-spot fleet
+# visibly bleeds SLO during drains.
+
+#: Evening-peak spot market: deep discount, calm base hazard, one
+#: correlated reclaim storm per diurnal period aligned with the load peak.
+SPOT_MARKET_EVENING = GPUMarket(price_multiplier=0.20,
+                                reclaim_rate_per_hour=4.0,
+                                grace_period_s=6.0,
+                                storm_multiplier=60.0,
+                                storm_period_s=90.0,
+                                storm_duration_s=8.0,
+                                storm_start_s=12.0)
+
+#: Violent reclaim regime: high base hazard, short grace, frequent storms.
+SPOT_MARKET_STORM = GPUMarket(price_multiplier=0.30,
+                              reclaim_rate_per_hour=12.0,
+                              grace_period_s=4.0,
+                              storm_multiplier=40.0,
+                              storm_period_s=60.0,
+                              storm_duration_s=10.0,
+                              storm_start_s=15.0)
+
+#: The spot flavor of the reference chip under each market.
+V5E_SPOT_EVENING = spot("v5e", SPOT_MARKET_EVENING)
+V5E_SPOT_STORM = spot("v5e", SPOT_MARKET_STORM)
+
+_DIURNAL_RECLAIM = Scenario(
+    name="diurnal_spot_reclaims",
+    description="Diurnal swing on a mixed on-demand/spot v5e fleet whose "
+                "spot pool suffers correlated evening reclaims (the "
+                "provider draining capacity exactly at the load peak). "
+                "The hybrid router keeps an always-warm on-demand floor, "
+                "rides the 0.2x spot discount while the market is calm, "
+                "and shifts overflow back on-demand when reclaim "
+                "pressure spikes — cheaper than the all-on-demand "
+                "variant, fewer SLO violations than the all-spot one.",
+    trace=lambda d, r, s: generators.diurnal(d, r, amplitude=0.7,
+                                             period_s=90.0, seed=s),
+    base_rps=400.0,
+    fleet=(("v5e", 6), (V5E_SPOT_EVENING, 24)))
+register(_DIURNAL_RECLAIM)
+
+register(_DIURNAL_RECLAIM.with_(
+    name="diurnal_spot_ondemand",
+    description="All-on-demand control for diurnal_spot_reclaims: the "
+                "identical trace served entirely from reliable v5e "
+                "capacity — zero preemptions, full price. The spot pool "
+                "is declared at zero capacity so the run exercises the "
+                "exact same heterogeneous control-plane paths as the "
+                "hybrid, isolating the router's availability decision. "
+                "The cost ceiling the hybrid router must undercut.",
+    fleet=(("v5e", 30), (V5E_SPOT_EVENING, 0))))
+
+register(_DIURNAL_RECLAIM.with_(
+    name="diurnal_spot_allspot",
+    description="All-spot control for diurnal_spot_reclaims: the "
+                "identical trace served entirely from reclaimable "
+                "capacity (the on-demand v5e pool is declared at zero "
+                "capacity, keeping the control-plane paths identical to "
+                "the hybrid's). Maximum discount, but every evening "
+                "storm tears capacity out right at the load peak — the "
+                "SLO floor the hybrid router must beat.",
+    fleet=(("v5e", 0), (V5E_SPOT_EVENING, 30))))
+
+register(Scenario(
+    name="spot_reclaim_storm",
+    description="Steady load on a thin on-demand floor plus a large spot "
+                "pool under a violent reclaim regime (12/hr base hazard, "
+                "40x storms, 4 s grace): a drain-and-replace stress test "
+                "of the RECLAIM_NOTICE/RECLAIM_KILL path — grace-window "
+                "draining, in-flight requeue at queue head, and "
+                "replacement capacity inside the window.",
+    trace=generators.homogeneous_poisson,
+    base_rps=600.0,
+    fleet=(("v5e", 4), (V5E_SPOT_STORM, 24))))

@@ -55,7 +55,10 @@ def test_scenarios_doc_mentions_each_fleet():
     for name in scenario_names():
         scen = get_scenario(name)
         if scen.fleet:
-            for type_name, _cap in scen.fleet:
+            for entry, _cap in scen.fleet:
+                # fleet entries are registry names (str) or GPUType
+                # instances (spot variants live outside the registry)
+                type_name = getattr(entry, "name", entry)
                 assert type_name in text, (
                     f"{name}: fleet type {type_name!r} not mentioned in "
                     f"docs/scenarios.md")

@@ -417,6 +417,22 @@ def test_lifecycle_metrics_round_trip():
     assert "start_kinds" not in legacy.to_dict()
 
 
+def test_nonfinite_time_to_ready_round_trips():
+    """to_dict serializes non-finite floats as null (RFC 8259); from_dict
+    must symmetrize the OPTIONAL float dicts too, or a loaded golden
+    with an inf time-to-ready percentile compares None != inf and every
+    subsequent golden check flaps."""
+    import dataclasses as _dc
+    m = get_scenario("scale_to_zero_lru").run(policy="has", seed=7,
+                                              duration_s=45.0).metrics
+    broken = _dc.replace(m, time_to_ready_ms={"p50": 12.5,
+                                              "p99": float("inf")})
+    back = RunMetrics.from_json(broken.to_json())
+    assert back.time_to_ready_ms == {"p50": 12.5, "p99": float("inf")}
+    assert back.to_json() == broken.to_json()
+    assert not broken.diff(back)
+
+
 def test_baselines_get_physics_but_no_cache():
     """On a lifecycle scenario the baselines run the same derived
     start-latency physics but with caching/keep-warm/pre-warm stripped

@@ -49,6 +49,38 @@ def test_batcher_pad_prompts_left_pads_with_pad_id():
     assert out6.dtype == np.int32
 
 
+def test_batcher_pad_prompts_none_fits_longest_prompt():
+    """pad_to=None (the default) must mean "fit the batch" explicitly,
+    not fall through any numeric branch."""
+    reqs = [InferenceRequest(prompt=np.array([1], np.int32)),
+            InferenceRequest(prompt=np.array([2, 3, 4], np.int32))]
+    out = Batcher.pad_prompts(reqs, pad_id=0, pad_to=None)
+    assert out.shape == (2, 3)
+    np.testing.assert_array_equal(out, [[0, 0, 1], [2, 3, 4]])
+
+
+def test_batcher_pad_prompts_truncates_to_trailing_tokens():
+    """A prompt longer than pad_to keeps its TRAILING pad_to tokens —
+    with left padding, the tail is what sits next to the decode
+    position. The old code raised a broadcast error here."""
+    reqs = [InferenceRequest(prompt=np.arange(1, 7, dtype=np.int32)),
+            InferenceRequest(prompt=np.array([9], np.int32))]
+    out = Batcher.pad_prompts(reqs, pad_id=0, pad_to=4)
+    np.testing.assert_array_equal(out, [[3, 4, 5, 6], [0, 0, 0, 9]])
+
+
+@pytest.mark.parametrize("bad", [0, -3])
+def test_batcher_pad_prompts_rejects_nonpositive_width(bad):
+    reqs = [InferenceRequest(prompt=np.array([1, 2], np.int32))]
+    with pytest.raises(ValueError, match="pad_to"):
+        Batcher.pad_prompts(reqs, pad_to=bad)
+
+
+def test_batcher_pad_prompts_rejects_empty_batch():
+    with pytest.raises(ValueError, match="empty"):
+        Batcher.pad_prompts([])
+
+
 # ---------------------------------------------------------------------------
 # LibHas
 # ---------------------------------------------------------------------------

@@ -148,3 +148,49 @@ if HAVE_HYPOTHESIS:
         g.set_quota(pod.pod_id, q_new)
         t2 = ledger.acquire(pod.pod_id, 1e-3, t)
         assert t2 >= W  # nothing more ran inside window 0
+
+
+# ---- pod-churn state release (spot reclaims, scale-down) -------------------
+
+def test_quota_of_unplaced_pod_raises_descriptive_keyerror():
+    """A stale client (its pod removed — scale-down or spot reclaim)
+    must fail loudly and readably, not with a bare StopIteration."""
+    _, pod, ledger = make_ledger(0.5)
+    with pytest.raises(KeyError, match="stale client"):
+        ledger.quota_of("no-such-pod")
+    ledger.vgpu.remove(pod.pod_id)
+    with pytest.raises(KeyError, match=pod.pod_id):
+        ledger.quota_of(pod.pod_id)
+
+
+def test_release_is_idempotent_and_drops_window_state():
+    _, pod, ledger = make_ledger(0.5)
+    ledger.acquire(pod.pod_id, 0.01, 0.0)
+    assert pod.pod_id in ledger._window_start
+    ledger.release(pod.pod_id)
+    assert pod.pod_id not in ledger._window_start
+    assert pod.pod_id not in ledger._budget
+    ledger.release(pod.pod_id)  # second release is a no-op
+    ledger.release("never-placed")
+
+
+def test_scheduler_releases_state_on_pod_removal():
+    """Pod churn must not leak ledger/client state for the life of the
+    chip: HASGPUScheduler hooks the vGPU remove listeners, so ANY
+    removal path (scale-down, spot RECLAIM_KILL) releases both the
+    window/budget entries and the client handle."""
+    from repro.core.scheduler import HASGPUScheduler
+
+    sched = HASGPUScheduler()
+    g = VirtualGPU("G", window_ms=WINDOW_MS)
+    for i in range(50):  # churn: place, run, remove, repeat
+        pod = PodAlloc(fn_id="f", sm=8, quota=0.5, batch=1,
+                       pod_id=f"pod-churn-{i}")
+        g.place(pod)
+        client = sched.client_for(g, pod.pod_id)
+        client.ledger.acquire(pod.pod_id, 1e-4, float(i))
+        g.remove(pod.pod_id)
+    ledger = sched.ledgers["G"]
+    assert not ledger._window_start and not ledger._budget
+    assert not sched.clients
+    assert len(sched.ledgers) == 1  # the chip's ledger itself persists
