@@ -220,6 +220,37 @@ def bench_reclaim(spec: FnSpec, iters: int) -> dict:
             "fleet": [f"{get_type_name(t)}:{c}" for t, c in fleet], **r}
 
 
+def bench_fault_react(spec: FnSpec, iters: int) -> dict:
+    """Fault-reaction latency: one full quarantine -> backfill -> lift
+    -> recover cycle, i.e. the control plane's end-to-end cost of a
+    health-scorer trip (core/faults.py) — `set_quarantined` (the pod's
+    capacity contribution drops to zero), the autoscaler's backfill
+    tick, the quarantine lift, and the recovery tick that re-absorbs
+    the benched capacity."""
+    recon = Reconfigurator(num_gpus=0, max_gpus=16)
+    scaler = HybridAutoScaler(recon, cfg=AutoScalerConfig(cooldown_s=0.0))
+    state = {"now": 0.0}
+    for _ in range(6):   # converge a standing fleet
+        state["now"] += 1.0
+        scaler.scale(state["now"], spec, 400.0)
+
+    def one_cycle():
+        state["now"] += 1.0
+        now = state["now"]
+        victim = next((p for p in recon.pods_of(spec.fn_id)
+                       if not p.quarantined and not p.doomed), None)
+        if victim is not None:
+            recon.set_quarantined(victim.pod_id, True)
+            scaler.scale(now, spec, 400.0)        # backfill decision
+            recon.set_quarantined(victim.pod_id, False)
+        state["now"] += 1.0
+        scaler.scale(state["now"], spec, 400.0)   # recovery tick
+
+    one_cycle()
+    r = _timed(one_cycle, iters)
+    return {"name": "fault_react", **r}
+
+
 def get_type_name(t) -> str:
     """Fleet-entry display name (str entries or GPUType instances)."""
     return getattr(t, "name", t)
@@ -237,6 +268,7 @@ def run(smoke: bool = False, het: bool = False) -> dict:
     if het:
         results += bench_het(spec, iters=5 if smoke else 25)
         results.append(bench_reclaim(spec, iters=60 if smoke else 300))
+    results.append(bench_fault_react(spec, iters=60 if smoke else 300))
     return {"schema": "bench_control_plane/v1", "smoke": smoke,
             "arch": ARCH, "results": results}
 

@@ -177,6 +177,17 @@ def run_scenario_cli(args) -> None:
             f.write(m.to_json())
         sys.stdout.write(m.to_json())
         print(f"wrote {path}", file=sys.stderr)
+        if args.check:
+            from repro.core.metrics import RunMetrics
+            ref = RunMetrics.load(args.check)
+            diffs = ref.diff(m)
+            if diffs:
+                print(f"{scen.name}/{pol} drifted from {args.check} "
+                      f"({len(diffs)} fields):", file=sys.stderr)
+                for d in diffs:
+                    print(f"  {d}", file=sys.stderr)
+                sys.exit(1)
+            print(f"check OK: matches {args.check}", file=sys.stderr)
 
 
 def main(argv=None) -> None:
@@ -197,6 +208,10 @@ def main(argv=None) -> None:
     ap.add_argument("--duration", type=float, default=None,
                     help="override the horizon (seconds)")
     ap.add_argument("--out-dir", default=METRICS_DIR)
+    ap.add_argument("--check", default=None, metavar="REF_JSON",
+                    help="compare the run's RunMetrics against a "
+                    "committed reference (RunMetrics.diff) and exit "
+                    "non-zero on drift — CI's seeded chaos-smoke gate")
     ap.add_argument("--list-scenarios", action="store_true")
     ap.add_argument("--compare-tick", action="store_true")
     args = ap.parse_args(argv)

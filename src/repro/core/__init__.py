@@ -11,6 +11,8 @@ from repro.core.autoscaler import (AutoScalerConfig, HybridAutoScaler,
 from repro.core.baselines import (FaSTGShareLikeConfig, FaSTGShareLikePolicy,
                                   KServeLikeConfig, KServeLikePolicy)
 from repro.core.capacity import CapacityTable, shared_table
+from repro.core.faults import (FaultInjector, FaultModel, HealthTracker,
+                               ResilienceConfig)
 from repro.core.kalman import KalmanPredictor, LastValuePredictor
 from repro.core.metrics import RunMetrics, baseline_batch_of
 from repro.core.modelstate import (ColdStartModel, LifecycleConfig,
@@ -32,6 +34,7 @@ __all__ = [
     "FaSTGShareLikeConfig", "FaSTGShareLikePolicy",
     "KServeLikeConfig", "KServeLikePolicy",
     "CapacityTable", "shared_table",
+    "FaultInjector", "FaultModel", "HealthTracker", "ResilienceConfig",
     "KalmanPredictor", "LastValuePredictor",
     "RunMetrics", "baseline_batch_of",
     "FnSpec", "cost_rate", "exec_time", "latency", "most_efficient_config",

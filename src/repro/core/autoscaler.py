@@ -156,11 +156,13 @@ class HybridAutoScaler:
         model = self._cap_models.get(spec.fn_id)
         if model is None:
             # keep-warm standby pods hold weights, not capacity; doomed
-            # pods are draining toward a reclaim kill — writing them off
+            # pods are draining toward a reclaim kill and quarantined
+            # pods are health-benched stragglers — writing them off
             # now is what makes the scaler replace them inside the
-            # grace window
+            # grace/quarantine window
             model = self._cap_models[spec.fn_id] = (
-                lambda p, _s=spec: 0.0 if (p.standby or p.doomed) else
+                lambda p, _s=spec: 0.0
+                if (p.standby or p.doomed or p.quarantined) else
                 self.thpt(_s, p.batch, p.sm, p.quota, p.gpu_type))
         # no-op when already installed; re-registers (and recomputes
         # contributions) if another scaler on the same cluster took over
@@ -254,7 +256,7 @@ class HybridAutoScaler:
         """Serving capacity on RELIABLE (market-free) devices — the
         quantity the on-demand floor is measured against."""
         return sum(self.pod_thpt(spec, p) for p in pods
-                   if not p.standby and not p.doomed
+                   if not p.standby and not p.doomed and not p.quarantined
                    and (p.gpu_type is None or p.gpu_type.market is None))
 
     def _reclaim_pressure(self, now: float) -> int:
@@ -323,7 +325,7 @@ class HybridAutoScaler:
         od_cap = self._od_capacity(spec, pods)
         floor = self.cfg.spot_od_floor * R
         cands = [p for p in pods
-                 if not p.standby and not p.doomed
+                 if not p.standby and not p.doomed and not p.quarantined
                  and (p.gpu_type is None or p.gpu_type.market is None)
                  and od_cap - self.pod_thpt(spec, p) >= floor - 1e-9]
         if not cands:
@@ -454,9 +456,9 @@ class HybridAutoScaler:
         for pod in sorted(pods, key=lambda p: -p.sm):
             if delta <= 0:
                 break
-            if pod.standby or pod.doomed:
+            if pod.standby or pod.doomed or pod.quarantined:
                 continue   # keep-warm pods rejoin via reactivation only;
-                           # doomed pods drain toward a reclaim kill
+                           # doomed/quarantined pods are out of service
             gpu = self.recon.gpu_of_pod(pod.pod_id)
             if gpu is None:
                 continue
@@ -644,7 +646,8 @@ class HybridAutoScaler:
         od_floor = 0.0
         if self._spot_fleet:
             c_now = sum(self.pod_thpt(spec, p) for p in pods
-                        if not p.standby and not p.doomed)
+                        if not p.standby and not p.doomed
+                        and not p.quarantined)
             od_floor = self.cfg.spot_od_floor * max(
                 R, c_now * self.cfg.beta, self.cfg.r_min)
         for pod in sorted(pods, key=_down_key):

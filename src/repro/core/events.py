@@ -32,7 +32,16 @@ Semantics are those of the reference tick engine
     batches deliver, still-running batches are requeued at the head of
     the function queue (or dropped, per ``SimConfig.reclaim_requeue``),
     and with a lifecycle tracker attached the weights demote to the
-    node's host cache (``modelstate.on_pod_removed``).
+    node's host cache (``modelstate.on_pod_removed``);
+  * faults + resilience — a ``SimConfig.faults`` (``core/faults.py``)
+    schedules chip hard-failures, transient stragglers, host-cache
+    losses, and control-plane blackouts from dedicated rng streams;
+    a ``SimConfig.resilience`` arms per-request deadlines with a
+    bounded retry budget, EWMA health scoring that quarantines
+    stragglers out of dispatch like doomed chips, and brownout
+    admission control that sheds un-serveable arrivals explicitly.
+    Both are inert by default — fault-free runs stay bitwise identical
+    to every legacy trace.
 
 Invariant: between two consecutive autoscale events of a function, its
 pod set and every pod's (sm, quota) are immutable — policies are the
@@ -56,6 +65,8 @@ import numpy as np
 from repro.core import capacity as capacity_mod
 from repro.core import perf_model
 from repro.core.cost import CostMeter
+from repro.core.faults import (FaultInjector, FaultModel, HealthTracker,
+                               ResilienceConfig)
 from repro.core.perf_model import FnSpec
 from repro.core.reconfigurator import Reconfigurator
 from repro.core.slo import Request
@@ -66,6 +77,12 @@ from repro.core.slo import Request
 # autoscale, then kills, then execution. Only the RELATIVE order of
 # ARRIVAL < AUTOSCALE < DISPATCH matters for legacy traces.
 ARRIVAL, RECLAIM_NOTICE, AUTOSCALE, RECLAIM_KILL, DISPATCH = 0, 1, 2, 3, 4
+# Fault-layer kinds (core/faults.py) sort AFTER every legacy kind at an
+# identical timestamp, so arming the chaos layer cannot perturb the
+# relative order of any legacy event pair: chip hard-failures, pod
+# faults (straggler windows / host-cache losses), backoff-delayed
+# retry requeues, and quarantine lifts.
+CHIP_FAIL, POD_FAULT, RETRY, QUAR_LIFT = 5, 6, 7, 8
 
 OBS_WINDOW_S = 5.0  # observed-rate sliding window (paper: short horizon)
 
@@ -88,6 +105,12 @@ class SimConfig:
     # queue head (latency keeps accruing from the original arrival) —
     # False drops them instead (counted as violations)
     reclaim_requeue: bool = True
+    # chaos layer (core/faults.py): fault processes to inject and the
+    # degradation machinery to run them against. Both default to None
+    # (and an inert FaultModel/ResilienceConfig is equivalent to None):
+    # fault-free runs are bitwise identical to legacy traces
+    faults: Optional[FaultModel] = None
+    resilience: Optional[ResilienceConfig] = None
 
 
 @dataclasses.dataclass
@@ -125,6 +148,15 @@ class FunctionState:
     # only populated when a lifecycle tracker stamps pod.start_kind
     start_counts: Dict[str, int] = dataclasses.field(
         default_factory=lambda: {"cold": 0, "warm": 0, "hot": 0})
+    # drop causes (surfaced in RunMetrics only when the fault layer is
+    # active): "aged" = timed out in queue (drop_after / deadline,
+    # incl. end-of-run flush), "shed" = brownout admission rejection at
+    # arrival, "killed" = lost mid-flight to a kill with no retry left
+    drop_kinds: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {"aged": 0, "shed": 0, "killed": 0})
+    # predicted serving capacity (RPS) of the current non-excluded pod
+    # set — refreshed with pod_order, read by admission control
+    est_capacity: float = 0.0
     next_arrival: int = 0
     timeout_at: float = -np.inf   # latest batch-timeout wakeup scheduled
     pod_order: List = dataclasses.field(default_factory=list)
@@ -215,6 +247,53 @@ class EventEngine:
         self.preempt: Dict[str, int] = {
             "reclaims": 0, "drained_batches": 0, "killed_batches": 0,
             "requeued_requests": 0, "dropped_in_flight": 0}
+        # ---- fault injection + resilience (core/faults.py) ----
+        # all inert (and cost-free on the hot path) unless armed: the
+        # injector draws from its own dedicated streams and the
+        # resilience machinery only changes gated code paths, so
+        # fault-free runs stay bitwise identical to legacy traces
+        fm = cfg.faults
+        horizon = cfg.duration_s + cfg.drop_after_s
+        self._injector = (FaultInjector(fm, cfg.seed, horizon)
+                          if fm is not None and fm.is_active else None)
+        res = cfg.resilience
+        self._res = res if res is not None and res.is_active else None
+        self._health = (HealthTracker(res)
+                        if self._res is not None and res.quarantine_active
+                        else None)
+        self._admit = self._res is not None and res.admission_active
+        self._admit_wait = (res.deadline_s * res.admission_headroom
+                            if self._admit else 0.0)
+        self._slow: Dict[str, tuple] = {}   # pod_id -> (until, factor)
+        self.fault_counts: Dict[str, int] = {
+            "chip_failures": 0, "stragglers": 0, "cache_losses": 0,
+            "blackouts": 0, "quarantines": 0}
+        if self._injector is not None:
+            self.fault_counts["blackouts"] = len(self._injector.blackouts)
+        self.retries = 0                    # requeues granted by the policy
+        # open capacity outages [fn_id, t_open, target ready-pod count]
+        # opened by chip failures, closed when the replacement capacity
+        # is READY again (checked at autoscale ticks); downtime is
+        # integrated between events exactly like cost/fragmentation
+        self._outages: List[list] = []
+        self._down_rate = 0.0
+        self.downtime = 0.0
+        self.mttr_samples: List[float] = []
+
+    @property
+    def fault_layer_active(self) -> bool:
+        """Whether this run carries an armed fault model or resilience
+        config — the gate for the fault fields in ``RunMetrics``."""
+        return self._injector is not None or self._res is not None
+
+    def availability(self) -> float:
+        """1 minus the fraction of the integrated horizon during which
+        at least one function had a capacity outage open (a chip
+        hard-failure not yet made whole by READY replacement pods)."""
+        horizon = getattr(self, "_integrated_to", 0.0)
+        if horizon <= 0:
+            return 1.0
+        return max(0.0, 1.0 - self.downtime / horizon)
 
     # ---- event queue -------------------------------------------------------
     def _push(self, t: float, kind: int, st) -> None:
@@ -236,13 +315,14 @@ class EventEngine:
             self._thpt_cache[key] = v
         return v
 
-    def _service(self, st: FunctionState, batch: int, pod) -> float:
-        """One batch's service time: the deterministic wall-clock from
-        the shared lattice table (on the pod's host device type) times
-        a fresh lognormal noise draw."""
+    def _service(self, st: FunctionState, batch: int, pod) -> tuple:
+        """One batch's service time as ``(predicted, drawn)``: the
+        deterministic wall-clock from the shared lattice table (on the
+        pod's host device type), and that times a fresh lognormal noise
+        draw. The predicted half is the health tracker's baseline."""
         det = self._svc_table.lat(st.spec, batch, pod.sm, pod.quota,
                                   pod.gpu_type)
-        return det * float(self.rng.lognormal(
+        return det, det * float(self.rng.lognormal(
             mean=0.0, sigma=perf_model.SERVICE_NOISE_SIGMA))
 
     def _refresh_pods(self, st: FunctionState) -> None:
@@ -260,13 +340,26 @@ class EventEngine:
                 st.completed.extend(rt.inflight)
         st.pod_order = sorted(pods, key=lambda p: -self._thpt(st, p))
         st.maybe_idle = True
+        if self._admit:
+            # admission control's drain-capacity estimate: every pod
+            # that will take work (cold-starting pods count — they are
+            # capacity within the deadline horizon; doomed/quarantined
+            # ones never take new batches)
+            st.est_capacity = sum(self._thpt(st, p) for p in st.pod_order
+                                  if not p.doomed and not p.quarantined)
 
     def _shed(self, t: float, st: FunctionState) -> None:
         q = st.queue
         drop_after = self.cfg.drop_after_s
+        if self._res is not None and self._res.deadline_s > 0:
+            # a queued request past its deadline is already dead to the
+            # caller — age it out now instead of at drop_after_s
+            drop_after = min(drop_after, self._res.deadline_s)
+        kinds = st.drop_kinds
         while q and t - q[0].arrival > drop_after:
             q.popleft()
             st.dropped += 1
+            kinds["aged"] += 1
 
     def _any_work_left(self, now: float) -> bool:
         return any(st.work_left(now) for st in self.fns.values())
@@ -306,9 +399,24 @@ class EventEngine:
         i, n = st.next_arrival, len(arr)
         q = st.queue
         fid = st.fid
-        while i < n and arr[i] <= t:
-            q.append(Request(fid, arr[i]))
-            i += 1
+        if self._admit:
+            # SLO-aware brownout: reject an arrival outright when the
+            # backlog already needs more than the deadline headroom to
+            # drain at current capacity — an explicit fast failure
+            # instead of burning the request's latency budget in queue
+            max_q = st.est_capacity * self._admit_wait
+            kinds = st.drop_kinds
+            while i < n and arr[i] <= t:
+                if q and len(q) >= max_q:
+                    st.dropped += 1
+                    kinds["shed"] += 1
+                else:
+                    q.append(Request(fid, arr[i]))
+                i += 1
+        else:
+            while i < n and arr[i] <= t:
+                q.append(Request(fid, arr[i]))
+                i += 1
         st.next_arrival = i
         if i < n:
             self._push(arr[i], ARRIVAL, st)
@@ -320,6 +428,18 @@ class EventEngine:
 
     def _on_autoscale(self, t: float, st: FunctionState) -> None:
         cfg = self.cfg
+        if self._injector is not None and self._injector.in_blackout(t):
+            # control-plane blackout: the timer fires but the policy is
+            # unreachable — no scaling decision, no replacement capacity,
+            # no outage-recovery bookkeeping. Aging and dispatch keep
+            # running (the data plane is fine), and the timer chain
+            # stays alive so the tick after the window acts normally.
+            self._shed(t, st)
+            nxt = t + cfg.autoscale_interval_s
+            if nxt <= cfg.duration_s or self._any_work_left(t):
+                self._push(nxt, AUTOSCALE, st)
+            self._dispatch(t, st)
+            return
         self._shed(t, st)
         observed = (st.observed_in_window(t)
                     / max(min(t, OBS_WINDOW_S), 1e-9) if t > 0 else 0.0)
@@ -344,6 +464,9 @@ class EventEngine:
         if nxt <= cfg.duration_s or self._any_work_left(t):
             self._push(nxt, AUTOSCALE, st)
         self._schedule_reclaims(t)
+        self._schedule_faults(t)
+        if self._outages:
+            self._close_recovered_outages(t)
         self._dispatch(t, st)
 
     # ---- spot reclaims -----------------------------------------------------
@@ -412,20 +535,16 @@ class EventEngine:
                 st.completed.extend(rt.inflight)
             else:                    # killed mid-batch
                 self.preempt["killed_batches"] += 1
-                if self.cfg.reclaim_requeue:
-                    requeue.setdefault(st.fid, []).extend(rt.inflight)
-                    self.preempt["requeued_requests"] += len(rt.inflight)
-                else:
-                    st.dropped += len(rt.inflight)
-                    self.preempt["dropped_in_flight"] += len(rt.inflight)
+                keep = self._apply_retry_policy(t, st, rt.inflight)
+                if keep:
+                    requeue.setdefault(st.fid, []).extend(keep)
+                    self.preempt["requeued_requests"] += len(keep)
+                dead = len(rt.inflight) - len(keep)
+                if dead:
+                    self.preempt["dropped_in_flight"] += dead
             rt.inflight = []
         for fid, reqs in requeue.items():
-            st = affected[fid]
-            # rejoin at the queue head in arrival order (they are older
-            # than anything still queued — FIFO and _shed rely on it)
-            for r in sorted(reqs, key=lambda r: r.arrival, reverse=True):
-                r.start = None
-                st.queue.appendleft(r)
+            self._requeue(t, affected[fid], reqs)
         self.recon.remove_gpu(uuid, now=t)
         self._reclaim_scheduled.discard(uuid)
         for st in affected.values():
@@ -433,6 +552,218 @@ class EventEngine:
             self._dispatch(t, st)
         self._cost_rates = self.cost.rates(self.recon)
         self._frag_rate = self.recon.fragmentation()
+
+    # ---- fault injection + resilience (core/faults.py) ---------------------
+    def _apply_retry_policy(self, t: float, st: FunctionState,
+                            reqs: List[Request]) -> List[Request]:
+        """Decide the fate of a killed batch's in-flight requests:
+        returns the ones to requeue, accounts the rest as "killed"
+        drops. Without a resilience config this is the legacy boolean
+        ``reclaim_requeue`` (all or nothing); with one, each request is
+        retried only while it has budget left (``max_retries``) and —
+        when deadlines are armed — can still complete in time after
+        ``retry_backoff_s``."""
+        res = self._res
+        if res is None:
+            if self.cfg.reclaim_requeue:
+                return list(reqs)
+            st.dropped += len(reqs)
+            st.drop_kinds["killed"] += len(reqs)
+            return []
+        keep: List[Request] = []
+        dead = 0
+        for r in reqs:
+            if (r.retries < res.max_retries
+                    and (res.deadline_s <= 0
+                         or t + res.retry_backoff_s
+                         <= r.arrival + res.deadline_s)):
+                r.retries += 1
+                self.retries += 1
+                keep.append(r)
+            else:
+                dead += 1
+        if dead:
+            st.dropped += dead
+            st.drop_kinds["killed"] += dead
+        return keep
+
+    def _requeue(self, t: float, st: FunctionState,
+                 reqs: List[Request]) -> None:
+        """Requeue retried requests at the queue head in arrival order
+        (they are older than anything still queued — FIFO and ``_shed``
+        rely on it), after ``retry_backoff_s`` when armed."""
+        res = self._res
+        if res is not None and res.retry_backoff_s > 0:
+            self._push(t + res.retry_backoff_s, RETRY, (st.fid, reqs))
+            return
+        for r in sorted(reqs, key=lambda r: r.arrival, reverse=True):
+            r.start = None
+            st.queue.appendleft(r)
+
+    def _on_retry(self, t: float, payload) -> None:
+        """A backoff window closed: the retried requests rejoin their
+        function's queue head and dispatch re-scans."""
+        fid, reqs = payload
+        st = self.fns.get(fid)
+        if st is None:
+            return
+        for r in sorted(reqs, key=lambda r: r.arrival, reverse=True):
+            r.start = None
+            st.queue.appendleft(r)
+        self._dispatch(t, st)
+
+    def _schedule_faults(self, t: float) -> None:
+        """Draw fault times for every live chip / pod / node that has
+        none yet (fresh entities appear at autoscale events, so this
+        runs at seed time and after each policy tick — mirroring
+        ``_schedule_reclaims``). Each process draws from its own
+        dedicated stream in entity-creation order: deterministic for a
+        given seed and decision history."""
+        inj = self._injector
+        if inj is None:
+            return
+        m = inj.model
+        horizon = inj.horizon_s
+        if m.chip_failure_rate_per_hour > 0:
+            for g in self.recon.gpus.values():
+                if g.uuid in inj.chip_drawn:
+                    continue
+                inj.chip_drawn.add(g.uuid)
+                tf = inj.draw_chip_failure(t)
+                if tf <= horizon:
+                    self._push(tf, CHIP_FAIL, g.uuid)
+        if m.straggler_rate_per_hour > 0:
+            for g in self.recon.gpus.values():
+                for p in g.pods:
+                    if p.pod_id in inj.pod_drawn:
+                        continue
+                    inj.pod_drawn.add(p.pod_id)
+                    ts = inj.draw_straggler(t)
+                    if ts <= horizon:
+                        self._push(ts, POD_FAULT, ("straggler", p.pod_id))
+        if m.cache_loss_rate_per_hour > 0:
+            for g in self.recon.gpus.values():
+                if g.node in inj.node_drawn:
+                    continue
+                inj.node_drawn.add(g.node)
+                tc = inj.draw_cache_loss(t)
+                if tc <= horizon:
+                    self._push(tc, POD_FAULT, ("cache_loss", g.node))
+
+    def _on_chip_fail(self, t: float, uuid: str) -> None:
+        """Chip hard-failure: instant kill, no grace window. Finished
+        batches deliver (their completion predates the failure);
+        running batches go through the retry policy; the chip leaves
+        through the same ``remove_gpu`` path a reclaim kill uses; and a
+        capacity outage opens per affected function, closed when its
+        READY pod count recovers (MTTR / availability accounting)."""
+        g = self.recon.gpus.get(uuid)
+        if g is None:
+            return   # already scaled away or reclaimed
+        self.fault_counts["chip_failures"] += 1
+        affected: Dict[str, FunctionState] = {}
+        requeue: Dict[str, List[Request]] = {}
+        for pod in g.pods:
+            st = self.fns.get(pod.fn_id)
+            if st is None:
+                continue
+            affected[st.fid] = st
+            rt = st.runtimes.pop(pod.pod_id, None)
+            if rt is None or not rt.inflight:
+                continue
+            if rt.busy_until <= t:   # finished before the failure
+                for r in rt.inflight:
+                    r.completion = rt.busy_until
+                st.completed.extend(rt.inflight)
+            else:                    # killed mid-batch, instantly
+                keep = self._apply_retry_policy(t, st, rt.inflight)
+                if keep:
+                    requeue.setdefault(st.fid, []).extend(keep)
+            rt.inflight = []
+        for st in affected.values():
+            # outage target: the pre-failure READY capacity headcount
+            target = sum(1 for p in st.pod_order
+                         if not p.doomed and not p.quarantined)
+            if any(p.fn_id == st.fid and not p.standby for p in g.pods):
+                self._outages.append([st.fid, t, target])
+        self.recon.remove_gpu(uuid, now=t)
+        self._reclaim_scheduled.discard(uuid)
+        for fid, reqs in requeue.items():
+            self._requeue(t, affected[fid], reqs)
+        for st in affected.values():
+            self._refresh_pods(st)
+            self._dispatch(t, st)
+        self._down_rate = 1.0 if self._outages else 0.0
+        self._cost_rates = self.cost.rates(self.recon)
+        self._frag_rate = self.recon.fragmentation()
+
+    def _close_recovered_outages(self, t: float) -> None:
+        """Close every outage whose function has its READY (non-doomed,
+        non-quarantined) pod count back at the pre-failure target;
+        record each repair time for MTTR."""
+        still = []
+        for o in self._outages:
+            fid, t0, target = o
+            st = self.fns.get(fid)
+            ready = (sum(1 for p in st.pod_order
+                         if p.ready_at <= t and not p.doomed
+                         and not p.quarantined)
+                     if st is not None else target)
+            if ready >= target:
+                self.mttr_samples.append(t - t0)
+            else:
+                still.append(o)
+        self._outages = still
+        self._down_rate = 1.0 if still else 0.0
+
+    def _on_pod_fault(self, t: float, payload) -> None:
+        """A pod-scoped fault lands: open a straggler window (service
+        times inflate until it closes) or drop a node's host weight
+        cache. Each entity redraws its next fault after the current one
+        — a proper per-entity Poisson process — until it disappears."""
+        kind, target = payload
+        inj = self._injector
+        m = inj.model
+        if kind == "straggler":
+            if self.recon.pod(target) is None:
+                return   # pod scaled away; its process dies with it
+            self.fault_counts["stragglers"] += 1
+            until = t + m.straggler_duration_s
+            self._slow[target] = (until, m.straggler_factor)
+            nxt = inj.draw_straggler(until)
+        else:   # cache_loss
+            self.fault_counts["cache_losses"] += 1
+            tracker = getattr(self.recon, "modelstate", None)
+            if tracker is not None:
+                tracker.drop_node_cache(target, now=t)
+            nxt = inj.draw_cache_loss(t)
+        if nxt <= inj.horizon_s:
+            self._push(nxt, POD_FAULT, payload)
+
+    def _quarantine(self, t: float, st: FunctionState, pod) -> None:
+        """Health trip: pull the pod out of dispatch exactly like a
+        doomed chip (zero capacity, no new batches — the in-flight
+        batch finishes), schedule the lift, and reset its score so it
+        returns with a clean slate."""
+        if pod.quarantined or pod.doomed:
+            return
+        self.fault_counts["quarantines"] += 1
+        self.recon.set_quarantined(pod.pod_id, True)
+        self._health.reset(pod.pod_id)
+        self._push(t + self._res.quarantine_duration_s, QUAR_LIFT,
+                   (st.fid, pod.pod_id))
+
+    def _on_quarantine_lift(self, t: float, payload) -> None:
+        """A quarantine window closed: the pod (if still alive) rejoins
+        dispatch and the capacity model counts it again."""
+        fid, pod_id = payload
+        pod = self.recon.pod(pod_id)
+        if pod is not None and pod.quarantined:
+            self.recon.set_quarantined(pod_id, False)
+        st = self.fns.get(fid)
+        if st is not None:
+            self._refresh_pods(st)
+            self._dispatch(t, st)
 
     def _dispatch(self, t: float, st: FunctionState) -> None:
         """Idle ready pods pull batches, highest-throughput first.
@@ -458,8 +789,8 @@ class EventEngine:
                     r.completion = rt.busy_until
                 st.completed.extend(rt.inflight)
                 rt.inflight = []
-            if pod.doomed:
-                continue   # draining toward a reclaim kill: no new work
+            if pod.doomed or pod.quarantined:
+                continue   # draining (reclaim kill) or health-benched
             if not q:
                 any_idle = True  # free pod waiting for work
                 break
@@ -481,7 +812,17 @@ class EventEngine:
                     continue
             take = min(pod.batch, len(q))
             batch = [q.popleft() for _ in range(take)]
-            service = self._service(st, take, pod)
+            det, service = self._service(st, take, pod)
+            if self._injector is not None:
+                slow = self._slow.get(pod.pod_id)
+                if slow is not None and t < slow[0]:
+                    service *= slow[1]   # inside a straggler window
+            if self._health is not None and det > 0:
+                # health sample: the full observed/predicted ratio
+                # (noise AND straggler inflation); the batch that tripped
+                # the score still runs — quarantine bars the NEXT pull
+                if self._health.observe(pod.pod_id, service / det):
+                    self._quarantine(t, st, pod)
             for r in batch:
                 r.start = t
             rt.busy_until = t + service
@@ -505,11 +846,13 @@ class EventEngine:
                 self._push(st._arr[0], ARRIVAL, st)
             self._push(0.0, AUTOSCALE, st)
         self._schedule_reclaims(0.0)   # chips provisioned at prewarm
+        self._schedule_faults(0.0)
         self._cost_rates = self.cost.rates(self.recon)
         self._frag_rate = self.recon.fragmentation()
         usd_rate, gsec_rate = self._cost_rates
         frag_rate = self._frag_rate
-        usd = gsec = frag = 0.0
+        down_rate = self._down_rate
+        usd = gsec = frag = down = 0.0
         last_t = 0.0
         heap = self._heap
         pop = heapq.heappop
@@ -520,12 +863,14 @@ class EventEngine:
                 usd += usd_rate * (cutoff - last_t)
                 gsec += gsec_rate * (cutoff - last_t)
                 frag += frag_rate * (cutoff - last_t)
+                down += down_rate * (cutoff - last_t)
                 last_t = cutoff
                 break
             if t > last_t:
                 usd += usd_rate * (t - last_t)
                 gsec += gsec_rate * (t - last_t)
                 frag += frag_rate * (t - last_t)
+                down += down_rate * (t - last_t)
                 last_t = t
             self.now = t
             if kind == ARRIVAL:
@@ -534,21 +879,35 @@ class EventEngine:
                 self._on_autoscale(t, st)
                 usd_rate, gsec_rate = self._cost_rates
                 frag_rate = self._frag_rate
+                down_rate = self._down_rate
             elif kind == RECLAIM_NOTICE:   # payload is the chip uuid
                 self._on_reclaim_notice(t, st)
             elif kind == RECLAIM_KILL:     # chip leaves: rates change
                 self._on_reclaim_kill(t, st)
                 usd_rate, gsec_rate = self._cost_rates
                 frag_rate = self._frag_rate
+            elif kind == CHIP_FAIL:        # payload is the chip uuid
+                self._on_chip_fail(t, st)
+                usd_rate, gsec_rate = self._cost_rates
+                frag_rate = self._frag_rate
+                down_rate = self._down_rate
+            elif kind == POD_FAULT:        # payload is (kind, target)
+                self._on_pod_fault(t, st)
+            elif kind == RETRY:            # payload is (fn_id, requests)
+                self._on_retry(t, st)
+            elif kind == QUAR_LIFT:        # payload is (fn_id, pod_id)
+                self._on_quarantine_lift(t, st)
             else:
                 self._dispatch(t, st)
         if last_t < cfg.duration_s:  # idle pods accrue cost to end of run
             usd += usd_rate * (cfg.duration_s - last_t)
             gsec += gsec_rate * (cfg.duration_s - last_t)
             frag += frag_rate * (cfg.duration_s - last_t)
+            down += down_rate * (cfg.duration_s - last_t)
         self.cost.total_usd += usd
         self.cost.gpu_seconds += gsec
         self.frag_integral += frag
+        self.downtime += down
         self._integrated_to = max(last_t, cfg.duration_s)
         self._flush()
 
@@ -567,7 +926,15 @@ class EventEngine:
                     st.completed.append(r)
                 rt.inflight = []
             st.dropped += len(st.queue)
+            st.drop_kinds["aged"] += len(st.queue)
             st.queue.clear()
             # arrivals never injected (cutoff break) are dropped too
-            st.dropped += len(st._arr) - st.next_arrival
+            leftover = len(st._arr) - st.next_arrival
+            st.dropped += leftover
+            st.drop_kinds["aged"] += leftover
             st.next_arrival = len(st._arr)
+        # outages still open at the end of the horizon close there
+        horizon = getattr(self, "_integrated_to", 0.0)
+        for _, t0, _ in self._outages:
+            self.mttr_samples.append(max(0.0, horizon - t0))
+        self._outages = []

@@ -93,6 +93,17 @@ class RunMetrics:
     # (and absent from the JSON) unless the fleet declares a spot
     # market — legacy goldens stay byte-identical
     preemptions: Optional[Dict[str, int]] = None
+    # fault-layer accounting (core/faults.py): fault counts per kind,
+    # retries granted, the shed-vs-aged-vs-killed drop breakdown, mean
+    # time to recovery after chip failures (None when nothing failed),
+    # and capacity availability. All None (and absent from the JSON)
+    # unless the run armed a fault model or a resilience config —
+    # legacy goldens stay byte-identical
+    faults: Optional[Dict[str, int]] = None
+    retries: Optional[int] = None
+    drop_breakdown: Optional[Dict[str, int]] = None   # aged/killed/shed
+    mttr_s: Optional[float] = None
+    availability: Optional[float] = None
 
     # ---- construction ------------------------------------------------------
     @classmethod
@@ -149,6 +160,18 @@ class RunMetrics:
         preempt = None
         if any(getattr(t, "market", None) is not None for t, _ in fleet):
             preempt = dict(getattr(engine, "preempt", {}) or {})
+        # fault-layer runs carry the chaos/resilience accounting
+        faults = retries = drop_breakdown = mttr = avail = None
+        if getattr(engine, "fault_layer_active", False):
+            faults = dict(engine.fault_counts)
+            retries = int(engine.retries)
+            drop_breakdown = {"aged": 0, "killed": 0, "shed": 0}
+            for st in engine.fns.values():
+                for k in drop_breakdown:
+                    drop_breakdown[k] += st.drop_kinds.get(k, 0)
+            if engine.mttr_samples:
+                mttr = float(np.mean(engine.mttr_samples))
+            avail = float(engine.availability())
         return cls(
             scenario=scenario, policy=policy, seed=int(seed),
             duration_s=float(engine.cfg.duration_s),
@@ -163,7 +186,9 @@ class RunMetrics:
             peak_gpus=int(engine.peak_gpus),
             fragmentation=frag,
             start_kinds=start_kinds, time_to_ready_ms=ttr_ms,
-            preemptions=preempt)
+            preemptions=preempt,
+            faults=faults, retries=retries, drop_breakdown=drop_breakdown,
+            mttr_s=mttr, availability=avail)
 
     # ---- serialization -----------------------------------------------------
     def to_dict(self) -> dict:
@@ -183,6 +208,19 @@ class RunMetrics:
             d.pop("preemptions", None)
         else:
             d["preemptions"] = dict(sorted(d["preemptions"].items()))
+        if d.get("faults") is None:   # fault-layer-free runs omit all five
+            for k in ("faults", "retries", "drop_breakdown", "mttr_s",
+                      "availability"):
+                d.pop(k, None)
+        else:
+            d["faults"] = dict(sorted(d["faults"].items()))
+            d["drop_breakdown"] = dict(sorted((d["drop_breakdown"]
+                                               or {}).items()))
+            # mttr_s stays null when no outage ever opened
+            if d.get("mttr_s") is not None:
+                d["mttr_s"] = _jsonf(d["mttr_s"])
+            if d.get("availability") is not None:
+                d["availability"] = _jsonf(d["availability"])
         for k in ("duration_s", "cost_usd", "cost_per_1k_usd",
                   "gpu_seconds"):
             d[k] = _jsonf(d[k])

@@ -261,6 +261,13 @@ class NodeWeightCache:
         """Drop ``fn_id`` from the cache; True if it was present."""
         return self._entries.pop(fn_id, None) is not None
 
+    def clear(self) -> int:
+        """Drop every entry (host-cache-loss fault injection); returns
+        the number of entries lost."""
+        n = len(self._entries)
+        self._entries.clear()
+        return n
+
     def lru_order(self) -> List[str]:
         """Cached function ids, least-recently-used first."""
         return sorted(self._entries,
@@ -473,6 +480,25 @@ class ModelStateTracker:
         pod.start_kind = kind
         self.record_start(fn_id, kind, t)
         return t
+
+    def drop_node_cache(self, node: str, now: Optional[float] = None) -> int:
+        """Host-cache-loss fault (``core/faults.py``): drop every
+        weight entry cached on ``node`` — and any host fetch still in
+        flight toward it — so subsequent starts needing those weights
+        demote to COLD and pay the full object-store fetch. Returns
+        the number of cached entries lost (0 when the tracker is
+        passive or the node has no cache yet)."""
+        if self.is_passive:
+            return 0
+        if now is not None:
+            self._tick(now)
+        lost = 0
+        c = self._caches.get(node)
+        if c is not None:
+            lost = c.clear()
+        for key in [k for k in self._transfers if k[0] == node]:
+            del self._transfers[key]
+        return lost
 
     def on_pod_removed(self, pod, gpu, now: Optional[float] = None) -> None:
         """Demote on removal: when the last pod of a function leaves a

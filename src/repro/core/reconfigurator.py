@@ -215,6 +215,19 @@ class Reconfigurator:
             self._update_contrib(p)
         self.reclaim_log.append(kill_at if now is None else now)
 
+    def set_quarantined(self, pod_id: str, flag: bool) -> None:
+        """Flip the health-quarantine flag on ``pod_id`` and refresh its
+        cached capacity contribution: a quarantined pod is written off
+        by the HAS capacity model (it contributes zero), so the next
+        autoscale tick replaces it — exactly the doomed-chip drain
+        semantics, but reversible when the quarantine window lifts.
+        No-op for unknown pods (the straggler may have been scaled
+        away before its health score tripped)."""
+        pod = self._pods.get(pod_id)
+        if pod is not None and pod.quarantined != flag:
+            pod.quarantined = flag
+            self._update_contrib(pod)
+
     def remove_gpu(self, uuid: str, now: Optional[float] = None) -> None:
         """Forcibly remove chip ``uuid`` (spot ``RECLAIM_KILL``): every
         hosted pod is removed through the ordinary indexed path — with

@@ -13,6 +13,10 @@ class Request:
     arrival: float
     start: Optional[float] = None
     completion: Optional[float] = None
+    #: requeues consumed after mid-flight kills (chip failure / reclaim)
+    #: under a resilience retry policy — bounded by
+    #: ``ResilienceConfig.max_retries`` (core/faults.py)
+    retries: int = 0
 
     @property
     def latency(self) -> Optional[float]:

@@ -55,6 +55,10 @@ class PodAlloc:
     host chip received a spot ``RECLAIM_NOTICE``: it drains (finishes
     in-flight work, contributes zero capacity, receives no new batches)
     until the grace window closes and the chip is killed.
+    ``quarantined`` marks a pod whose health score tripped
+    (``core/faults.py``): same drain semantics as doomed — no dispatch,
+    zero capacity, skipped by ``Gateway.route`` — but the pod returns
+    to service when the quarantine window lifts.
     """
     fn_id: str
     sm: int                      # slices in its partition (1..sm_total)
@@ -68,6 +72,7 @@ class PodAlloc:
     standby: bool = False        # keep-warm pool member (not serving)
     start_kind: Optional[str] = None     # cold | warm | hot (lifecycle)
     doomed: bool = False         # host chip inside a reclaim grace window
+    quarantined: bool = False    # health-tripped straggler (faults.py)
 
     def __post_init__(self):
         if not self.pod_id:

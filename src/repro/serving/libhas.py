@@ -30,11 +30,16 @@ class LibHas:
 
     def check_memory(self, compiled) -> None:
         """cuMemAlloc-interception analogue: reject steps whose compiled
-        footprint exceeds the pod's budget."""
+        footprint exceeds the pod's budget. The footprint is the full
+        resident set of one step — arguments, scratch, AND outputs
+        (outputs are live allocations the step must fit alongside its
+        inputs; counting only args+temp under-reserved by the output
+        size and let over-budget steps through)."""
         if self.hbm_budget_bytes is None:
             return
         m = compiled.memory_analysis()
-        need = m.argument_size_in_bytes + m.temp_size_in_bytes
+        need = (m.argument_size_in_bytes + m.temp_size_in_bytes
+                + m.output_size_in_bytes)
         if need > self.hbm_budget_bytes:
             raise MemoryBudgetExceeded(
                 f"step needs {need} B > budget {self.hbm_budget_bytes} B")

@@ -23,9 +23,10 @@ import numpy as np
 
 from repro.configs import ARCHS
 from repro.configs.gpus import GPUMarket, spot
-from repro.core import (ClusterSimulator, FaSTGShareLikePolicy, FnSpec,
-                        HybridAutoScaler, KServeLikePolicy, LifecycleConfig,
-                        ModelStateTracker, Reconfigurator, SimConfig)
+from repro.core import (ClusterSimulator, FaSTGShareLikePolicy, FaultModel,
+                        FnSpec, HybridAutoScaler, KServeLikePolicy,
+                        LifecycleConfig, ModelStateTracker, Reconfigurator,
+                        ResilienceConfig, SimConfig)
 from repro.core.metrics import DEFAULT_MULTIPLIERS, RunMetrics
 from repro.core.multisim import MultiFunctionSimulator
 from repro.workloads import azure, generators
@@ -75,6 +76,13 @@ class Scenario:
     (``core/modelstate.py``): physics-derived cold starts, host-RAM
     weight caching, keep-warm pools, and pre-warming; None (the
     default) runs the legacy flat-constant cold-start physics.
+    ``faults`` attaches the fault-injection engine (``core/faults.py``)
+    and ``resilience`` the mitigation layer (deadlines + retries,
+    health quarantine, admission control); both default to None, which
+    keeps the engine's fault layer fully disarmed — the byte-identity
+    state of every legacy golden. ``sim_overrides`` passes extra
+    ``SimConfig`` keyword overrides (e.g. a tighter ``drop_after_s``
+    for overload scenarios).
     """
     name: str
     description: str
@@ -87,6 +95,9 @@ class Scenario:
     colocated: bool = False
     fleet: Optional[Tuple[Tuple[str, int], ...]] = None
     lifecycle: Optional[LifecycleConfig] = None
+    faults: Optional[FaultModel] = None
+    resilience: Optional[ResilienceConfig] = None
+    sim_overrides: Optional[Dict] = None
 
     def with_(self, **overrides) -> "Scenario":
         """A derived scenario (e.g. another arch, horizon, or fleet)."""
@@ -147,7 +158,9 @@ class Scenario:
                                          prewarm_lead_s=0.0)
             recon.attach_modelstate(ModelStateTracker(lc))
         whole = POLICIES[policy][1]
-        cfg = SimConfig(duration_s=dur, whole_gpu_cost=whole, seed=seed)
+        cfg = SimConfig(duration_s=dur, whole_gpu_cost=whole, seed=seed,
+                        faults=self.faults, resilience=self.resilience,
+                        **(self.sim_overrides or {}))
         factory = policy_factory or make_policy
         if self.colocated or len(specs) > 1:
             policies, arrs = {}, {}
@@ -423,3 +436,103 @@ register(Scenario(
     trace=generators.homogeneous_poisson,
     base_rps=600.0,
     fleet=(("v5e", 4), (V5E_SPOT_STORM, 24))))
+
+
+# ---- fault-injection scenarios ---------------------------------------------
+#
+# Each scenario arms the core/faults.py engine and ships with a
+# resilience-off control sharing the identical trace and fault draws,
+# so the goldens pin what each mitigation buys (and costs). Tuned so
+# the interesting dynamics land inside the 45 s golden window at
+# seed 42: the chip wave sees ~3 hard failures, the straggler regime
+# trips multiple quarantines, and the brownout runs saturated
+# end-to-end.
+
+_CHIP_FAILURE_WAVE = Scenario(
+    name="chip_failure_wave",
+    description="Steady load on a capped fleet under a hard-failure "
+                "regime (~3 instant chip losses in the window, no grace, "
+                "no reclaim notice). In-flight batches on the dead chip "
+                "are killed mid-service; the retry policy (2 retries, "
+                "0.5 s backoff, 10 s deadline) re-queues them instead of "
+                "dropping — zero killed-request drops versus the "
+                "control's mid-flight losses, at identical cost. MTTR "
+                "and availability meter the repair loop (replacement "
+                "capacity re-provisioned by the autoscaler).",
+    trace=generators.homogeneous_poisson,
+    base_rps=300.0,
+    max_gpus=6,
+    faults=FaultModel(chip_failure_rate_per_hour=120.0),
+    resilience=ResilienceConfig(deadline_s=10.0, max_retries=2,
+                                retry_backoff_s=0.5),
+    # in-flight work on a hard-failed chip is unrecoverable unless a
+    # retry policy exists: the legacy all-or-nothing requeue is off so
+    # the control actually loses what the retry policy saves
+    sim_overrides={"reclaim_requeue": False, "drop_after_s": 15.0})
+register(_CHIP_FAILURE_WAVE)
+
+register(_CHIP_FAILURE_WAVE.with_(
+    name="chip_failure_wave_control",
+    description="Resilience-off control for chip_failure_wave: the "
+                "identical trace and failure draws with no retry "
+                "policy — every batch in flight on a dying chip is "
+                "dropped on the floor (killed-drop accounting). The "
+                "goodput floor the retry policy must beat.",
+    resilience=None))
+
+_STRAGGLER_TAIL = Scenario(
+    name="straggler_tail",
+    description="Steady load where pods intermittently degrade to 10x "
+                "service time for ~30 s (thermal throttling / noisy "
+                "neighbor). Health scoring (EWMA observed-vs-predicted "
+                "service ratio) quarantines the degraded pod out of "
+                "dispatch after 2 slow batches; the keep-warm pool "
+                "(model-state lifecycle) backfills warm so the bench "
+                "costs little — p99 and SLO violations both land well "
+                "under the quarantine-off control at <10% extra cost.",
+    trace=generators.homogeneous_poisson,
+    base_rps=300.0,
+    max_gpus=6,
+    lifecycle=LIFECYCLE_CACHED,
+    faults=FaultModel(straggler_rate_per_hour=50.0, straggler_factor=10.0,
+                      straggler_duration_s=30.0),
+    resilience=ResilienceConfig(quarantine_ratio=3.0,
+                                quarantine_min_samples=2,
+                                quarantine_duration_s=10.0))
+register(_STRAGGLER_TAIL)
+
+register(_STRAGGLER_TAIL.with_(
+    name="straggler_tail_control",
+    description="Quarantine-off control for straggler_tail: identical "
+                "trace, stragglers, and keep-warm lifecycle, but "
+                "degraded pods keep pulling batches — every batch they "
+                "take is a 10x-latency batch, setting the tail the "
+                "health scorer must cut.",
+    resilience=None))
+
+_BROWNOUT_OVERLOAD = Scenario(
+    name="brownout_overload",
+    description="Sustained arrivals beyond what the one-chip fleet can "
+                "serve inside SLO. Admission control brownout-sheds "
+                "lowest-headroom requests at arrival (queue capped at "
+                "est_capacity * deadline * headroom with an SLO-scale "
+                "50 ms deadline), so admitted requests still meet SLO "
+                "instead of everything aging into violation — the "
+                "2.0x violation rate drops well below the shed-nothing "
+                "control at identical cost.",
+    trace=generators.homogeneous_poisson,
+    base_rps=400.0,
+    max_gpus=1,
+    resilience=ResilienceConfig(deadline_s=0.05, max_retries=0,
+                                admission_headroom=0.5),
+    sim_overrides={"drop_after_s": 10.0})
+register(_BROWNOUT_OVERLOAD)
+
+register(_BROWNOUT_OVERLOAD.with_(
+    name="brownout_overload_control",
+    description="Admission-off control for brownout_overload: the "
+                "identical saturating trace with no shedding — queues "
+                "grow until drop-after aging, nearly every request "
+                "violates 2.0x SLO. The violation ceiling brownout "
+                "shedding must undercut.",
+    resilience=None))

@@ -7,6 +7,7 @@
   * the designated public APIs stay documented
     (tools/check_docstrings.py).
 """
+import dataclasses
 import pathlib
 import re
 import sys
@@ -84,6 +85,38 @@ def test_cold_start_lifecycle_doc_drift():
     for tier in WeightState:
         assert tier.name in section, (
             f"weight tier {tier.name} not described in the cold-start doc")
+
+
+def test_fault_lifecycle_doc_drift():
+    """architecture.md's "life of a fault" section must exist and stay
+    in sync with the code: every FaultModel fault kind (counter key),
+    every resilience mechanism's tripwire knob, and the surfaced
+    metrics fields are all named in the walkthrough."""
+    from repro.core.faults import FaultModel, ResilienceConfig
+
+    text = ARCHITECTURE_MD.read_text()
+    assert "## The life of a fault" in text
+    section = text.split("## The life of a fault", 1)[1]
+    section = section.split("\n## ", 1)[0]
+    # one rate knob per fault kind — each kind must be walked through
+    for knob in ("chip_failure_rate_per_hour", "straggler_rate_per_hour",
+                 "cache_loss_rate_per_hour", "blackout_rate_per_hour"):
+        assert knob in dataclasses.asdict(FaultModel()), knob
+    for kind in ("chip hard failure", "straggler", "host-cache loss",
+                 "blackout"):
+        assert kind in section, (
+            f"fault kind {kind!r} missing from the fault walkthrough")
+    # the three resilience mechanisms, by their configuring knob
+    for knob in ("max_retries", "quarantine_ratio", "headroom"):
+        assert knob in dataclasses.asdict(ResilienceConfig()) or any(
+            knob in k for k in dataclasses.asdict(ResilienceConfig())), knob
+        assert knob in section, (
+            f"resilience knob {knob!r} missing from the fault walkthrough")
+    # the surfaced accounting
+    for needle in ("availability", "mttr_s", "shed", "killed", "aged",
+                   "QUAR_LIFT", "core/faults.py", "tests/test_faults.py"):
+        assert needle in section, (
+            f"{needle!r} missing from the fault walkthrough")
 
 
 def test_calibration_doc_drift():

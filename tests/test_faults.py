@@ -1,0 +1,401 @@
+"""Fault-injection + resilience suite (core/faults.py and its engine
+integration): config validation, the dedicated rng streams, request
+conservation under arbitrary fault schedules, byte-identity of inert
+configs, each fault kind's engine path, and the golden-pinned
+acceptance claims of the three chaos scenarios.
+
+See docs/architecture.md "The life of a fault".
+"""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import FaultInjector, FaultModel, HealthTracker, \
+    ResilienceConfig
+from repro.core.metrics import RunMetrics
+from repro.core.modelstate import LifecycleConfig, ModelStateTracker, \
+    NodeWeightCache
+from repro.core.reconfigurator import Reconfigurator
+from repro.workloads.scenarios import get_scenario
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "goldens"
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as hyp_st
+    HAVE_HYPOTHESIS = True
+except ImportError:      # container ships without hypothesis: seeded
+    HAVE_HYPOTHESIS = False   # fallback below runs the same property
+
+
+def _load(name):
+    path = GOLDEN_DIR / f"{name}__has.json"
+    if not path.exists():
+        pytest.skip("fault golden corpus not generated yet")
+    return RunMetrics.load(path)
+
+
+# ---------------------------------------------------------------------------
+# Config validation and inertness
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bad", [
+    dict(chip_failure_rate_per_hour=-1.0),
+    dict(straggler_rate_per_hour=-0.1),
+    dict(cache_loss_rate_per_hour=-5.0),
+    dict(blackout_rate_per_hour=-1.0),
+    dict(straggler_factor=0.5),
+    dict(straggler_duration_s=0.0),
+    dict(blackout_duration_s=-2.0),
+])
+def test_fault_model_rejects_invalid_fields(bad):
+    with pytest.raises(ValueError):
+        FaultModel(**bad)
+
+
+@pytest.mark.parametrize("bad", [
+    dict(deadline_s=-1.0),
+    dict(retry_backoff_s=-0.5),
+    dict(max_retries=-1),
+    dict(health_alpha=0.0),
+    dict(health_alpha=1.5),
+    dict(quarantine_ratio=-1.0),
+    dict(quarantine_min_samples=0),
+    dict(quarantine_duration_s=0.0),
+    dict(admission_headroom=-0.1),
+])
+def test_resilience_config_rejects_invalid_fields(bad):
+    with pytest.raises(ValueError):
+        ResilienceConfig(**bad)
+
+
+def test_default_configs_are_inert():
+    assert not FaultModel().is_active
+    r = ResilienceConfig()
+    assert not r.is_active and not r.quarantine_active \
+        and not r.admission_active
+    # admission needs BOTH a headroom and a deadline to measure against
+    assert not ResilienceConfig(admission_headroom=1.0).admission_active
+    assert ResilienceConfig(deadline_s=5.0,
+                            admission_headroom=1.0).admission_active
+
+
+def test_zero_rate_model_is_byte_identical_to_no_faults_golden():
+    """A zero-rate FaultModel must leave the engine on the exact legacy
+    code paths: the serialized record equals the committed golden."""
+    path = GOLDEN_DIR / "steady_poisson__has.json"
+    if not path.exists():
+        pytest.skip("golden corpus not generated yet")
+    scen = get_scenario("steady_poisson").with_(faults=FaultModel())
+    m = scen.run(policy="has", seed=42, duration_s=45.0).metrics
+    assert json.loads(json.dumps(m.to_dict())) == json.loads(
+        path.read_text())
+
+
+# ---------------------------------------------------------------------------
+# The injector's rng streams
+# ---------------------------------------------------------------------------
+
+def test_injector_streams_are_seeded_and_decorrelated():
+    fm = FaultModel(chip_failure_rate_per_hour=10.0,
+                    straggler_rate_per_hour=10.0,
+                    cache_loss_rate_per_hour=10.0)
+    a = FaultInjector(fm, seed=7, horizon_s=100.0)
+    b = FaultInjector(fm, seed=7, horizon_s=100.0)
+    # reproducible per seed
+    assert a.draw_chip_failure(0.0) == b.draw_chip_failure(0.0)
+    assert a.draw_straggler(0.0) == b.draw_straggler(0.0)
+    # distinct streams: same rate, same seed, different first draws
+    c = FaultInjector(fm, seed=7, horizon_s=100.0)
+    draws = {c.draw_chip_failure(0.0), c.draw_straggler(0.0),
+             c.draw_cache_loss(0.0)}
+    assert len(draws) == 3
+    # a different seed moves every stream
+    d = FaultInjector(fm, seed=8, horizon_s=100.0)
+    assert d.draw_chip_failure(0.0) != b.draw_chip_failure(0.0)
+
+
+def test_blackout_windows_precomputed_and_ordered():
+    fm = FaultModel(blackout_rate_per_hour=600.0, blackout_duration_s=3.0)
+    inj = FaultInjector(fm, seed=3, horizon_s=60.0)
+    assert inj.blackouts, "600/hr over 60 s should draw windows"
+    prev_end = 0.0
+    for a, b in inj.blackouts:
+        assert b - a == pytest.approx(3.0)
+        assert a >= prev_end and a <= 60.0   # ordered, non-overlapping
+        prev_end = b
+        assert inj.in_blackout((a + b) / 2)
+        assert not inj.in_blackout(a - 1e-6)
+    assert not inj.in_blackout(prev_end + 1e-6)
+    # zero rate: no windows at all
+    assert FaultInjector(FaultModel(straggler_rate_per_hour=1.0), 3,
+                         60.0).blackouts == []
+
+
+# ---------------------------------------------------------------------------
+# Health scoring
+# ---------------------------------------------------------------------------
+
+def test_health_tracker_trips_after_min_samples():
+    cfg = ResilienceConfig(quarantine_ratio=1.5, quarantine_min_samples=3,
+                           health_alpha=0.5)
+    h = HealthTracker(cfg)
+    # a 4x straggler: EWMA climbs but min_samples gates the trip
+    assert not h.observe("p", 4.0)     # n=1
+    assert not h.observe("p", 4.0)     # n=2
+    assert h.observe("p", 4.0)         # n=3 and EWMA >> 1.5
+    assert h.score("p") > 1.5
+    # reset forgets the history (fresh start after a lift)
+    h.reset("p")
+    assert h.score("p") == 1.0
+    assert not h.observe("p", 4.0)
+
+
+def test_health_tracker_ignores_healthy_noise():
+    cfg = ResilienceConfig(quarantine_ratio=1.5, quarantine_min_samples=3)
+    h = HealthTracker(cfg)
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        assert not h.observe("p", float(rng.lognormal(0.0, 0.03)))
+    assert h.score("p") == pytest.approx(1.0, abs=0.05)
+
+
+def test_reconfigurator_set_quarantined_roundtrip():
+    from repro.core.vgpu import PodAlloc
+    recon = Reconfigurator(num_gpus=1)
+    pod = PodAlloc(fn_id="f", sm=2, quota=0.5, batch=2)
+    assert recon.place_pod(pod) is not None
+    assert not pod.quarantined
+    recon.set_quarantined(pod.pod_id, True)
+    assert pod.quarantined
+    recon.set_quarantined(pod.pod_id, True)    # idempotent
+    recon.set_quarantined(pod.pod_id, False)
+    assert not pod.quarantined
+    recon.set_quarantined("no-such-pod", True)  # unknown pod: no-op
+
+
+# ---------------------------------------------------------------------------
+# Host-cache loss
+# ---------------------------------------------------------------------------
+
+def test_node_cache_clear_and_drop_node_cache():
+    c = NodeWeightCache(capacity_bytes=8e9)
+    c.admit("fn-a", 1e9)
+    c.admit("fn-b", 2e9)
+    assert c.clear() == 2
+    assert not c.contains("fn-a") and c.used_bytes == 0
+
+    tracker = ModelStateTracker(LifecycleConfig(derive_from_physics=True,
+                                                host_cache_gb=8.0))
+    assert not tracker.is_passive
+    tracker._cache("node-1").admit("fn-a", 1e9)
+    assert tracker.host_cached("node-1", "fn-a")
+    assert tracker.drop_node_cache("node-1", now=1.0) == 1
+    assert not tracker.host_cached("node-1", "fn-a")
+    # unknown node / passive tracker: harmless zero
+    assert tracker.drop_node_cache("nowhere") == 0
+    assert ModelStateTracker().drop_node_cache("node-1") == 0
+
+
+# ---------------------------------------------------------------------------
+# Conservation property: arrived == completed + dropped under any faults
+# ---------------------------------------------------------------------------
+
+def _conservation_case(chip_rate, strag_rate, cache_rate, black_rate,
+                       deadline, retries, q_ratio, headroom, seed):
+    fm = FaultModel(chip_failure_rate_per_hour=chip_rate,
+                    straggler_rate_per_hour=strag_rate,
+                    straggler_factor=6.0, straggler_duration_s=5.0,
+                    cache_loss_rate_per_hour=cache_rate,
+                    blackout_rate_per_hour=black_rate,
+                    blackout_duration_s=3.0)
+    res = ResilienceConfig(deadline_s=deadline, max_retries=retries,
+                           retry_backoff_s=0.25 if retries else 0.0,
+                           quarantine_ratio=q_ratio,
+                           quarantine_min_samples=2,
+                           quarantine_duration_s=4.0,
+                           admission_headroom=headroom)
+    scen = get_scenario("steady_poisson").with_(
+        base_rps=120.0, max_gpus=4, faults=fm,
+        resilience=res if res.is_active else None,
+        sim_overrides={"reclaim_requeue": False, "drop_after_s": 8.0})
+    out = scen.run(policy="has", seed=seed, duration_s=12.0)
+    m = out.metrics
+    assert m.n_arrived == m.n_completed + m.n_dropped, (
+        f"conservation violated: {m.n_arrived} != "
+        f"{m.n_completed} + {m.n_dropped}")
+    d = m.to_dict()
+    if d.get("drop_breakdown") is not None:
+        assert sum(d["drop_breakdown"].values()) == m.n_dropped
+    if d.get("availability") is not None:
+        assert 0.0 <= d["availability"] <= 1.0
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(chip=hyp_st.sampled_from([0.0, 150.0, 600.0]),
+           strag=hyp_st.sampled_from([0.0, 300.0]),
+           cache=hyp_st.sampled_from([0.0, 300.0]),
+           black=hyp_st.sampled_from([0.0, 240.0]),
+           deadline=hyp_st.sampled_from([0.0, 0.5, 6.0]),
+           retries=hyp_st.integers(min_value=0, max_value=2),
+           q_ratio=hyp_st.sampled_from([0.0, 2.0]),
+           headroom=hyp_st.sampled_from([0.0, 0.5]),
+           seed=hyp_st.integers(min_value=0, max_value=10_000))
+    def test_conservation_under_arbitrary_fault_schedules(
+            chip, strag, cache, black, deadline, retries, q_ratio,
+            headroom, seed):
+        _conservation_case(chip, strag, cache, black, deadline, retries,
+                           q_ratio, headroom, seed)
+else:
+    @pytest.mark.parametrize("case_seed", range(8))
+    def test_conservation_under_arbitrary_fault_schedules(case_seed):
+        """Seeded fallback for the hypothesis property: random fault/
+        resilience mixes must conserve requests exactly."""
+        rng = np.random.default_rng(1234 + case_seed)
+        _conservation_case(
+            chip_rate=float(rng.choice([0.0, 150.0, 600.0])),
+            strag_rate=float(rng.choice([0.0, 300.0])),
+            cache_rate=float(rng.choice([0.0, 300.0])),
+            black_rate=float(rng.choice([0.0, 240.0])),
+            deadline=float(rng.choice([0.0, 0.5, 6.0])),
+            retries=int(rng.integers(0, 3)),
+            q_ratio=float(rng.choice([0.0, 2.0])),
+            headroom=float(rng.choice([0.0, 0.5])),
+            seed=int(rng.integers(0, 10_000)))
+
+
+# ---------------------------------------------------------------------------
+# Each fault kind's engine path (hot rates, short horizons)
+# ---------------------------------------------------------------------------
+
+def _hot_run(fm, res=None, seed=42, duration_s=15.0, **over):
+    scen = get_scenario("steady_poisson").with_(
+        base_rps=over.pop("base_rps", 150.0),
+        max_gpus=over.pop("max_gpus", 4),
+        faults=fm, resilience=res,
+        sim_overrides=over or None)
+    return scen.run(policy="has", seed=seed, duration_s=duration_s)
+
+
+def test_chip_failures_kill_without_retry_and_requeue_with():
+    fm = FaultModel(chip_failure_rate_per_hour=800.0)
+    ctrl = _hot_run(fm, reclaim_requeue=False).metrics.to_dict()
+    assert ctrl["faults"]["chip_failures"] > 0
+    assert ctrl["drop_breakdown"]["killed"] > 0
+    assert ctrl["retries"] == 0
+
+    res = ResilienceConfig(deadline_s=10.0, max_retries=3)
+    resil = _hot_run(fm, res, reclaim_requeue=False).metrics.to_dict()
+    assert resil["faults"]["chip_failures"] > 0
+    assert resil["retries"] > 0
+    assert resil["drop_breakdown"]["killed"] < ctrl["drop_breakdown"]["killed"]
+    assert resil["mttr_s"] is None or resil["mttr_s"] > 0
+    assert 0.0 <= resil["availability"] <= 1.0
+
+
+def test_retry_budget_of_zero_behaves_like_no_requeue():
+    fm = FaultModel(chip_failure_rate_per_hour=800.0)
+    res = ResilienceConfig(deadline_s=10.0, max_retries=0)
+    d = _hot_run(fm, res, reclaim_requeue=True).metrics.to_dict()
+    if d["faults"]["chip_failures"]:
+        assert d["retries"] == 0   # budget 0 overrides legacy requeue=True
+
+
+def test_stragglers_trip_quarantines():
+    fm = FaultModel(straggler_rate_per_hour=2000.0, straggler_factor=8.0,
+                    straggler_duration_s=6.0)
+    res = ResilienceConfig(quarantine_ratio=2.0, quarantine_min_samples=2,
+                           quarantine_duration_s=3.0)
+    out = _hot_run(fm, res)
+    d = out.metrics.to_dict()
+    assert d["faults"]["stragglers"] > 0
+    assert d["faults"]["quarantines"] > 0
+    # quarantine is reversible: benches are short here, so by the end
+    # of the run no live pod should still be benched
+    eng = out.simulator.engine
+    horizon = eng.cfg.duration_s
+    for st in eng.fns.values():
+        for p in st.pod_order:
+            assert not p.quarantined or p.ready_at > horizon - 3.0
+
+
+def test_blackout_suppresses_scaling_but_not_serving():
+    fm = FaultModel(blackout_rate_per_hour=3600.0, blackout_duration_s=4.0)
+    out = _hot_run(fm)
+    m = out.metrics
+    d = m.to_dict()
+    assert d["faults"]["blackouts"] > 0
+    assert m.n_completed > 0            # dispatch kept serving
+    # identical run without blackouts makes at least as many decisions
+    calm = _hot_run(FaultModel(straggler_rate_per_hour=1e-9)).metrics
+    assert sum(m.scaling_actions.values()) <= \
+        sum(calm.scaling_actions.values())
+
+
+def test_cache_loss_counted_with_lifecycle_attached():
+    from repro.workloads.scenarios import LIFECYCLE_CACHED
+    fm = FaultModel(cache_loss_rate_per_hour=3000.0)
+    scen = get_scenario("steady_poisson").with_(
+        base_rps=150.0, max_gpus=4, faults=fm, lifecycle=LIFECYCLE_CACHED)
+    d = scen.run(policy="has", seed=42, duration_s=15.0).metrics.to_dict()
+    assert d["faults"]["cache_losses"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Golden-pinned acceptance claims of the chaos scenarios
+# ---------------------------------------------------------------------------
+
+def test_golden_chip_failure_wave_retry_policy_saves_goodput():
+    resil = _load("chip_failure_wave")
+    ctrl = _load("chip_failure_wave_control")
+    # the same failure draws hit both arms
+    assert resil.faults["chip_failures"] == ctrl.faults["chip_failures"] > 0
+    # control loses in-flight work; the retry policy recovers all of it
+    assert ctrl.drop_breakdown["killed"] > 0
+    assert resil.drop_breakdown["killed"] == 0
+    assert resil.retries > 0
+    assert resil.n_dropped < ctrl.n_dropped
+    # at no extra cost and without hurting SLO beyond noise
+    assert resil.cost_usd <= ctrl.cost_usd * 1.02
+    assert resil.slo_violation_rate["2.0"] <= \
+        ctrl.slo_violation_rate["2.0"] + 0.005
+    # the repair loop is metered
+    assert resil.mttr_s > 0
+    assert 0.0 < resil.availability < 1.0
+
+
+def test_golden_straggler_tail_quarantine_cuts_tail():
+    resil = _load("straggler_tail")
+    ctrl = _load("straggler_tail_control")
+    assert resil.faults["quarantines"] > 0
+    assert ctrl.faults["quarantines"] == 0
+    # the acceptance pins: p99 cut AND fewer violations...
+    assert resil.latency_ms["p99"] < ctrl.latency_ms["p99"]
+    assert resil.slo_violation_rate["2.0"] < ctrl.slo_violation_rate["2.0"]
+    # ...at <= 10% cost overhead (the benched pod + warm backfill)
+    assert resil.cost_usd <= ctrl.cost_usd * 1.10
+
+
+def test_golden_brownout_overload_sheds_and_cuts_violations():
+    resil = _load("brownout_overload")
+    ctrl = _load("brownout_overload_control")
+    # brownout shedding is explicit (admission drops, not queue aging)
+    assert resil.drop_breakdown["shed"] > 0
+    # and buys a large 2.0x violation cut at identical cost
+    assert resil.slo_violation_rate["2.0"] < \
+        ctrl.slo_violation_rate["2.0"] - 0.2
+    assert resil.latency_ms["p99"] < ctrl.latency_ms["p99"]
+    assert resil.cost_usd <= ctrl.cost_usd * 1.02
+
+
+def test_legacy_goldens_omit_fault_fields():
+    m = _load("steady_poisson")
+    for field in ("faults", "retries", "drop_breakdown", "mttr_s",
+                  "availability"):
+        assert getattr(m, field) is None
+    # the resilience-off, fault-free brownout control is legacy too
+    assert _load("brownout_overload_control").faults is None

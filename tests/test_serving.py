@@ -112,13 +112,14 @@ def test_libhas_token_accounting_and_estimator():
 
 
 class _Compiled:
-    def __init__(self, arg_bytes, temp_bytes):
-        self._m = (arg_bytes, temp_bytes)
+    def __init__(self, arg_bytes, temp_bytes, out_bytes=0):
+        self._m = (arg_bytes, temp_bytes, out_bytes)
 
     def memory_analysis(self):
         import types
         return types.SimpleNamespace(argument_size_in_bytes=self._m[0],
-                                     temp_size_in_bytes=self._m[1])
+                                     temp_size_in_bytes=self._m[1],
+                                     output_size_in_bytes=self._m[2])
 
 
 def test_libhas_memory_budget():
@@ -128,6 +129,15 @@ def test_libhas_memory_budget():
         lib.check_memory(_Compiled(80, 30))
     # no budget configured: never inspects the compiled object
     LibHas(client=_FakeClient()).check_memory(object())
+
+
+def test_libhas_memory_budget_counts_outputs():
+    # regression: the footprint must include output buffers — a step
+    # that fits only when outputs are ignored has to be rejected
+    lib = LibHas(client=_FakeClient(), hbm_budget_bytes=100)
+    lib.check_memory(_Compiled(50, 30, 20))   # 100 <= 100: fits exactly
+    with pytest.raises(MemoryBudgetExceeded):
+        lib.check_memory(_Compiled(50, 30, 21))  # args+temp fit, +out not
 
 
 # ---------------------------------------------------------------------------
@@ -197,7 +207,7 @@ def test_gateway_deregister_unknown_fn_is_a_noop():
     gw.deregister("f", "not-this-pod")
     assert gw.engines["f"] == [eng]
     gw.deregister("f", eng.pod.pod_id)
-    assert gw.engines["f"] == []
+    assert "f" not in gw.engines            # last pod gone: key pruned
 
 
 # ---------------------------------------------------------------------------
