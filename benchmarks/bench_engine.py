@@ -1,0 +1,250 @@
+"""Wide-engine event throughput: the event-loop perf gate for PR 9.
+
+Times the struct-of-arrays wide engine (``core/events.py``) against the
+frozen scalar reference (``core/engine_scalar.py``) on the azure_wide
+fleet shape — hundreds-to-thousands of tenant functions, long-tail
+low-rate traces — and records events/second, wall time, and peak traced
+memory (tracemalloc, Python-heap peak) for both, plus the
+streaming-vs-retain memory comparison on the wide engine.
+
+JSON format (schema ``bench_engine/v1``)::
+
+    {
+      "schema": "bench_engine/v1",
+      "smoke": false,
+      "config": {"width": ..., "base_rps": ..., "duration_s": ...,
+                 "max_gpus": ..., "seed": ...},
+      "results": [
+        {"name": "engine_wide", "events_per_s": ..., "n_events": ...,
+         "seconds": ..., "peak_mb": ...},
+        {"name": "engine_scalar", ...},
+        {"name": "mem_stream_wide", "peak_mb": ..., "n_completed": ...},
+        {"name": "mem_exact_wide", "peak_mb": ..., "n_completed": ...}
+      ],
+      "speedup": ...   # engine_wide events/s over engine_scalar
+    }
+
+Entry names are stable identifiers; CI runs ``--smoke --check
+benchmarks/ref_engine.json`` and fails when the wide engine is more
+than ``--factor`` slower than the reference after normalizing by the
+scalar engine's throughput on the same machine (the calibration entry,
+mirroring ``bench_control_plane``), or when the measured speedup falls
+below ``--min-speedup`` (default 2.0 in smoke mode — small fleets leave
+less O(N*G) work to hoist — and 10.0 at full size, the PR 9 acceptance
+floor). ``--update-ref`` regenerates the reference. Both engines must
+process the identical event count or the run fails outright: the bench
+doubles as a cheap parity tripwire.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+import tracemalloc
+
+from repro.core import SimConfig
+from repro.core.engine_scalar import ScalarEventEngine
+from repro.core.multisim import MultiFunctionSimulator
+from repro.workloads.scenarios import get_scenario, make_policy
+
+REF_PATH = "benchmarks/ref_engine.json"
+
+# small enough for a CI runner, wide enough that the sweep/merged-stream
+# machinery is what's being timed
+SMOKE_CFG = dict(width=250, base_rps=4.0, duration_s=10.0, max_gpus=96,
+                 seed=3)
+# the acceptance configuration: fleet width where the scalar engine's
+# per-tick O(cluster) rescans dominate (>=10x measured on this shape)
+FULL_CFG = dict(width=1200, base_rps=5.0, duration_s=15.0, max_gpus=384,
+                seed=3)
+
+
+def build_sim(width: int, base_rps: float, duration_s: float,
+              max_gpus: int, seed: int, engine_cls=None,
+              stream_metrics: bool = False) -> MultiFunctionSimulator:
+    """An azure_wide-shaped simulator, built OUTSIDE the timed region
+    (trace generation and prewarm placement are setup, not event-loop
+    work). ``stream_metrics`` arms the constant-memory sink (wide
+    engine only; the scalar reference predates it)."""
+    sc = get_scenario("azure_wide").with_(width=width, max_gpus=max_gpus,
+                                          sim_overrides=None)
+    specs = sc.fn_specs()
+    recon = sc.make_recon(None)
+    kw = {}
+    if stream_metrics:
+        kw.update(stream_metrics=True,
+                  stream_slo_multipliers=tuple(sc.slo_multipliers))
+    cfg = SimConfig(duration_s=duration_s, whole_gpu_cost=False, seed=seed,
+                    **kw)
+    policies, arrs = {}, {}
+    for i, spec in enumerate(specs):
+        pol = make_policy("has", recon)
+        pol.prewarm(spec, base_rps)
+        policies[spec.fn_id] = pol
+        arrs[spec.fn_id] = sc.arrivals_for(i, duration_s, base_rps, seed)
+    ekw = {} if engine_cls is None else {"engine_cls": engine_cls}
+    return MultiFunctionSimulator(specs, policies, recon, arrs, cfg, **ekw)
+
+
+def _run_timed(cfg: dict, engine_cls=None) -> dict:
+    """One timed engine run: events/s over the whole drain (the engines
+    process identical event streams, so rates are comparable 1:1)."""
+    sim = build_sim(**cfg, engine_cls=engine_cls)
+    tracemalloc.start()
+    t0 = time.perf_counter()
+    sim.engine.run()
+    dt = time.perf_counter() - t0
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    n = int(sim.engine.n_events)
+    return {"events_per_s": n / dt if dt > 0 else float("inf"),
+            "n_events": n, "seconds": dt, "peak_mb": peak / 1e6}
+
+
+def _run_memory(cfg: dict, stream_metrics: bool) -> dict:
+    """Peak traced memory of one wide-engine run with the streaming
+    sink armed vs the retain-everything path (same events)."""
+    sim = build_sim(**cfg, stream_metrics=stream_metrics)
+    tracemalloc.start()
+    sim.engine.run()
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    if stream_metrics:
+        n_comp = int(sim.engine.stream_stats.n)
+        retained = sum(len(st.completed) for st in sim.engine.fns.values())
+        assert retained == 0, (
+            f"stream-metrics run retained {retained} completions")
+    else:
+        n_comp = sum(len(st.completed) for st in sim.engine.fns.values())
+    return {"peak_mb": peak / 1e6, "n_completed": n_comp}
+
+
+def run(smoke: bool = False) -> dict:
+    cfg = SMOKE_CFG if smoke else FULL_CFG
+    results = []
+    wide = _run_timed(cfg)
+    scalar = _run_timed(cfg, engine_cls=ScalarEventEngine)
+    if wide["n_events"] != scalar["n_events"]:
+        raise AssertionError(
+            f"engine event-count divergence: wide={wide['n_events']} "
+            f"scalar={scalar['n_events']} — the engines no longer "
+            f"process the same event stream")
+    results.append({"name": "engine_wide", **wide})
+    results.append({"name": "engine_scalar", **scalar})
+    results.append({"name": "mem_stream_wide",
+                    **_run_memory(cfg, stream_metrics=True)})
+    results.append({"name": "mem_exact_wide",
+                    **_run_memory(cfg, stream_metrics=False)})
+    return {"schema": "bench_engine/v1", "smoke": smoke,
+            "config": dict(cfg), "results": results,
+            "speedup": wide["events_per_s"] / scalar["events_per_s"]}
+
+
+CALIBRATION_ENTRY = "engine_scalar"
+
+
+def check(report: dict, ref_path: str, factor: float,
+          cal_factor: float = 10.0, min_speedup: float = 2.0) -> int:
+    """Fail on event-throughput regression vs the reference.
+
+    Rates are normalized by each run's own scalar-engine throughput
+    (same machine, same event stream), which cancels runner-speed
+    offsets; the calibration entry itself gets the generous
+    ``cal_factor`` gate (machine drift vs genuine shared-path
+    regression). The measured wide-over-scalar speedup must also stay
+    above ``min_speedup`` — the absolute floor the PR's acceptance
+    criteria pin, independent of any reference file."""
+    with open(ref_path) as f:
+        ref = json.load(f)
+    if report.get("smoke") != ref.get("smoke"):
+        print(f"reference {ref_path} was generated with smoke="
+              f"{ref.get('smoke')} but this run used smoke="
+              f"{report.get('smoke')}: regenerate the reference in the "
+              f"matching mode (e.g. --smoke --update-ref)",
+              file=sys.stderr)
+        return 1
+    if report.get("config") != ref.get("config"):
+        print(f"config mismatch vs {ref_path}: ref={ref.get('config')} "
+              f"run={report.get('config')}", file=sys.stderr)
+        return 1
+    ref_by = {r["name"]: r for r in ref["results"]}
+    new_by = {r["name"]: r for r in report["results"]}
+    failures = []
+    ref_cal = ref_by[CALIBRATION_ENTRY]["events_per_s"]
+    new_cal = new_by[CALIBRATION_ENTRY]["events_per_s"]
+    cal_drift = ref_cal / max(new_cal, 1e-12)
+    print(f"      {CALIBRATION_ENTRY:<16} {new_cal:>12,.0f} ev/s  "
+          f"(calibration; {cal_drift:.2f}x slower than reference)")
+    if cal_drift > cal_factor:
+        failures.append(CALIBRATION_ENTRY)
+    wide = new_by["engine_wide"]
+    ref_rel = ref_by["engine_wide"]["events_per_s"] / ref_cal
+    new_rel = wide["events_per_s"] / max(new_cal, 1e-12)
+    slowdown = ref_rel / max(new_rel, 1e-12)
+    status = "FAIL" if slowdown > factor else "ok"
+    print(f"{status:>4}  {'engine_wide':<16} {wide['events_per_s']:>12,.0f}"
+          f" ev/s  ({slowdown:.2f}x slower than reference, "
+          f"machine-normalized)")
+    if slowdown > factor:
+        failures.append("engine_wide")
+    sp = report["speedup"]
+    status = "FAIL" if sp < min_speedup else "ok"
+    print(f"{status:>4}  {'speedup':<16} {sp:>12.2f}x  "
+          f"(floor {min_speedup:.1f}x)")
+    if sp < min_speedup:
+        failures.append("speedup")
+    if failures:
+        print(f"regression vs {ref_path}: {failures}", file=sys.stderr)
+        return 1
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fleet width for CI")
+    ap.add_argument("--out", default="BENCH_engine.json")
+    ap.add_argument("--check", metavar="REF",
+                    help="fail on regression vs this reference")
+    ap.add_argument("--factor", type=float, default=3.0)
+    ap.add_argument("--cal-factor", type=float, default=10.0,
+                    help="max tolerated slowdown of the scalar "
+                         "calibration entry itself")
+    ap.add_argument("--min-speedup", type=float, default=None,
+                    help="wide-over-scalar events/s floor (default 2.0 "
+                         "smoke, 10.0 full)")
+    ap.add_argument("--update-ref", action="store_true",
+                    help=f"also write the report to {REF_PATH}")
+    args = ap.parse_args(argv)
+
+    report = run(smoke=args.smoke)
+    for r in report["results"]:
+        if "events_per_s" in r:
+            print(f"{r['name']:<16} {r['events_per_s']:>12,.0f} events/s  "
+                  f"({r['n_events']} events, {r['seconds']:.2f}s, "
+                  f"peak {r['peak_mb']:.1f} MB)")
+        else:
+            print(f"{r['name']:<16} peak {r['peak_mb']:>8.1f} MB  "
+                  f"({r['n_completed']} completions)")
+    print(f"speedup          {report['speedup']:>12.2f}x wide over scalar")
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}")
+    if args.update_ref:
+        with open(REF_PATH, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+        print(f"wrote {REF_PATH}")
+    if args.check:
+        floor = args.min_speedup
+        if floor is None:
+            floor = 2.0 if args.smoke else 10.0
+        return check(report, args.check, args.factor, args.cal_factor,
+                     floor)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

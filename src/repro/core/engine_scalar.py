@@ -1,102 +1,31 @@
-"""Discrete-event engine for the cluster simulators.
+"""Frozen scalar reference of the discrete-event engine (pre-PR-9).
 
-One `heapq` event queue drives N co-located functions against a shared
-Reconfigurator: request arrivals, batch-timeout wakeups, pod-free
-(service completion) wakeups, pod-ready (cold-start completion) wakeups,
-and per-function autoscale timers. `ClusterSimulator` (N=1) and
-`MultiFunctionSimulator` (N>1) are thin wrappers over this engine.
+This module preserves the event engine exactly as it was before the
+wide-engine refactor of ``core/events.py``: one heap pop per event
+(every request arrival is its own heap event), one autoscale timer
+chain per function, and cluster cost/fragmentation rates re-sampled
+after every per-function autoscale event. It plays the same role
+``core/simulator_tick.py`` played for PR 1 — the executable spec the
+optimized engine is differentially tested against:
 
-Semantics are those of the reference tick engine
-(`core/simulator_tick.py`), continuous in time instead of quantized to a
-20 ms tick:
+  * ``tests/test_engine_parity.py`` fuzzes random small scenario
+    configs (mixed fleets, spot markets, fault models, lifecycle
+    on/off) through both engines and requires byte-identical
+    ``RunMetrics``;
+  * ``benchmarks/bench_engine.py`` times wide-vs-scalar events/s on the
+    wide configuration and gates the speedup in CI.
 
-  * pull-based dispatch — idle ready pods pull up to `batch` requests
-    from their function's FIFO, highest-throughput pods first;
-  * batch formation — a pod runs when the queue can fill its batch or
-    the head request has waited `batch_wait_s`;
-  * drop-after-aging — queued requests older than `drop_after_s` are
-    shed (and count as violations);
-  * autoscaling — every `autoscale_interval_s` the policy sees the 5 s
-    observed arrival rate plus backlog drain demand;
-  * cost — integrated exactly between events; the $/s rate only changes
-    when a policy mutates the cluster, so it is re-sampled after each
-    autoscale event rather than every tick;
-  * spot reclaims — chips of a ``GPUType`` carrying a ``GPUMarket``
-    (configs/gpus.py) draw reclaim times from the market's hazard
-    process on a DEDICATED rng stream (service noise is untouched, so
-    reclaim-free runs are bitwise identical to pre-spot traces). A
-    `RECLAIM_NOTICE` opens the grace window: every pod on the chip is
-    marked doomed (drains — finishes in-flight batches, takes no new
-    ones, contributes zero capacity, so the very next autoscale tick
-    replaces it). `RECLAIM_KILL` then removes the chip: finished
-    batches deliver, still-running batches are requeued at the head of
-    the function queue (or dropped, per ``SimConfig.reclaim_requeue``),
-    and with a lifecycle tracker attached the weights demote to the
-    node's host cache (``modelstate.on_pod_removed``);
-  * faults + resilience — a ``SimConfig.faults`` (``core/faults.py``)
-    schedules chip hard-failures, transient stragglers, host-cache
-    losses, and control-plane blackouts from dedicated rng streams;
-    a ``SimConfig.resilience`` arms per-request deadlines with a
-    bounded retry budget, EWMA health scoring that quarantines
-    stragglers out of dispatch like doomed chips, and brownout
-    admission control that sheds un-serveable arrivals explicitly.
-    Both are inert by default — fault-free runs stay bitwise identical
-    to every legacy trace.
-
-Invariant: between two consecutive autoscale events of a function, its
-pod set and every pod's (sm, quota) are immutable — policies are the
-only mutators and they run inside autoscale events, EXCEPT for spot
-reclaim events, which re-sample the caches they invalidate (pod order,
-cost/fragmentation rates) themselves. The engine exploits this by
-caching each function's throughput-sorted pod order, per-config
-service times (deterministic part; noise is drawn per batch), and the
-cluster cost rate.
-
-The wide engine (PR 9). ``EventEngine`` is organized for fleet-width
-runs (thousands of co-located functions, tens of millions of requests —
-the Azure-replay regime of ``azure_wide``) while staying byte-identical
-to the frozen scalar reference (``core/engine_scalar.py``) on every
-legacy trace:
-
-  * struct-of-arrays arrival stream — all functions' arrival times are
-    merged into parallel sorted numpy arrays (time, function slot,
-    within-function position) walked by one cursor, instead of one heap
-    push + pop per request;
-  * batched autoscale sweeps — every function ticks on the same
-    ``autoscale_interval_s`` grid, so all same-timestamp autoscale
-    events collapse into ONE sweep over a per-slot active mask, and the
-    cluster-wide cost/fragmentation rates are re-sampled once per sweep
-    (each intermediate value the scalar engine computed between
-    same-timestamp ticks integrates over dt = 0, so only the post-sweep
-    rate is observable — bitwise the same integrals);
-  * the heap is reserved for genuinely irregular events: dispatch
-    wakeups (batch completions, cold-start readiness, batch timeouts),
-    spot reclaims, and the fault layer;
-  * O(1) peak-GPU tracking via the Reconfigurator's incremental
-    ``n_used_gpus`` counter instead of an O(cluster) scan per tick;
-  * optional constant-memory metrics (``SimConfig.stream_metrics``):
-    completions fold into a streaming accumulator
-    (``core/metrics.py::RunStreamStats``) at delivery instead of being
-    retained as ``Request`` objects — exact below the accumulator's
-    exact-mode limit, a bounded-relative-error log-binned quantile
-    sketch beyond it;
-  * optional per-function service-noise streams
-    (``SimConfig.rng_isolation``): each function draws its lognormal
-    service noise from its own dedicated rng, so one function's fate
-    (faults, reclaims, bursts) cannot perturb another's trace through
-    shared-stream interleaving.
-
-Both knobs default off, and the sweep/merged-stream machinery is
-value-preserving, so legacy runs remain bitwise identical to
-pre-wide-engine traces (pinned by ``tests/test_goldens.py`` and fuzzed
-by ``tests/test_engine_parity.py``).
+The shared dataclasses (``SimConfig`` / ``FunctionState`` /
+``PodRuntime``) and the event-kind constants are imported from
+``core/events.py`` — only the engine class itself is frozen here. The
+wide-engine-only knobs (``SimConfig.stream_metrics`` /
+``rng_isolation``) are intentionally ignored by this class: parity runs
+compare the two engines over the legacy feature space.
 """
 from __future__ import annotations
 
-import dataclasses
 import heapq
 import itertools
-from collections import deque
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -104,175 +33,25 @@ import numpy as np
 from repro.core import capacity as capacity_mod
 from repro.core import perf_model
 from repro.core.cost import CostMeter
-from repro.core.faults import (FaultInjector, FaultModel, HealthTracker,
-                               ResilienceConfig)
-from repro.core.perf_model import FnSpec
+from repro.core.events import (ARRIVAL, AUTOSCALE, CHIP_FAIL, DISPATCH,
+                               OBS_WINDOW_S, POD_FAULT, QUAR_LIFT,
+                               RECLAIM_KILL, RECLAIM_NOTICE, RETRY,
+                               FunctionState, PodRuntime, SimConfig)
+from repro.core.faults import FaultInjector, HealthTracker
 from repro.core.reconfigurator import Reconfigurator
 from repro.core.slo import Request
 
-# Event kinds double as same-timestamp priorities, mirroring the tick
-# engine's per-tick order: arrivals, then reclaim notices (so a policy
-# ticking at the same instant already sees the doomed capacity), then
-# autoscale, then kills, then execution. Only the RELATIVE order of
-# ARRIVAL < AUTOSCALE < DISPATCH matters for legacy traces.
-ARRIVAL, RECLAIM_NOTICE, AUTOSCALE, RECLAIM_KILL, DISPATCH = 0, 1, 2, 3, 4
-# Fault-layer kinds (core/faults.py) sort AFTER every legacy kind at an
-# identical timestamp, so arming the chaos layer cannot perturb the
-# relative order of any legacy event pair: chip hard-failures, pod
-# faults (straggler windows / host-cache losses), backoff-delayed
-# retry requeues, and quarantine lifts.
-CHIP_FAIL, POD_FAULT, RETRY, QUAR_LIFT = 5, 6, 7, 8
-
-OBS_WINDOW_S = 5.0  # observed-rate sliding window (paper: short horizon)
+__all__ = ["ScalarEventEngine"]
 
 
-@dataclasses.dataclass
-class SimConfig:
-    """Simulation-run knobs shared by the event and tick engines:
-    horizon (``duration_s``), autoscale cadence, RNG ``seed``,
-    whole-GPU vs fine-grained billing, batch-formation wait, and the
-    drop-after aging bound. Invariant: a config is immutable for the
-    lifetime of one simulator run."""
-    tick_s: float = 0.02         # used by the tick reference engine only
-    autoscale_interval_s: float = 1.0
-    duration_s: float = 300.0
-    seed: int = 0
-    whole_gpu_cost: bool = False
-    batch_wait_s: float = 0.01   # max wait to fill a batch
-    drop_after_s: float = 60.0   # requests older than this count as violations
-    # spot reclaims: requeue a killed batch's in-flight requests at the
-    # queue head (latency keeps accruing from the original arrival) —
-    # False drops them instead (counted as violations)
-    reclaim_requeue: bool = True
-    # chaos layer (core/faults.py): fault processes to inject and the
-    # degradation machinery to run them against. Both default to None
-    # (and an inert FaultModel/ResilienceConfig is equivalent to None):
-    # fault-free runs are bitwise identical to legacy traces
-    faults: Optional[FaultModel] = None
-    resilience: Optional[ResilienceConfig] = None
-    # ---- wide-engine knobs (PR 9) ----
-    # stream completions into the constant-memory metrics accumulator
-    # (core/metrics.py::RunStreamStats) at delivery instead of
-    # retaining Request objects per function — the azure_wide-scale
-    # replay path. SLO-violation counting needs the multipliers at fold
-    # time; None falls back to metrics.DEFAULT_MULTIPLIERS
-    stream_metrics: bool = False
-    stream_slo_multipliers: Optional[tuple] = None
-    # draw each function's service noise from its own dedicated rng
-    # stream (seeded [seed, salt, slot]) instead of the shared one, so
-    # per-function traces are independent of co-tenant scheduling.
-    # Both knobs default off: legacy runs stay bitwise identical
-    rng_isolation: bool = False
-
-
-@dataclasses.dataclass
-class PodRuntime:
-    """Execution-side state of one pod: when its current batch finishes
-    (``busy_until``), the in-flight requests (delivered lazily at the
-    pod's next pull), and whether a cold-start wakeup is already
-    queued. Created on first dispatch, dropped when the pod is
-    removed."""
-    pod_id: str
-    busy_until: float = 0.0
-    inflight: List[Request] = dataclasses.field(default_factory=list)
-    wake_scheduled: bool = False  # cold-start wakeup already queued
-
-
-@dataclasses.dataclass
-class FunctionState:
-    """Per-function simulation state threaded through the event engine."""
-    spec: FnSpec
-    policy: object
-    arrivals: np.ndarray
-    queue: deque = dataclasses.field(default_factory=deque)
-    runtimes: Dict[str, PodRuntime] = dataclasses.field(default_factory=dict)
-    completed: List[Request] = dataclasses.field(default_factory=list)
-    timeline: list = dataclasses.field(default_factory=list)
-    dropped: int = 0
-    cold_starts: int = 0
-    # per-kind scaling mutations observed at autoscale events (policy-
-    # agnostic: derived by diffing the pod set, not from tick() returns)
-    action_counts: Dict[str, int] = dataclasses.field(
-        default_factory=lambda: {"vup": 0, "vdown": 0, "hup": 0, "hdown": 0})
-    # model-state lifecycle classification of pod starts (cold = weights
-    # fetched from the object store, warm = host-cached / in-flight
-    # prefetch, hot = GPU-resident incl. keep-warm reactivations);
-    # only populated when a lifecycle tracker stamps pod.start_kind
-    start_counts: Dict[str, int] = dataclasses.field(
-        default_factory=lambda: {"cold": 0, "warm": 0, "hot": 0})
-    # drop causes (surfaced in RunMetrics only when the fault layer is
-    # active): "aged" = timed out in queue (drop_after / deadline,
-    # incl. end-of-run flush), "shed" = brownout admission rejection at
-    # arrival, "killed" = lost mid-flight to a kill with no retry left
-    drop_kinds: Dict[str, int] = dataclasses.field(
-        default_factory=lambda: {"aged": 0, "shed": 0, "killed": 0})
-    # predicted serving capacity (RPS) of the current non-excluded pod
-    # set — refreshed with pod_order, read by admission control
-    est_capacity: float = 0.0
-    next_arrival: int = 0
-    timeout_at: float = -np.inf   # latest batch-timeout wakeup scheduled
-    pod_order: List = dataclasses.field(default_factory=list)
-    # True unless the last full pod scan proved every pod busy/cold-starting
-    # (then arrivals can be enqueued without rescanning)
-    maybe_idle: bool = True
-    fid: str = ""
-    # wide-engine slot index (position in the engine's function list —
-    # the index the struct-of-arrays state is keyed by)
-    slot: int = -1
-    # completions folded into the streaming accumulator instead of
-    # retained in ``completed`` (stream_metrics runs only)
-    stream_n_completed: int = 0
-
-    def __post_init__(self):
-        self.arrivals = np.asarray(self.arrivals, dtype=float)
-        self.fid = self.spec.fn_id
-        self._arr = self.arrivals.tolist()  # plain floats for the hot loop
-        # per-function dispatch-throughput memo (bounded: see
-        # EventEngine._thpt) and lazily computed SLO baseline
-        self._thpt_cache: Dict[tuple, float] = {}
-        self._slo_base: Optional[float] = None
-        self._svc_rng = None   # set by the engine (shared or per-slot)
-
-    @property
-    def fn_id(self) -> str:
-        """The function's id (``FnSpec.fn_id``), the engine's key."""
-        return self.fid
-
-    def observed_in_window(self, t: float) -> int:
-        """Arrivals in [t - OBS_WINDOW_S, t] — the sliding-window count
-        the tick engine kept in a deque, read off the sorted trace."""
-        lo = np.searchsorted(self.arrivals, t - OBS_WINDOW_S, side="left")
-        hi = np.searchsorted(self.arrivals, t, side="right")
-        return int(hi - lo)
-
-    def work_left(self, now: float) -> bool:
-        """Whether this function still has pending work at ``now`` —
-        queued requests, uninjected arrivals, or batches still running
-        (used to decide if autoscale timers must keep firing past the
-        nominal horizon)."""
-        if self.queue or self.next_arrival < len(self._arr):
-            return True
-        # a finished-but-undelivered batch (busy_until <= now, delivery is
-        # lazy) is not pending work — only still-running batches count
-        return any(rt.inflight and rt.busy_until > now
-                   for rt in self.runtimes.values())
-
-
-# per-function dispatch-throughput memo cap: vertical scaling
-# accumulates off-grid quota floats, so an unbounded memo grows one
-# entry per (batch, sm, quota, device) EVER seen — across a long wide
-# run that is effectively unbounded. The memo clears when full (it is a
-# pure cache: values are recomputed identically on the next miss).
-_THPT_CACHE_MAX = 1024
-
-# seed salt for the per-function service-noise streams (rng_isolation)
-_SVC_STREAM_SALT = 0x15A7A7E5
-
-
-class EventEngine:
-    """Shared discrete-event core for single- and multi-function runs —
-    the wide engine (see the module docstring for the struct-of-arrays
-    layout and what stays on the heap)."""
+class ScalarEventEngine:
+    """The pre-wide-refactor event engine, verbatim (one heap pop per
+    event, per-function autoscale timer chains, rates re-sampled per
+    function tick). The differential-fuzz parity suite
+    (``tests/test_engine_parity.py``) runs every random config through
+    BOTH engines and requires byte-identical ``RunMetrics``, and
+    ``benchmarks/bench_engine.py`` times the wide engine against this
+    one. Do not optimize this class: its value is being frozen."""
 
     def __init__(self, recon: Reconfigurator, cfg: SimConfig,
                  fns: List[FunctionState], cost: Optional[CostMeter] = None,
@@ -281,12 +60,6 @@ class EventEngine:
         self.recon = recon
         self.cfg = cfg
         self.fns: Dict[str, FunctionState] = {st.fid: st for st in fns}
-        # function-slot assignment: the order policies were seeded in is
-        # the order the scalar engine's per-function timer chains fired
-        # in, so the sweep iterates the same order
-        self.fn_list: List[FunctionState] = list(fns)
-        for i, st in enumerate(self.fn_list):
-            st.slot = i
         self.cost = cost or CostMeter(whole_gpu=cfg.whole_gpu_cost)
         # an active model-state lifecycle dictates the keep-warm idle-
         # retention billing rate; adopt it so every construction path
@@ -296,32 +69,13 @@ class EventEngine:
             self.cost.idle_retention_factor = \
                 tracker.cfg.idle_retention_factor
         self.rng = rng or np.random.default_rng(cfg.seed)
-        # service-noise streams: shared legacy stream by default;
-        # dedicated per-slot streams under rng_isolation (the wide
-        # isolation property tests rely on this)
-        for st in self.fn_list:
-            st._svc_rng = (np.random.default_rng(
-                [cfg.seed, _SVC_STREAM_SALT, st.slot])
-                if cfg.rng_isolation else self.rng)
         self.track_peak = track_peak
         self.peak_gpus = 0
         self.now = 0.0
-        self.n_events = 0   # processed events (bench_engine events/s)
         self._heap: list = []
         self._seq = itertools.count()
-        # constant-memory metrics sink (stream_metrics runs only);
-        # lazily imported — metrics.py is a consumer of this module's
-        # engines, not a dependency of the hot path
-        self._sink = None
-        if cfg.stream_metrics:
-            from repro.core.metrics import (DEFAULT_MULTIPLIERS,
-                                            RunStreamStats)
-            self._sink = RunStreamStats(
-                cfg.stream_slo_multipliers or DEFAULT_MULTIPLIERS)
-        # functions whose trace a reclaim/fault event actually touched
-        # (chips shared with an affected pod count): the rng-isolation
-        # tests assert untouched functions are unperturbed
-        self.touched_fns: set = set()
+        self._thpt_cache: Dict[tuple, float] = {}
+        self.n_events = 0   # heap pops processed (bench_engine events/s)
         # service times read the shared oracle lattice tables — pod
         # configs straight off the control plane's grid are a lattice
         # hit; off-grid quotas (accumulated vertical steps) take the
@@ -388,14 +142,6 @@ class EventEngine:
         config — the gate for the fault fields in ``RunMetrics``."""
         return self._injector is not None or self._res is not None
 
-    @property
-    def stream_stats(self):
-        """The run's constant-memory metrics accumulator
-        (``core/metrics.py::RunStreamStats``), or None for legacy
-        retain-everything runs — ``RunMetrics.from_sim`` switches on
-        this."""
-        return self._sink
-
     def availability(self) -> float:
         """1 minus the fraction of the integrated horizon during which
         at least one function had a capacity outage open (a chip
@@ -414,49 +160,26 @@ class EventEngine:
     # ---- helpers -----------------------------------------------------------
     def _thpt(self, st: FunctionState, pod) -> float:
         """Dispatch-ordering throughput of one pod on its host device,
-        memoized per function keyed (batch, sm, quota, device type) and
-        bounded at ``_THPT_CACHE_MAX`` entries (cleared when full): the
-        engine-level unbounded memo grew one entry per config ever seen
-        across the whole run, which at fleet width was a leak."""
+        memoized per (fn, batch, sm, quota, device type)."""
         t = pod.gpu_type
-        key = (pod.batch, pod.sm, pod.quota,
+        key = (st.fid, pod.batch, pod.sm, pod.quota,
                t.name if t is not None else None)
-        cache = st._thpt_cache
-        v = cache.get(key)
+        v = self._thpt_cache.get(key)
         if v is None:
-            if len(cache) >= _THPT_CACHE_MAX:
-                cache.clear()
             v = self._ord_table.throughput(st.spec, pod.batch, pod.sm,
                                            pod.quota, gpu=t)
-            cache[key] = v
+            self._thpt_cache[key] = v
         return v
 
     def _service(self, st: FunctionState, batch: int, pod) -> tuple:
         """One batch's service time as ``(predicted, drawn)``: the
         deterministic wall-clock from the shared lattice table (on the
         pod's host device type), and that times a fresh lognormal noise
-        draw (from the function's own stream under ``rng_isolation``,
-        the shared legacy stream otherwise). The predicted half is the
-        health tracker's baseline."""
+        draw. The predicted half is the health tracker's baseline."""
         det = self._svc_table.lat(st.spec, batch, pod.sm, pod.quota,
                                   pod.gpu_type)
-        return det, det * float(st._svc_rng.lognormal(
+        return det, det * float(self.rng.lognormal(
             mean=0.0, sigma=perf_model.SERVICE_NOISE_SIGMA))
-
-    def _deliver(self, st: FunctionState, reqs: List[Request]) -> None:
-        """Hand a batch of completed requests to the metrics layer:
-        appended to ``st.completed`` (legacy), or folded into the
-        streaming accumulator and dropped (``stream_metrics`` — the
-        constant-memory path). Callers stamp ``completion`` first."""
-        if self._sink is None:
-            st.completed.extend(reqs)
-            return
-        if st._slo_base is None:
-            from repro.core.metrics import baseline_batch_of
-            st._slo_base = perf_model.slo_baseline(
-                st.spec, baseline_batch_of(st.policy))
-        st.stream_n_completed += len(reqs)
-        self._sink.fold(st._slo_base, reqs)
 
     def _refresh_pods(self, st: FunctionState) -> None:
         """Re-read the function's pod set after its policy may have
@@ -470,7 +193,7 @@ class EventEngine:
                 rt = st.runtimes.pop(pid)
                 for r in rt.inflight:  # inflight on a removed pod completes
                     r.completion = rt.busy_until
-                self._deliver(st, rt.inflight)
+                st.completed.extend(rt.inflight)
         st.pod_order = sorted(pods, key=lambda p: -self._thpt(st, p))
         st.maybe_idle = True
         if self._admit:
@@ -551,95 +274,56 @@ class EventEngine:
                 q.append(Request(fid, arr[i]))
                 i += 1
         st.next_arrival = i
-        # (no next-arrival heap push: the merged-stream cursor in run()
-        # is the arrival schedule; entries this block already ingested
-        # are skipped there by comparing against ``next_arrival``)
+        if i < n:
+            self._push(arr[i], ARRIVAL, st)
         # if the last scan proved every pod busy (or cold-starting), the
         # new request cannot be dispatched before the next pod-free /
         # pod-ready / autoscale event re-scans — skip the pod loop
         if st.maybe_idle:
             self._dispatch(t, st)
 
-    def _sweep(self, t: float) -> bool:
-        """One autoscale sweep: every still-active function's tick at
-        grid time ``t``, in slot order — the same order the scalar
-        engine's per-function timer chains fired in, with every
-        per-function effect (policy tick, pod refresh, reclaim/fault
-        draws, dispatch) preserved in place. Cluster-wide cost and
-        fragmentation rates are re-sampled ONCE after the sweep: each
-        intermediate value the scalar engine computed between
-        same-timestamp ticks integrates over dt = 0, so only the
-        post-sweep rate is observable. Returns whether any function's
-        timer is still live (i.e. the sweep chain continues)."""
+    def _on_autoscale(self, t: float, st: FunctionState) -> None:
         cfg = self.cfg
-        chain = t + cfg.autoscale_interval_s <= cfg.duration_s
-        active = self._active
-        blackout = (self._injector is not None
-                    and self._injector.in_blackout(t))
-        recon = self.recon
-        track_peak = self.track_peak
-        # amortized-O(N) continuation check: within one sweep work only
-        # drains (arrivals and retries land between sweeps, and a
-        # function's own tick can't create work it didn't have), so a
-        # slot proven workless stays workless — resume the scan where
-        # the previous call stopped instead of re-scanning the fleet
-        # per function (the scalar engine's O(N^2) tail). Answers are
-        # identical to ``_any_work_left``.
-        fl = self.fn_list
-        n_fl = len(fl)
-        scan = 0
-
-        def work_ahead() -> bool:
-            nonlocal scan
-            while scan < n_fl and not fl[scan].work_left(t):
-                scan += 1
-            return scan < n_fl
-
-        for st in self.fn_list:
-            if not active[st.slot]:
-                continue
-            self.n_events += 1
-            if blackout:
-                # control-plane blackout: the timer fires but the
-                # policy is unreachable — no scaling decision, no
-                # replacement capacity, no outage-recovery bookkeeping.
-                # Aging and dispatch keep running (the data plane is
-                # fine), and the timer stays alive so the tick after
-                # the window acts normally.
-                self._shed(t, st)
-                if not (chain or work_ahead()):
-                    active[st.slot] = False
-                self._dispatch(t, st)
-                continue
+        if self._injector is not None and self._injector.in_blackout(t):
+            # control-plane blackout: the timer fires but the policy is
+            # unreachable — no scaling decision, no replacement capacity,
+            # no outage-recovery bookkeeping. Aging and dispatch keep
+            # running (the data plane is fine), and the timer chain
+            # stays alive so the tick after the window acts normally.
             self._shed(t, st)
-            observed = (st.observed_in_window(t)
-                        / max(min(t, OBS_WINDOW_S), 1e-9) if t > 0 else 0.0)
-            observed += len(st.queue) / OBS_WINDOW_S  # backlog drain demand
-            # snapshot quota VALUES before the policy mutates pods in
-            # place; between autoscale events the pod set is immutable,
-            # so the cached pod_order is the authoritative before-state
-            before = {p.pod_id: p.quota for p in st.pod_order}
-            st.policy.tick(t, st.spec, observed)
-            self._refresh_pods(st)
-            self._count_actions(t, st, before)
-            st.timeline.append(
-                (t, observed, len(st.pod_order),
-                 sum((p.sm / (p.gpu_type.sm_total if p.gpu_type else 8.0))
-                     * p.quota for p in st.pod_order)))
-            if track_peak and recon.n_used_gpus > self.peak_gpus:
-                # intermediate per-function peaks matter: a later
-                # function's tick may release what this one just used
-                self.peak_gpus = recon.n_used_gpus
-            if not (chain or work_ahead()):
-                active[st.slot] = False
-            self._schedule_reclaims(t)
-            self._schedule_faults(t)
-            if self._outages:
-                self._close_recovered_outages(t)
+            nxt = t + cfg.autoscale_interval_s
+            if nxt <= cfg.duration_s or self._any_work_left(t):
+                self._push(nxt, AUTOSCALE, st)
             self._dispatch(t, st)
-        self._cost_rates = self.cost.rates(recon)
-        self._frag_rate = recon.fragmentation()
-        return bool(active.any())
+            return
+        self._shed(t, st)
+        observed = (st.observed_in_window(t)
+                    / max(min(t, OBS_WINDOW_S), 1e-9) if t > 0 else 0.0)
+        observed += len(st.queue) / OBS_WINDOW_S  # backlog drain demand
+        # snapshot quota VALUES before the policy mutates pods in place;
+        # between autoscale events the pod set is immutable, so the
+        # cached pod_order is the authoritative before-state
+        before = {p.pod_id: p.quota for p in st.pod_order}
+        st.policy.tick(t, st.spec, observed)
+        self._refresh_pods(st)
+        self._count_actions(t, st, before)
+        self._cost_rates = self.cost.rates(self.recon)
+        self._frag_rate = self.recon.fragmentation()
+        st.timeline.append(
+            (t, observed, len(st.pod_order),
+             sum((p.sm / (p.gpu_type.sm_total if p.gpu_type else 8.0))
+                 * p.quota for p in st.pod_order)))
+        if self.track_peak:
+            self.peak_gpus = max(self.peak_gpus,
+                                 len(self.recon.used_gpus()))
+        nxt = t + cfg.autoscale_interval_s
+        if nxt <= cfg.duration_s or self._any_work_left(t):
+            self._push(nxt, AUTOSCALE, st)
+        self._schedule_reclaims(t)
+        self._schedule_faults(t)
+        if self._outages:
+            self._close_recovered_outages(t)
+        self._dispatch(t, st)
 
     # ---- spot reclaims -----------------------------------------------------
     def _schedule_reclaims(self, t: float) -> None:
@@ -674,7 +358,6 @@ class EventEngine:
         self.recon.mark_doomed(uuid, kill_at, now=t)
         self.preempt["reclaims"] += 1
         for pod in g.pods:
-            self.touched_fns.add(pod.fn_id)
             st = self.fns.get(pod.fn_id)
             if st is None:
                 continue
@@ -695,7 +378,6 @@ class EventEngine:
         affected: Dict[str, FunctionState] = {}
         requeue: Dict[str, List[Request]] = {}
         for pod in g.pods:
-            self.touched_fns.add(pod.fn_id)
             st = self.fns.get(pod.fn_id)
             if st is None:
                 continue
@@ -706,7 +388,7 @@ class EventEngine:
             if rt.busy_until <= t:   # drained: finished, delivery was lazy
                 for r in rt.inflight:
                     r.completion = rt.busy_until
-                self._deliver(st, rt.inflight)
+                st.completed.extend(rt.inflight)
             else:                    # killed mid-batch
                 self.preempt["killed_batches"] += 1
                 keep = self._apply_retry_policy(t, st, rt.inflight)
@@ -838,7 +520,6 @@ class EventEngine:
         affected: Dict[str, FunctionState] = {}
         requeue: Dict[str, List[Request]] = {}
         for pod in g.pods:
-            self.touched_fns.add(pod.fn_id)
             st = self.fns.get(pod.fn_id)
             if st is None:
                 continue
@@ -849,7 +530,7 @@ class EventEngine:
             if rt.busy_until <= t:   # finished before the failure
                 for r in rt.inflight:
                     r.completion = rt.busy_until
-                self._deliver(st, rt.inflight)
+                st.completed.extend(rt.inflight)
             else:                    # killed mid-batch, instantly
                 keep = self._apply_retry_policy(t, st, rt.inflight)
                 if keep:
@@ -900,19 +581,14 @@ class EventEngine:
         inj = self._injector
         m = inj.model
         if kind == "straggler":
-            pod = self.recon.pod(target)
-            if pod is None:
+            if self.recon.pod(target) is None:
                 return   # pod scaled away; its process dies with it
-            self.touched_fns.add(pod.fn_id)
             self.fault_counts["stragglers"] += 1
             until = t + m.straggler_duration_s
             self._slow[target] = (until, m.straggler_factor)
             nxt = inj.draw_straggler(until)
         else:   # cache_loss
             self.fault_counts["cache_losses"] += 1
-            for g in self.recon.gpus.values():
-                if g.node == target:
-                    self.touched_fns.update(p.fn_id for p in g.pods)
             tracker = getattr(self.recon, "modelstate", None)
             if tracker is not None:
                 tracker.drop_node_cache(target, now=t)
@@ -927,7 +603,6 @@ class EventEngine:
         returns with a clean slate."""
         if pod.quarantined or pod.doomed:
             return
-        self.touched_fns.add(st.fid)
         self.fault_counts["quarantines"] += 1
         self.recon.set_quarantined(pod.pod_id, True)
         self._health.reset(pod.pod_id)
@@ -968,7 +643,7 @@ class EventEngine:
             if rt.inflight:
                 for r in rt.inflight:
                     r.completion = rt.busy_until
-                self._deliver(st, rt.inflight)
+                st.completed.extend(rt.inflight)
                 rt.inflight = []
             if pod.doomed or pod.quarantined:
                 continue   # draining (reclaim kill) or health-benched
@@ -1013,48 +688,19 @@ class EventEngine:
 
     # ---- main loop ---------------------------------------------------------
     def run(self) -> None:
-        """Drain the simulation to completion. Three event sources are
-        interleaved in (time, kind) order — the merged struct-of-arrays
-        arrival stream (kind ARRIVAL), the heap of irregular events
-        (dispatch wakeups, reclaims, faults), and the shared autoscale
-        sweep timer (kind AUTOSCALE) — while cost and fragmentation are
-        integrated exactly between distinct event times. Arrivals later
-        than ``duration_s + drop_after_s`` are shed. After return,
-        every ``FunctionState`` holds its completed requests (or the
-        streaming accumulator its folded metrics) and the cost meter
-        its integrated totals."""
+        """Drain the event heap to completion: seeds first arrivals and
+        autoscale timers, then processes events in (time, kind, seq)
+        order while integrating cost and fragmentation exactly between
+        events. Arrivals later than ``duration_s + drop_after_s`` are
+        shed. After return, every ``FunctionState`` holds its completed
+        requests and the cost meter its integrated totals."""
         cfg = self.cfg
         cutoff = cfg.duration_s + cfg.drop_after_s
-        fn_list = self.fn_list
-        for st in fn_list:
+        for st in self.fns.values():
             self._refresh_pods(st)
-        # ---- merged arrival stream (struct-of-arrays) ----
-        # parallel sorted arrays: arrival time, owning function slot,
-        # within-function position. One cursor replaces one heap
-        # push+pop per request; a stable sort keeps equal-time arrivals
-        # in slot order.
-        parts = [st.arrivals for st in fn_list if len(st.arrivals)]
-        if parts:
-            m_t = np.concatenate(parts)
-            m_slot = np.concatenate(
-                [np.full(len(st.arrivals), st.slot, dtype=np.int64)
-                 for st in fn_list if len(st.arrivals)])
-            m_pos = np.concatenate(
-                [np.arange(len(st.arrivals), dtype=np.int64)
-                 for st in fn_list if len(st.arrivals)])
-            order = np.argsort(m_t, kind="stable")
-            m_tl = m_t[order].tolist()     # plain floats/ints: the hot
-            m_sl = m_slot[order].tolist()  # loop stays out of numpy
-            m_pl = m_pos[order].tolist()   # scalar-indexing overhead
-        else:
-            m_tl, m_sl, m_pl = [], [], []
-        n_arr, mc = len(m_tl), 0
-        # ---- autoscale sweep state ----
-        # every function ticks on the same grid (seeded at t=0, stepped
-        # by autoscale_interval_s); the per-slot active mask replaces
-        # the scalar engine's per-function timer chains
-        self._active = np.ones(len(fn_list), dtype=bool)
-        sweep_t = 0.0
+            if st._arr:
+                self._push(st._arr[0], ARRIVAL, st)
+            self._push(0.0, AUTOSCALE, st)
         self._schedule_reclaims(0.0)   # chips provisioned at prewarm
         self._schedule_faults(0.0)
         self._cost_rates = self.cost.rates(self.recon)
@@ -1066,27 +712,9 @@ class EventEngine:
         last_t = 0.0
         heap = self._heap
         pop = heapq.heappop
-        INF = float("inf")
-        while True:
-            # skip merged entries an earlier block ingest already
-            # consumed (an arrival handler pulls EVERY arrival <= t of
-            # its function, exactly like the scalar engine)
-            while mc < n_arr and m_pl[mc] < fn_list[m_sl[mc]].next_arrival:
-                mc += 1
-            # next event = min over the three sources by (time, kind):
-            # ARRIVAL(0) < RECLAIM_NOTICE(1) < AUTOSCALE(2) < the rest,
-            # mirroring the scalar engine's same-timestamp priorities
-            t = m_tl[mc] if mc < n_arr else INF
-            kind, src = ARRIVAL, 0
-            if heap:
-                h = heap[0]
-                if h[0] < t or (h[0] == t and h[1] < kind):
-                    t, kind, src = h[0], h[1], 1
-            if sweep_t is not None and (sweep_t < t or
-                                        (sweep_t == t and AUTOSCALE < kind)):
-                t, kind, src = sweep_t, AUTOSCALE, 2
-            if t == INF:
-                break
+        while heap:
+            t, kind, _, st = pop(heap)
+            self.n_events += 1
             if t > cutoff:
                 # anything still queued has, by construction, aged out
                 usd += usd_rate * (cutoff - last_t)
@@ -1102,39 +730,32 @@ class EventEngine:
                 down += down_rate * (t - last_t)
                 last_t = t
             self.now = t
-            if src == 0:                   # merged arrival stream
-                st = fn_list[m_sl[mc]]
-                mc += 1
-                self.n_events += 1
+            if kind == ARRIVAL:
                 self._on_arrival(t, st)
-            elif src == 2:                 # autoscale sweep
-                sweep_t = (t + cfg.autoscale_interval_s
-                           if self._sweep(t) else None)
+            elif kind == AUTOSCALE:
+                self._on_autoscale(t, st)
                 usd_rate, gsec_rate = self._cost_rates
                 frag_rate = self._frag_rate
                 down_rate = self._down_rate
-            else:                          # irregular heap events
-                t, kind, _, st = pop(heap)
-                self.n_events += 1
-                if kind == RECLAIM_NOTICE:   # payload is the chip uuid
-                    self._on_reclaim_notice(t, st)
-                elif kind == RECLAIM_KILL:   # chip leaves: rates change
-                    self._on_reclaim_kill(t, st)
-                    usd_rate, gsec_rate = self._cost_rates
-                    frag_rate = self._frag_rate
-                elif kind == CHIP_FAIL:      # payload is the chip uuid
-                    self._on_chip_fail(t, st)
-                    usd_rate, gsec_rate = self._cost_rates
-                    frag_rate = self._frag_rate
-                    down_rate = self._down_rate
-                elif kind == POD_FAULT:      # payload is (kind, target)
-                    self._on_pod_fault(t, st)
-                elif kind == RETRY:          # payload is (fn_id, requests)
-                    self._on_retry(t, st)
-                elif kind == QUAR_LIFT:      # payload is (fn_id, pod_id)
-                    self._on_quarantine_lift(t, st)
-                else:
-                    self._dispatch(t, st)
+            elif kind == RECLAIM_NOTICE:   # payload is the chip uuid
+                self._on_reclaim_notice(t, st)
+            elif kind == RECLAIM_KILL:     # chip leaves: rates change
+                self._on_reclaim_kill(t, st)
+                usd_rate, gsec_rate = self._cost_rates
+                frag_rate = self._frag_rate
+            elif kind == CHIP_FAIL:        # payload is the chip uuid
+                self._on_chip_fail(t, st)
+                usd_rate, gsec_rate = self._cost_rates
+                frag_rate = self._frag_rate
+                down_rate = self._down_rate
+            elif kind == POD_FAULT:        # payload is (kind, target)
+                self._on_pod_fault(t, st)
+            elif kind == RETRY:            # payload is (fn_id, requests)
+                self._on_retry(t, st)
+            elif kind == QUAR_LIFT:        # payload is (fn_id, pod_id)
+                self._on_quarantine_lift(t, st)
+            else:
+                self._dispatch(t, st)
         if last_t < cfg.duration_s:  # idle pods accrue cost to end of run
             usd += usd_rate * (cfg.duration_s - last_t)
             gsec += gsec_rate * (cfg.duration_s - last_t)
@@ -1159,7 +780,7 @@ class EventEngine:
             for rt in st.runtimes.values():
                 for r in rt.inflight:
                     r.completion = rt.busy_until
-                self._deliver(st, rt.inflight)
+                    st.completed.append(r)
                 rt.inflight = []
             st.dropped += len(st.queue)
             st.drop_kinds["aged"] += len(st.queue)

@@ -61,6 +61,150 @@ def _unjsonf(x):
     return float("inf") if x is None else x
 
 
+# ---- streaming accumulators (the wide engine's constant-memory path) ----
+#: below this many samples the accumulator keeps every latency and
+#: answers percentile queries exactly (identical to the pooled path);
+#: past it the samples spill into the log-binned sketch
+STREAM_EXACT_LIMIT = 100_000
+#: sketch range: 10 us .. 10,000 s covers every latency the simulator
+#: can produce (service floors are ~ms, drop_after caps the tail)
+_SKETCH_LO = 1e-5
+_SKETCH_HI = 1e4
+_SKETCH_BINS = 4096
+
+
+class StreamingQuantiles:
+    """Constant-memory latency quantiles: exact up to ``exact_limit``
+    samples, then a fixed log-binned histogram.
+
+    The sketch spans [lo, hi) with ``bins`` geometric bins (default
+    10 us..10,000 s over 4096 bins, ratio 10^(9/4096) per bin). A
+    queried quantile returns the geometric midpoint of the bin holding
+    the target order statistic, so its relative error vs that order
+    statistic is at most half a bin width — ratio^0.5 - 1 ~= 0.26%.
+    Against numpy's linearly interpolated percentile this adds at most
+    one inter-sample gap; the documented (and tested) bound is <= 0.6%
+    relative error wherever adjacent order statistics fall within a
+    bin of each other (true for any smooth latency distribution at
+    realistic n; a quantile sitting exactly on a bimodal jump is
+    inherently ambiguous for every histogram sketch). Out-of-range
+    values clamp to the edge bins. Below the exact limit the answers
+    are byte-identical to ``slo.percentiles`` on the pooled array.
+    """
+
+    def __init__(self, exact_limit: int = STREAM_EXACT_LIMIT,
+                 lo: float = _SKETCH_LO, hi: float = _SKETCH_HI,
+                 bins: int = _SKETCH_BINS):
+        self.exact_limit = int(exact_limit)
+        self.lo, self.hi, self.bins = float(lo), float(hi), int(bins)
+        self._log_lo = math.log(self.lo)
+        self._log_span = math.log(self.hi) - self._log_lo
+        self.n = 0
+        self._exact: Optional[List[float]] = []
+        self._counts: Optional[np.ndarray] = None
+
+    #: documented worst-case relative error of a sketch-mode quantile
+    #: for in-range values (half a geometric bin)
+    @property
+    def rel_err_bound(self) -> float:
+        """Worst-case relative quantile error once spilled to the sketch."""
+        return (self.hi / self.lo) ** (0.5 / self.bins) - 1.0
+
+    @property
+    def is_sketch(self) -> bool:
+        """True once the accumulator has spilled into histogram mode."""
+        return self._counts is not None
+
+    def _bin_of(self, x: np.ndarray) -> np.ndarray:
+        idx = ((np.log(np.maximum(x, self.lo)) - self._log_lo)
+               / self._log_span * self.bins).astype(np.int64)
+        return np.clip(idx, 0, self.bins - 1)
+
+    def _spill(self) -> None:
+        self._counts = np.zeros(self.bins, dtype=np.int64)
+        if self._exact:
+            arr = np.asarray(self._exact, dtype=float)
+            np.add.at(self._counts, self._bin_of(arr), 1)
+        self._exact = None
+
+    def add_many(self, values) -> None:
+        """Fold an array of latency samples (seconds) into the sketch."""
+        arr = np.asarray(values, dtype=float)
+        if arr.size == 0:
+            return
+        self.n += arr.size
+        if self._counts is None:
+            self._exact.extend(arr.tolist())
+            if len(self._exact) > self.exact_limit:
+                self._spill()
+        else:
+            np.add.at(self._counts, self._bin_of(arr), 1)
+
+    def percentiles(self) -> Dict[str, float]:
+        """p50/p90/p95/p99 in the ``slo.percentiles`` shape: exact below
+        the limit, bin-midpoint answers (rel err <= ``rel_err_bound``)
+        after the spill, inf for an empty accumulator."""
+        if self._counts is None:
+            return percentiles(np.asarray(self._exact, dtype=float))
+        cum = np.cumsum(self._counts)
+        total = int(cum[-1])
+        if total == 0:
+            return percentiles(np.empty(0))
+        ratio = (self.hi / self.lo) ** (1.0 / self.bins)
+        out = {}
+        for name, q in (("p50", 50), ("p90", 90), ("p95", 95), ("p99", 99)):
+            # rank of np.percentile's linear interpolation target; the
+            # bin holding it bounds the true value within rel_err_bound
+            rank = math.ceil(q / 100.0 * (total - 1)) if total > 1 else 0
+            b = int(np.searchsorted(cum, rank + 1))
+            out[name] = self.lo * ratio ** (b + 0.5)
+        return out
+
+
+class RunStreamStats:
+    """Streaming ``RunMetrics`` inputs for the wide engine: exact SLO
+    violation counters per multiplier plus a ``StreamingQuantiles``
+    latency sketch, folded one delivery batch at a time so a
+    10M-request replay never holds its latencies in RAM.
+
+    Violation counts are *exact* regardless of sketch mode — each
+    completion is compared against ``m * slo_baseline`` at fold time —
+    so only the latency percentiles degrade (within the documented
+    bound) on runs past the exact limit.
+    """
+
+    def __init__(self, multipliers=DEFAULT_MULTIPLIERS,
+                 exact_limit: int = STREAM_EXACT_LIMIT):
+        self.multipliers = tuple(float(m) for m in multipliers)
+        self.viol = {m: 0 for m in self.multipliers}
+        self.n = 0
+        self.quantiles = StreamingQuantiles(exact_limit=exact_limit)
+
+    def fold(self, slo_baseline_s: float, reqs) -> None:
+        """Fold one batch of completed requests measured against the
+        owning function's SLO baseline (seconds)."""
+        lats = np.asarray([r.latency for r in reqs
+                           if r.latency is not None], dtype=float)
+        if lats.size == 0:
+            return
+        self.n += lats.size
+        self.quantiles.add_many(lats)
+        norm = lats / slo_baseline_s
+        for m in self.multipliers:
+            self.viol[m] += int((norm > m).sum())
+
+    def describe(self) -> Dict[str, object]:
+        """Provenance summary serialized as ``RunMetrics.streaming``."""
+        q = self.quantiles
+        d: Dict[str, object] = {"mode": "sketch" if q.is_sketch else "exact",
+                                "n": int(self.n),
+                                "exact_limit": int(q.exact_limit)}
+        if q.is_sketch:
+            d["bins"] = int(q.bins)
+            d["rel_err_bound"] = _round(q.rel_err_bound)
+        return d
+
+
 @dataclasses.dataclass
 class RunMetrics:
     """The one record every simulation run emits."""
@@ -104,6 +248,12 @@ class RunMetrics:
     drop_breakdown: Optional[Dict[str, int]] = None   # aged/killed/shed
     mttr_s: Optional[float] = None
     availability: Optional[float] = None
+    # streaming-metrics provenance (wide engine, ``stream_metrics``
+    # runs): accumulator mode (exact vs sketch), sample count, and the
+    # sketch's error bound when spilled. None (and absent from the
+    # JSON) for retain-everything runs — legacy goldens stay
+    # byte-identical
+    streaming: Optional[Dict] = None
 
     # ---- construction ------------------------------------------------------
     @classmethod
@@ -130,12 +280,36 @@ class RunMetrics:
             cold += st.cold_starts
             for k in ACTION_KINDS:
                 actions[k] += st.action_counts.get(k, 0)
-        lats = np.concatenate(lat_parts) if lat_parts else np.empty(0)
-        norm = np.concatenate(norm_parts) if norm_parts else np.empty(0)
-        pcts = percentiles(lats)
-        viol = {str(float(m)): (float((norm > m).mean()) if len(norm)
-                                else 1.0)
-                for m in slo_multipliers}
+        # the wide engine's stream-metrics runs fold completions into a
+        # RunStreamStats sink instead of retaining them: percentiles
+        # and violation counts come from the accumulator (violations
+        # exact; dropped requests still count as inf at every
+        # multiplier, matching the pooled semantics)
+        sink = getattr(engine, "stream_stats", None)
+        streaming = None
+        if sink is not None:
+            missing = [m for m in slo_multipliers
+                       if float(m) not in sink.viol]
+            if missing:
+                raise ValueError(
+                    f"streaming sink lacks multipliers {missing}: pass "
+                    f"them via SimConfig.stream_slo_multipliers (sink "
+                    f"tracks {sorted(sink.viol)})")
+            pcts = sink.quantiles.percentiles()
+            n_completed = int(sink.n)
+            denom = sink.n + n_dropped
+            viol = {str(float(m)):
+                    ((sink.viol[float(m)] + n_dropped) / denom
+                     if denom else 1.0)
+                    for m in slo_multipliers}
+            streaming = sink.describe()
+        else:
+            lats = np.concatenate(lat_parts) if lat_parts else np.empty(0)
+            norm = np.concatenate(norm_parts) if norm_parts else np.empty(0)
+            pcts = percentiles(lats)
+            viol = {str(float(m)): (float((norm > m).mean()) if len(norm)
+                                    else 1.0)
+                    for m in slo_multipliers}
         cost = engine.cost
         # surface fragmentation only for non-reference fleets: the
         # serialized record of an all-default run must stay bitwise
@@ -188,7 +362,8 @@ class RunMetrics:
             start_kinds=start_kinds, time_to_ready_ms=ttr_ms,
             preemptions=preempt,
             faults=faults, retries=retries, drop_breakdown=drop_breakdown,
-            mttr_s=mttr, availability=avail)
+            mttr_s=mttr, availability=avail,
+            streaming=streaming)
 
     # ---- serialization -----------------------------------------------------
     def to_dict(self) -> dict:
@@ -221,6 +396,10 @@ class RunMetrics:
                 d["mttr_s"] = _jsonf(d["mttr_s"])
             if d.get("availability") is not None:
                 d["availability"] = _jsonf(d["availability"])
+        if d.get("streaming") is None:   # retain-everything runs omit it
+            d.pop("streaming", None)
+        else:
+            d["streaming"] = dict(sorted(d["streaming"].items()))
         for k in ("duration_s", "cost_usd", "cost_per_1k_usd",
                   "gpu_seconds"):
             d[k] = _jsonf(d[k])

@@ -34,16 +34,16 @@ class MultiFunctionSimulator:
 
     def __init__(self, specs: List[FnSpec], policies, recon: Reconfigurator,
                  arrivals: Dict[str, np.ndarray],
-                 cfg: SimConfig = SimConfig()):
+                 cfg: SimConfig = SimConfig(), engine_cls=EventEngine):
         self.cfg = cfg
         self.recon = recon
         self.cost = CostMeter(whole_gpu=cfg.whole_gpu_cost)
         self.states = [FunctionState(spec, policies[spec.fn_id],
                                      arrivals[spec.fn_id])
                        for spec in specs]
-        self.engine = EventEngine(recon, cfg, self.states, cost=self.cost,
-                                  rng=np.random.default_rng(cfg.seed),
-                                  track_peak=True)
+        self.engine = engine_cls(recon, cfg, self.states, cost=self.cost,
+                                 rng=np.random.default_rng(cfg.seed),
+                                 track_peak=True)
 
     @property
     def peak_gpus(self) -> int:

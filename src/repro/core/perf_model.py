@@ -50,9 +50,16 @@ class FnSpec:
     """A serverless inference function: an architecture served at a batch."""
     arch: ArchConfig
     seq: int = SEQ_PER_REQUEST
+    # tenant label for wide fleets: distinguishes fn_ids when hundreds
+    # of functions share an architecture, but is excluded from eq/hash
+    # so every physics lru_cache and CapacityTable lattice collapses
+    # across variants (same arch + seq => same physics)
+    variant: str = dataclasses.field(default="", compare=False)
 
     @property
     def fn_id(self) -> str:
+        if self.variant:
+            return f"fn-{self.arch.name}-{self.variant}"
         return f"fn-{self.arch.name}"
 
 

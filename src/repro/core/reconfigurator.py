@@ -93,6 +93,10 @@ class Reconfigurator:
         self._fn_gpus: Dict[str, Dict[str, int]] = {}  # fn -> {uuid: #pods}
         self._capacity_models: Dict[str, Callable[[PodAlloc], float]] = {}
         self._contrib: Dict[str, float] = {}          # pod_id -> thpt
+        # incremental |used_gpus()|: maintained by the place/remove
+        # hooks so the wide engine's per-sweep peak tracking is O(1)
+        # instead of an O(G) scan per function per tick
+        self.n_used_gpus = 0
         for _ in range(num_gpus):
             self.add_gpu()
 
@@ -177,6 +181,8 @@ class Reconfigurator:
 
     def release_empty_gpus(self, keep: int = 0) -> List[str]:
         """Return (and drop) GPUs with no pods (paper L25-26)."""
+        if len(self.gpus) == self.n_used_gpus:
+            return []   # O(1) fast path: nothing empty to scan for
         empty = [u for u, g in self.gpus.items() if not g.pods]
         released = []
         for u in empty:
@@ -312,6 +318,8 @@ class Reconfigurator:
     def _index_place(self, pod: PodAlloc, g: VirtualGPU) -> None:
         self._pods[pod.pod_id] = pod
         self._pod_gpu[pod.pod_id] = g.uuid
+        if len(g.pods) == 1:   # hook fires after append: 0 -> 1 pods
+            self.n_used_gpus += 1
         gmap = self._fn_gpus.setdefault(pod.fn_id, {})
         gmap[g.uuid] = gmap.get(g.uuid, 0) + 1
         self._update_contrib(pod)
@@ -319,6 +327,8 @@ class Reconfigurator:
     def _index_remove(self, pod: PodAlloc, g: VirtualGPU) -> None:
         self._pods.pop(pod.pod_id, None)
         self._pod_gpu.pop(pod.pod_id, None)
+        if not g.pods:         # hook fires after removal: 1 -> 0 pods
+            self.n_used_gpus -= 1
         self._contrib.pop(pod.pod_id, None)
         gmap = self._fn_gpus.get(pod.fn_id)
         if gmap is not None:
@@ -389,4 +399,6 @@ class Reconfigurator:
         # the indexes must agree with the authoritative GPU state
         indexed = set(self._pods)
         actual = {p.pod_id for g in self.gpus.values() for p in g.pods}
-        return indexed == actual
+        if indexed != actual:
+            return False
+        return self.n_used_gpus == sum(1 for g in self.gpus.values() if g.pods)

@@ -65,11 +65,14 @@ def result_from_state(st: FunctionState, cost: CostMeter,
     """Fold a drained FunctionState into the stable SimResult API."""
     lats = np.array([r.latency for r in st.completed
                      if r.latency is not None])
+    # stream-metrics runs fold completions into the engine's sink
+    # instead of retaining them: the count survives on the state
+    n_comp = len(lats) + getattr(st, "stream_n_completed", 0)
     base = perf_model.slo_baseline(st.spec, baseline_batch)
     return SimResult(
-        latencies=lats, n_arrived=len(st.arrivals), n_completed=len(lats),
+        latencies=lats, n_arrived=len(st.arrivals), n_completed=n_comp,
         n_dropped=st.dropped, cost_usd=cost.total_usd,
-        cost_per_1k=cost.per_1k_requests(len(lats)),
+        cost_per_1k=cost.per_1k_requests(n_comp),
         baseline_s=base, pcts=percentiles(lats),
         pod_seconds=cost.gpu_seconds, timeline=st.timeline,
         cold_starts=st.cold_starts, action_counts=dict(st.action_counts))
@@ -77,8 +80,11 @@ def result_from_state(st: FunctionState, cost: CostMeter,
 
 class ClusterSimulator:
     def __init__(self, spec: FnSpec, policy, recon: Reconfigurator,
-                 arrivals: np.ndarray, cfg: SimConfig = SimConfig()):
-        """arrivals: sorted array of request arrival times (seconds)."""
+                 arrivals: np.ndarray, cfg: SimConfig = SimConfig(),
+                 engine_cls=EventEngine):
+        """arrivals: sorted array of request arrival times (seconds).
+        ``engine_cls`` swaps the event engine (the scalar reference
+        ``core/engine_scalar.py`` for parity/benchmark runs)."""
         self.spec = spec
         self.policy = policy
         self.recon = recon
@@ -86,9 +92,9 @@ class ClusterSimulator:
         self.cfg = cfg
         self.cost = CostMeter(whole_gpu=cfg.whole_gpu_cost)
         self.state = FunctionState(spec, policy, arrivals)
-        self.engine = EventEngine(recon, cfg, [self.state], cost=self.cost,
-                                  rng=np.random.default_rng(cfg.seed),
-                                  track_peak=True)
+        self.engine = engine_cls(recon, cfg, [self.state], cost=self.cost,
+                                 rng=np.random.default_rng(cfg.seed),
+                                 track_peak=True)
 
     # introspection used by tests/tools; delegates to the engine state
     @property

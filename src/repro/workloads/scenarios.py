@@ -82,7 +82,11 @@ class Scenario:
     keeps the engine's fault layer fully disarmed — the byte-identity
     state of every legacy golden. ``sim_overrides`` passes extra
     ``SimConfig`` keyword overrides (e.g. a tighter ``drop_after_s``
-    for overload scenarios).
+    for overload scenarios). ``width`` replicates the arch list
+    round-robin into that many tenant functions (``FnSpec.variant``
+    labels keep their fn_ids distinct while the physics caches still
+    collapse per arch) — the wide-engine fleet regime; 1 (the
+    default) is the legacy one-function-per-arch shape.
     """
     name: str
     description: str
@@ -98,14 +102,21 @@ class Scenario:
     faults: Optional[FaultModel] = None
     resilience: Optional[ResilienceConfig] = None
     sim_overrides: Optional[Dict] = None
+    width: int = 1
 
     def with_(self, **overrides) -> "Scenario":
         """A derived scenario (e.g. another arch, horizon, or fleet)."""
         return dataclasses.replace(self, **overrides)
 
     def fn_specs(self):
-        """The ``FnSpec`` list this scenario serves (one per arch)."""
-        return [FnSpec(ARCHS[a]) for a in self.archs]
+        """The ``FnSpec`` list this scenario serves: one per arch, or —
+        for ``width > 1`` fleets — ``width`` variant-labelled tenants
+        cycling round-robin through the arch list."""
+        if self.width <= 1:
+            return [FnSpec(ARCHS[a]) for a in self.archs]
+        return [FnSpec(ARCHS[self.archs[i % len(self.archs)]],
+                       variant=f"w{i:04d}")
+                for i in range(self.width)]
 
     def make_recon(self, fleet=None) -> Reconfigurator:
         """Build this scenario's cluster. ``fleet`` overrides the
@@ -128,7 +139,7 @@ class Scenario:
             duration_s: Optional[float] = None,
             base_rps: Optional[float] = None,
             policy_factory: Optional[Callable] = None,
-            fleet=None) -> "ScenarioOutcome":
+            fleet=None, engine_cls=None) -> "ScenarioOutcome":
         """Simulate this scenario under ``policy`` and fold the run into
         a ``RunMetrics``.
 
@@ -140,6 +151,9 @@ class Scenario:
             policy_factory: ``(policy_name, recon) -> policy`` hook for
                 ablations substituting custom-configured policies.
             fleet: fleet-declaration override (see ``make_recon``).
+            engine_cls: event-engine override (the scalar reference
+                ``core/engine_scalar.py`` for parity/benchmark runs);
+                None uses the default wide engine.
         Returns: a ``ScenarioOutcome`` with the run's ``RunMetrics``,
         the engine-level result object, and the simulator itself.
         """
@@ -158,10 +172,17 @@ class Scenario:
                                          prewarm_lead_s=0.0)
             recon.attach_modelstate(ModelStateTracker(lc))
         whole = POLICIES[policy][1]
+        overrides = dict(self.sim_overrides or {})
+        if (overrides.get("stream_metrics")
+                and "stream_slo_multipliers" not in overrides):
+            # the streaming sink must track exactly the multipliers the
+            # RunMetrics fold will ask for
+            overrides["stream_slo_multipliers"] = tuple(self.slo_multipliers)
         cfg = SimConfig(duration_s=dur, whole_gpu_cost=whole, seed=seed,
                         faults=self.faults, resilience=self.resilience,
-                        **(self.sim_overrides or {}))
+                        **overrides)
         factory = policy_factory or make_policy
+        ekw = {} if engine_cls is None else {"engine_cls": engine_cls}
         if self.colocated or len(specs) > 1:
             policies, arrs = {}, {}
             for i, spec in enumerate(specs):
@@ -169,12 +190,14 @@ class Scenario:
                 pol.prewarm(spec, rps)
                 policies[spec.fn_id] = pol
                 arrs[spec.fn_id] = self.arrivals_for(i, dur, rps, seed)
-            sim = MultiFunctionSimulator(specs, policies, recon, arrs, cfg)
+            sim = MultiFunctionSimulator(specs, policies, recon, arrs, cfg,
+                                         **ekw)
         else:
             pol = factory(policy, recon)
             pol.prewarm(specs[0], rps)
             sim = ClusterSimulator(specs[0], pol, recon,
-                                   self.arrivals_for(0, dur, rps, seed), cfg)
+                                   self.arrivals_for(0, dur, rps, seed), cfg,
+                                   **ekw)
         if recon.modelstate is not None:
             # deploy-time prewarm placements are not run-time starts
             # (the engine adopted lc.idle_retention_factor on its own)
@@ -285,6 +308,23 @@ register(Scenario(
     base_rps=12.0,
     max_gpus=96,
     colocated=True))
+
+register(Scenario(
+    name="azure_wide",
+    description="Azure-Functions-style replay at fleet width: 400 tenant "
+                "functions (a dense/SSM/audio arch mix, round-robin) "
+                "co-located on one cluster, each with a long-tail "
+                "low-rate trace — the multi-tenant regime the wide "
+                "engine's struct-of-arrays batching targets. Runs with "
+                "streaming metrics (constant-memory latency sketch) and "
+                "per-function rng isolation; only practical post-PR-9.",
+    trace=lambda d, r, s: azure.standard_workload(d, r, seed=s),
+    archs=("olmo-1b", "mamba2-2.7b", "whisper-medium"),
+    base_rps=2.0,
+    max_gpus=96,
+    colocated=True,
+    width=400,
+    sim_overrides={"stream_metrics": True, "rng_isolation": True}))
 
 register(Scenario(
     name="het_mix",

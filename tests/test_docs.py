@@ -119,6 +119,36 @@ def test_fault_lifecycle_doc_drift():
             f"{needle!r} missing from the fault walkthrough")
 
 
+def test_wide_engine_doc_drift():
+    """architecture.md's "The wide engine" section must exist and name
+    the load-bearing pieces of the PR 9 rewrite: the struct-of-arrays
+    sources, the frozen scalar reference, the streaming-metrics
+    accumulator and its knobs, the bench gate, and the three test
+    suites pinning it."""
+    from repro.core.engine_scalar import ScalarEventEngine  # noqa: F401
+    from repro.core.metrics import STREAM_EXACT_LIMIT  # noqa: F401
+
+    text = ARCHITECTURE_MD.read_text()
+    assert "## The wide engine" in text
+    section = text.split("## The wide engine", 1)[1]
+    section = section.split("\n## ", 1)[0]
+    for needle in ("struct-of-arrays", "sweep", "heap",
+                   "engine_scalar", "stream_metrics", "rng_isolation",
+                   "StreamingQuantiles", "STREAM_EXACT_LIMIT",
+                   "n_used_gpus", "_THPT_CACHE_MAX", "azure_wide",
+                   "benchmarks/bench_engine.py",
+                   "benchmarks/ref_engine.json",
+                   "tests/test_engine_parity.py",
+                   "tests/test_streaming_metrics.py",
+                   "tests/test_wide_engine.py"):
+        assert needle in section, (
+            f"{needle!r} missing from the wide-engine section")
+    assert (REPO / "benchmarks" / "ref_engine.json").exists(), (
+        "benchmarks/ref_engine.json (the CI gate's committed reference) "
+        "is missing; regenerate with: python -m benchmarks.bench_engine "
+        "--smoke --update-ref")
+
+
 def test_calibration_doc_drift():
     """architecture.md's "Calibrating the physics" section must exist
     and name the load-bearing pieces of the sim-to-silicon loop: the

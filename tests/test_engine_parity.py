@@ -1,0 +1,185 @@
+"""Differential-fuzz parity: wide engine vs the frozen scalar reference.
+
+The PR 9 wide engine (``core/events.py``: merged arrival stream, batched
+autoscale sweeps, O(1) peak tracking) must be observably IDENTICAL to
+the pre-refactor event loop kept verbatim as
+``core/engine_scalar.ScalarEventEngine`` — same role
+``simulator_tick.py`` played for the PR 1 engine swap. These tests
+generate random small scenario configs across the feature matrix
+(mixed fleets, spot markets, fault models, lifecycle on/off, all three
+policies) and assert the serialized ``RunMetrics`` records are
+byte-identical.
+
+hypothesis drives the search when installed (optional dev dependency);
+the seeded-fallback test always runs on a fixed config sample so a
+hypothesis-free CI lane still gets differential coverage — the
+``test_core_properties.py`` idiom, extended with the fallback.
+
+The scalar reference predates ``stream_metrics`` / ``rng_isolation``,
+so every generated config keeps both off (their own behavior is pinned
+by ``tests/test_wide_engine.py`` and ``tests/test_streaming_metrics.py``).
+"""
+import dataclasses
+import random
+
+import pytest
+
+from repro.core import FaultModel, ResilienceConfig
+from repro.core.engine_scalar import ScalarEventEngine
+from repro.workloads import azure, generators
+from repro.workloads.scenarios import LIFECYCLE_CACHED, Scenario
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:       # pragma: no cover - hypothesis-free CI lanes
+    HAVE_HYPOTHESIS = False
+
+# deterministic spot market for the fuzzed spot-fleet option (storms
+# land inside the short fuzz horizons)
+from repro.configs.gpus import GPUMarket, spot  # noqa: E402
+
+_FUZZ_MARKET = GPUMarket(price_multiplier=0.25, reclaim_rate_per_hour=30.0,
+                         grace_period_s=3.0, storm_multiplier=40.0,
+                         storm_period_s=20.0, storm_duration_s=5.0,
+                         storm_start_s=4.0)
+
+TRACES = {
+    "poisson": generators.homogeneous_poisson,
+    "mmpp": lambda d, r, s: generators.mmpp(d, r, burst_multiplier=6.0,
+                                            mean_calm_s=8.0,
+                                            mean_burst_s=4.0, seed=s),
+    "flash": lambda d, r, s: generators.flash_crowd(d, r,
+                                                    spike_multiplier=6.0,
+                                                    ramp_s=3.0, hold_s=5.0,
+                                                    seed=s),
+    "azure": lambda d, r, s: azure.standard_workload(d, r, seed=s),
+}
+
+FLEETS = {
+    "homog": None,
+    "het": (("a10g", 8), ("a100", 4)),
+    "spot": (("v5e", 3), (spot("v5e", _FUZZ_MARKET), 10)),
+}
+
+FAULTS = {
+    "none": (None, None),
+    "chaos": (FaultModel(chip_failure_rate_per_hour=200.0,
+                         straggler_rate_per_hour=80.0,
+                         straggler_factor=6.0, straggler_duration_s=8.0),
+              None),
+    "resilient": (FaultModel(chip_failure_rate_per_hour=150.0,
+                             cache_loss_rate_per_hour=40.0),
+                  ResilienceConfig(deadline_s=8.0, max_retries=2,
+                                   retry_backoff_s=0.3,
+                                   quarantine_ratio=3.0,
+                                   quarantine_min_samples=2,
+                                   quarantine_duration_s=5.0)),
+}
+
+ARCH_SETS = (("olmo-1b",), ("mamba2-2.7b",),
+             ("olmo-1b", "whisper-medium"),
+             ("olmo-1b", "mamba2-2.7b", "whisper-medium"))
+
+
+def run_both(trace, archs, rps, dur, policy, fleet_key, fault_key,
+             lifecycle, width, seed):
+    """One differential run: (wide RunMetrics JSON, scalar ditto)."""
+    faults, resilience = FAULTS[fault_key]
+    sc = Scenario(
+        name="fuzz", description="differential-fuzz config",
+        trace=TRACES[trace], archs=archs, base_rps=rps, duration_s=dur,
+        max_gpus=12, colocated=len(archs) > 1 or width > 1,
+        fleet=FLEETS[fleet_key],
+        lifecycle=LIFECYCLE_CACHED if lifecycle else None,
+        faults=faults, resilience=resilience, width=width)
+    wide = sc.run(policy, seed=seed).metrics
+    scalar = sc.run(policy, seed=seed,
+                    engine_cls=ScalarEventEngine).metrics
+    return wide, scalar
+
+
+def assert_parity(wide, scalar):
+    # diff() first for a readable field-by-field failure, then the
+    # byte-level pin the goldens rely on
+    assert wide.diff(scalar, rel=0.0, abs_tol=0.0) == []
+    assert wide.to_json() == scalar.to_json()
+
+
+# a fixed sample spanning the feature matrix: every trace family, every
+# fleet kind, every fault mode, every policy, lifecycle on and off,
+# single- and multi-function, width>len(archs) (variant fn_ids)
+FALLBACK_CASES = [
+    ("poisson", ARCH_SETS[0], 30.0, 10.0, "has", "homog", "none",
+     False, 1, 7),
+    ("mmpp", ARCH_SETS[2], 15.0, 12.0, "kserve", "het", "none",
+     False, 1, 11),
+    ("flash", ARCH_SETS[0], 25.0, 10.0, "fast", "homog", "chaos",
+     False, 1, 3),
+    ("azure", ARCH_SETS[3], 8.0, 10.0, "has", "homog", "none",
+     True, 5, 23),
+    ("poisson", ARCH_SETS[1], 40.0, 9.0, "has", "spot", "none",
+     False, 1, 5),
+    ("mmpp", ARCH_SETS[0], 20.0, 10.0, "has", "homog", "resilient",
+     True, 1, 13),
+]
+
+
+@pytest.mark.parametrize("case", FALLBACK_CASES,
+                         ids=[f"{c[0]}-{c[4]}-{c[5]}-{c[6]}-w{c[8]}"
+                              for c in FALLBACK_CASES])
+def test_parity_seeded_fallback(case):
+    """Always-on differential sample (no hypothesis required)."""
+    wide, scalar = run_both(*case)
+    assert_parity(wide, scalar)
+    # the runs must carry signal, not vacuous empty traces
+    assert wide.n_arrived > 20
+
+
+def test_parity_random_sample():
+    """A seeded random walk over the config space — catches corners the
+    hand-picked fallback list misses, without hypothesis installed."""
+    rng = random.Random(0xC0FFEE)
+    for _ in range(4):
+        case = (rng.choice(list(TRACES)),
+                rng.choice(ARCH_SETS),
+                rng.uniform(5.0, 40.0),
+                rng.uniform(8.0, 12.0),
+                rng.choice(["has", "kserve", "fast"]),
+                rng.choice(list(FLEETS)),
+                rng.choice(list(FAULTS)),
+                rng.random() < 0.5,
+                rng.choice([1, 1, 4]),
+                rng.randrange(10_000))
+        wide, scalar = run_both(*case)
+        assert_parity(wide, scalar)
+
+
+if HAVE_HYPOTHESIS:
+    @given(trace=st.sampled_from(sorted(TRACES)),
+           archs=st.sampled_from(ARCH_SETS),
+           rps=st.floats(5.0, 40.0),
+           policy=st.sampled_from(["has", "kserve", "fast"]),
+           fleet_key=st.sampled_from(sorted(FLEETS)),
+           fault_key=st.sampled_from(sorted(FAULTS)),
+           lifecycle=st.booleans(),
+           width=st.sampled_from([1, 3, 6]),
+           seed=st.integers(0, 2**16))
+    @settings(max_examples=12, deadline=None)
+    def test_parity_hypothesis(trace, archs, rps, policy, fleet_key,
+                               fault_key, lifecycle, width, seed):
+        """hypothesis-driven differential fuzz over the same space."""
+        wide, scalar = run_both(trace, archs, rps, 9.0, policy, fleet_key,
+                                fault_key, lifecycle, width, seed)
+        assert_parity(wide, scalar)
+
+
+def test_scalar_reference_is_frozen():
+    """The reference must stay the pre-refactor loop: no merged-stream
+    or sweep machinery may leak into it (it would defeat the diff)."""
+    import inspect
+
+    src = inspect.getsource(ScalarEventEngine)
+    assert "_sweep" not in src
+    assert "argsort" not in src
+    assert "_on_autoscale" in src   # per-function timers, not sweeps

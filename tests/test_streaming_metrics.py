@@ -1,0 +1,176 @@
+"""Streaming-metrics equivalence: the constant-memory accumulator must
+agree with the exact pooled path.
+
+Covers the PR 9 satellite: sketch quantiles within the documented error
+bound on adversarial latency distributions (bimodal, heavy-tail,
+constant), exact-mode byte-identity below the spill limit, RunMetrics
+round-tripping of the new ``streaming`` field, and end-to-end
+stream-vs-retain equality of a real wide-engine run.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.metrics import (DEFAULT_MULTIPLIERS, RunMetrics,
+                                RunStreamStats, STREAM_EXACT_LIMIT,
+                                StreamingQuantiles)
+from repro.core.slo import percentiles
+from repro.workloads.scenarios import get_scenario
+
+#: documented sketch accuracy (StreamingQuantiles docstring)
+DOC_BOUND = 0.006
+
+
+def _adversarial(name: str, n: int, rng: np.random.Generator) -> np.ndarray:
+    if name == "bimodal":
+        # 2 ms floor mode vs 1.5 s tail mode, asymmetric weights so the
+        # queried quantiles sit inside a mode, not on the jump
+        pick = rng.random(n) < 0.7
+        return np.where(pick, rng.normal(2e-3, 2e-4, n).clip(1e-4),
+                        rng.normal(1.5, 0.1, n).clip(0.5))
+    if name == "heavy_tail":
+        return rng.pareto(1.5, n) * 1e-2 + 1e-3
+    if name == "constant":
+        return np.full(n, 0.125)
+    raise KeyError(name)
+
+
+@pytest.mark.parametrize("dist", ["bimodal", "heavy_tail", "constant"])
+def test_sketch_within_documented_bound(dist):
+    """Sketch-mode quantiles vs numpy on adversarial distributions."""
+    rng = np.random.default_rng(11)
+    data = _adversarial(dist, 50_000, rng)
+    q = StreamingQuantiles(exact_limit=1_000)  # force the spill early
+    for chunk in np.array_split(data, 37):     # uneven streamed batches
+        q.add_many(chunk)
+    assert q.is_sketch and q.n == len(data)
+    got = q.percentiles()
+    want = percentiles(data)
+    for k in want:
+        rel = abs(got[k] - want[k]) / want[k]
+        assert rel <= DOC_BOUND, (dist, k, got[k], want[k], rel)
+    assert q.rel_err_bound < DOC_BOUND
+
+
+def test_exact_mode_byte_identical_below_limit():
+    """Below the spill limit the accumulator IS slo.percentiles."""
+    rng = np.random.default_rng(5)
+    data = rng.lognormal(-3.0, 1.0, 5_000)
+    q = StreamingQuantiles()
+    q.add_many(data[:2_000])
+    q.add_many(data[2_000:])
+    assert not q.is_sketch
+    assert q.percentiles() == percentiles(data)
+
+
+def test_sketch_clamps_out_of_range():
+    """Values outside [lo, hi) land in the edge bins, not out of range."""
+    q = StreamingQuantiles(exact_limit=0)
+    q.add_many([1e-9, 1e-8, 1e-7, 1e6])
+    got = q.percentiles()
+    assert all(np.isfinite(v) and v > 0 for v in got.values())
+    assert got["p50"] <= q.lo * 2          # underflow edge bin
+    assert got["p99"] >= q.hi / 2          # overflow edge bin
+
+
+def test_empty_accumulator_is_inf():
+    q = StreamingQuantiles(exact_limit=0)
+    assert q.percentiles() == percentiles(np.empty(0))
+    s = RunStreamStats()
+    assert s.n == 0 and all(v == 0 for v in s.viol.values())
+
+
+def test_violation_counts_exact_even_in_sketch_mode():
+    """SLO violation counters never degrade: fold-time comparison, not
+    a sketch read-back."""
+
+    class _R:  # minimal Request stand-in
+        def __init__(self, lat):
+            self.latency = lat
+
+    rng = np.random.default_rng(9)
+    lats = rng.lognormal(-2.0, 1.2, 30_000)
+    base = 0.2
+    s = RunStreamStats(exact_limit=100)    # deep in sketch mode
+    for chunk in np.array_split(lats, 11):
+        s.fold(base, [_R(x) for x in chunk])
+    assert s.quantiles.is_sketch
+    norm = lats / base
+    for m in DEFAULT_MULTIPLIERS:
+        assert s.viol[m] == int((norm > m).sum())
+    # None latencies (undelivered stand-ins) are ignored, like the pool
+    s.fold(base, [_R(None)])
+    assert s.n == len(lats)
+
+
+def test_describe_tracks_mode_transition():
+    s = RunStreamStats(exact_limit=10)
+    d = s.describe()
+    assert d == {"mode": "exact", "n": 0, "exact_limit": 10}
+
+    class _R:
+        def __init__(self, lat):
+            self.latency = lat
+
+    s.fold(1.0, [_R(0.5)] * 25)
+    d = s.describe()
+    assert d["mode"] == "sketch" and d["n"] == 25
+    assert d["bins"] == 4096 and 0 < d["rel_err_bound"] <= DOC_BOUND
+
+
+def test_default_exact_limit_is_constant_memory_scale():
+    """The default crossover keeps exact-mode RAM modest (~0.8 MB of
+    floats) while every golden-scale run stays exact."""
+    assert 10_000 <= STREAM_EXACT_LIMIT <= 1_000_000
+
+
+# ---- RunMetrics integration ------------------------------------------------
+
+WIDE_SMALL = dict(width=8, duration_s=8.0, seed=5)
+
+
+def _wide_run(stream: bool):
+    sc = get_scenario("azure_wide").with_(
+        width=WIDE_SMALL["width"],
+        sim_overrides=({"stream_metrics": True, "rng_isolation": True}
+                       if stream else {"rng_isolation": True}))
+    return sc.run("has", seed=WIDE_SMALL["seed"],
+                  duration_s=WIDE_SMALL["duration_s"]).metrics
+
+
+def test_stream_vs_retain_equal_below_exact_limit():
+    """End to end: a stream-metrics run and a retain-everything run of
+    the same config produce the same record (the streaming field aside)
+    — the accumulator is exact below the spill limit, violation
+    counters always."""
+    streamed = _wide_run(stream=True)
+    retained = _wide_run(stream=False)
+    assert streamed.streaming is not None and retained.streaming is None
+    assert streamed.streaming["mode"] == "exact"
+    ds, dr = streamed.to_dict(), retained.to_dict()
+    ds.pop("streaming")
+    assert ds == dr
+
+
+def test_streaming_field_round_trips():
+    """from_dict/from_json must round-trip the new streaming fields."""
+    m = _wide_run(stream=True)
+    again = RunMetrics.from_json(m.to_json())
+    assert again.streaming == m.streaming
+    assert again.to_json() == m.to_json()
+    # and absent stays absent (legacy goldens): no key, None field
+    plain = _wide_run(stream=False)
+    d = json.loads(plain.to_json())
+    assert "streaming" not in d
+    assert RunMetrics.from_dict(d).streaming is None
+
+
+def test_missing_multiplier_raises_clear_error():
+    """A sink that doesn't track a requested multiplier must fail the
+    fold loudly, not silently report a wrong rate."""
+    sc = get_scenario("azure_wide").with_(
+        width=4, sim_overrides={"stream_metrics": True,
+                                "stream_slo_multipliers": (1.5,)})
+    with pytest.raises(ValueError, match="stream_slo_multipliers"):
+        sc.run("has", seed=1, duration_s=6.0)

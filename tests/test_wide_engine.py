@@ -1,0 +1,195 @@
+"""Wide-engine invariants at fleet width (PR 9).
+
+Conservation and rng-isolation property tests at width N~200, the
+``_thpt_cache`` bound regression, the azure_wide bounded-memory smoke,
+and the incremental ``n_used_gpus`` counter — extending the
+``test_determinism.py`` byte-identity discipline to the
+struct-of-arrays cluster state.
+"""
+import numpy as np
+import pytest
+
+from repro.core import FaultModel, ResilienceConfig, SimConfig
+from repro.core.events import _THPT_CACHE_MAX
+from repro.core.multisim import MultiFunctionSimulator
+from repro.workloads.scenarios import get_scenario, make_policy
+
+
+def build_wide(width, duration_s, seed, rps=2.0, max_gpus=64,
+               rng_isolation=False, faults=None, resilience=None,
+               arrival_edit=None):
+    """An azure_wide-shaped simulator in retain mode, with optional
+    fault layer and an ``arrival_edit(i, arr) -> arr`` hook for
+    perturbation experiments."""
+    sc = get_scenario("azure_wide").with_(width=width, max_gpus=max_gpus,
+                                          sim_overrides=None)
+    specs = sc.fn_specs()
+    recon = sc.make_recon(None)
+    cfg = SimConfig(duration_s=duration_s, whole_gpu_cost=False, seed=seed,
+                    rng_isolation=rng_isolation, faults=faults,
+                    resilience=resilience)
+    policies, arrs = {}, {}
+    for i, spec in enumerate(specs):
+        pol = make_policy("has", recon)
+        pol.prewarm(spec, rps)
+        policies[spec.fn_id] = pol
+        a = sc.arrivals_for(i, duration_s, rps, seed)
+        if arrival_edit is not None:
+            a = arrival_edit(i, a)
+        arrs[spec.fn_id] = a
+    return MultiFunctionSimulator(specs, policies, recon, arrs, cfg)
+
+
+def _traces(sim):
+    return {st.fid: tuple(r.latency for r in st.completed)
+            for st in sim.states}
+
+
+# ---- conservation at width -------------------------------------------------
+
+def test_conservation_at_width_200():
+    """Every arrival is accounted for, per function: arrived ==
+    completed + dropped, with the drop breakdown summing exactly."""
+    sim = build_wide(width=200, duration_s=8.0, seed=17)
+    sim.engine.run()
+    assert len(sim.states) == 200
+    total = 0
+    for st in sim.states:
+        n_comp = len([r for r in st.completed if r.latency is not None])
+        assert len(st.arrivals) == n_comp + st.dropped, st.fid
+        assert st.dropped == sum(st.drop_kinds.values()), st.fid
+        total += len(st.arrivals)
+    assert total > 1000   # the property must be exercised by real load
+
+
+def test_conservation_under_faults():
+    """Conservation survives the chaos paths (kills, retries, sheds)
+    and the breakdown still sums to the per-function drop count."""
+    fm = FaultModel(chip_failure_rate_per_hour=250.0,
+                    straggler_rate_per_hour=60.0, straggler_factor=6.0,
+                    straggler_duration_s=6.0)
+    res = ResilienceConfig(deadline_s=6.0, max_retries=2,
+                           retry_backoff_s=0.3, admission_headroom=0.5)
+    sim = build_wide(width=40, duration_s=10.0, seed=23, rps=6.0,
+                     max_gpus=24, faults=fm, resilience=res)
+    sim.engine.run()
+    assert sim.engine.fault_counts   # chaos actually fired
+    for st in sim.states:
+        n_comp = len([r for r in st.completed if r.latency is not None])
+        assert len(st.arrivals) == n_comp + st.dropped, st.fid
+        assert st.dropped == sum(st.drop_kinds.values()), st.fid
+
+
+# ---- rng isolation -----------------------------------------------------------
+
+def test_arrival_perturbation_is_isolated():
+    """Under ``rng_isolation`` each function draws service noise from
+    its own stream: halving function 0's arrivals leaves every other
+    function's completed-latency trace byte-identical."""
+    kw = dict(width=12, duration_s=10.0, seed=9, rps=4.0,
+              rng_isolation=True)
+    a = build_wide(**kw)
+    a.engine.run()
+    b = build_wide(**kw, arrival_edit=lambda i, arr: arr[::2] if i == 0
+                   else arr)
+    b.engine.run()
+    ta, tb = _traces(a), _traces(b)
+    victim = a.states[0].fid
+    assert ta[victim] != tb[victim]        # the perturbation landed
+    for fid in ta:
+        if fid != victim:
+            assert ta[fid] == tb[fid], fid
+
+
+def test_shared_stream_is_coupled_without_isolation():
+    """The control: with the legacy shared rng, the same perturbation
+    leaks into other functions' draws — documenting exactly what
+    ``rng_isolation`` buys (and why goldens keep it off)."""
+    kw = dict(width=12, duration_s=10.0, seed=9, rps=4.0,
+              rng_isolation=False)
+    a = build_wide(**kw)
+    a.engine.run()
+    b = build_wide(**kw, arrival_edit=lambda i, arr: arr[::2] if i == 0
+                   else arr)
+    b.engine.run()
+    ta, tb = _traces(a), _traces(b)
+    victim = a.states[0].fid
+    assert any(ta[fid] != tb[fid] for fid in ta if fid != victim)
+
+
+def test_fault_toggle_leaves_untouched_functions_identical():
+    """Arming pod-level stragglers perturbs only the functions the
+    engine marks touched (``touched_fns``); everything else keeps a
+    byte-identical trace under rng isolation."""
+    fm = FaultModel(straggler_rate_per_hour=60.0, straggler_factor=8.0,
+                    straggler_duration_s=6.0)
+    kw = dict(width=12, duration_s=10.0, seed=9, rps=4.0,
+              rng_isolation=True)
+    a = build_wide(**kw)
+    a.engine.run()
+    b = build_wide(**kw, faults=fm)
+    b.engine.run()
+    touched = b.engine.touched_fns
+    assert touched               # the fault model actually fired
+    untouched = [fid for fid in _traces(a) if fid not in touched]
+    assert untouched             # and the blast radius was partial
+    ta, tb = _traces(a), _traces(b)
+    for fid in untouched:
+        assert ta[fid] == tb[fid], fid
+
+
+# ---- _thpt_cache bound (bugfix regression) ---------------------------------
+
+def test_thpt_cache_is_bounded():
+    """The dispatch-throughput memo must stay flat across a long wide
+    run: the engine-level cache grew one entry per (fn, batch, sm,
+    quota, device) EVER seen — unbounded under vertical scaling's
+    off-grid quota floats. Now per-function and capped."""
+    sim = build_wide(width=2, duration_s=2.0, seed=1)
+    eng = sim.engine
+    st = sim.states[0]
+
+    class _P:
+        def __init__(self, q):
+            self.batch, self.sm, self.quota, self.gpu_type = 8, 4, q, None
+
+    for i in range(3 * _THPT_CACHE_MAX):
+        eng._thpt(st, _P(0.1 + i * 1e-6))   # off-grid quota floats
+        assert len(st._thpt_cache) <= _THPT_CACHE_MAX
+    # memo stays correct across the clears
+    q = 0.1 + 7 * 1e-6
+    assert eng._thpt(st, _P(q)) == eng._thpt(st, _P(q))
+    # and it is per-function state, not engine-global
+    assert st._thpt_cache is not sim.states[1]._thpt_cache
+
+
+# ---- azure_wide / streaming ------------------------------------------------
+
+def test_azure_wide_bounded_memory_smoke():
+    """The registered azure_wide scenario runs the constant-memory
+    path: no completion records retained, the streaming sink carries
+    every completion, and the record declares its provenance."""
+    sc = get_scenario("azure_wide")
+    assert sc.width == 400
+    out = sc.run("has", seed=3, duration_s=6.0)
+    eng = out.simulator.engine
+    assert sum(len(st.completed) for st in eng.fns.values()) == 0
+    assert eng.stream_stats is not None
+    assert eng.stream_stats.n > 0
+    m = out.metrics
+    assert m.streaming is not None
+    assert m.n_completed == eng.stream_stats.n
+    assert m.n_arrived == m.n_completed + m.n_dropped
+    # 400 distinct tenant functions, physics caches shared per arch
+    assert len(eng.fns) == 400
+    assert len({st.spec.arch.name for st in eng.fns.values()}) == 3
+
+
+def test_n_used_gpus_counter_matches_scan():
+    """The incremental used-chip counter (O(1) peak tracking) agrees
+    with the authoritative O(G) scan after a churny spot run."""
+    sc = get_scenario("spot_reclaim_storm")
+    out = sc.run("has", seed=11, duration_s=12.0)
+    recon = out.simulator.engine.recon
+    assert recon.n_used_gpus == len(recon.used_gpus())
+    assert recon.invariant_ok()
