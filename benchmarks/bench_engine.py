@@ -1,39 +1,51 @@
-"""Wide-engine event throughput: the event-loop perf gate for PR 9.
+"""Wide-engine event throughput: the event-loop perf gate for PR 9/10.
 
 Times the struct-of-arrays wide engine (``core/events.py``) against the
-frozen scalar reference (``core/engine_scalar.py``) on the azure_wide
-fleet shape — hundreds-to-thousands of tenant functions, long-tail
-low-rate traces — and records events/second, wall time, and peak traced
-memory (tracemalloc, Python-heap peak) for both, plus the
-streaming-vs-retain memory comparison on the wide engine.
+frozen scalar reference (``core/engine_scalar.py``) AND against itself
+with the PR 10 batched decide path disabled (``batched_policy=False``,
+the PR 9 baseline) on the azure_wide fleet shape — hundreds-to-
+thousands of tenant functions, long-tail low-rate traces — and records
+events/second, sweep-phase seconds, wall time, and peak traced memory
+(tracemalloc, Python-heap peak), plus the streaming-vs-retain memory
+comparison on the wide engine. ``--full`` additionally replays a
+multi-day Azure-style trace (vectorized builders in
+``workloads/azure.py``) at width 2000 through the wide engine alone —
+the million-request replay regime the batched sweep targets.
 
-JSON format (schema ``bench_engine/v1``)::
+JSON format (schema ``bench_engine/v2``)::
 
     {
-      "schema": "bench_engine/v1",
+      "schema": "bench_engine/v2",
       "smoke": false,
       "config": {"width": ..., "base_rps": ..., "duration_s": ...,
                  "max_gpus": ..., "seed": ...},
       "results": [
         {"name": "engine_wide", "events_per_s": ..., "n_events": ...,
-         "seconds": ..., "peak_mb": ...},
-        {"name": "engine_scalar", ...},
+         "seconds": ..., "peak_mb": ..., "sweep_seconds": ...,
+         "n_sweeps": ..., "sweeps_per_s": ..., "fast_ticks": ...},
+        {"name": "engine_nobatch", ...},   # batched decide path off
+        {"name": "engine_scalar", ...},    # no sweep fields (no sweeps)
         {"name": "mem_stream_wide", "peak_mb": ..., "n_completed": ...},
-        {"name": "mem_exact_wide", "peak_mb": ..., "n_completed": ...}
+        {"name": "mem_exact_wide", "peak_mb": ..., "n_completed": ...},
+        {"name": "engine_wide_replay", ...}  # --full only
       ],
-      "speedup": ...   # engine_wide events/s over engine_scalar
+      "speedup": ...,        # engine_wide events/s over engine_scalar
+      "sweep_speedup": ...   # nobatch sweep_seconds over wide ditto
     }
 
 Entry names are stable identifiers; CI runs ``--smoke --check
 benchmarks/ref_engine.json`` and fails when the wide engine is more
 than ``--factor`` slower than the reference after normalizing by the
 scalar engine's throughput on the same machine (the calibration entry,
-mirroring ``bench_control_plane``), or when the measured speedup falls
+mirroring ``bench_control_plane``), when the measured speedup falls
 below ``--min-speedup`` (default 2.0 in smoke mode — small fleets leave
 less O(N*G) work to hoist — and 10.0 at full size, the PR 9 acceptance
-floor). ``--update-ref`` regenerates the reference. Both engines must
-process the identical event count or the run fails outright: the bench
-doubles as a cheap parity tripwire.
+floor), or when the batched sweep's sweep-phase speedup over the
+legacy loop falls below ``--min-sweep-speedup`` (default 2.0 smoke,
+3.0 full — the PR 10 acceptance floor). ``--update-ref`` regenerates
+the reference. All engine arms must process the identical event count
+or the run fails outright: the bench doubles as a cheap parity
+tripwire.
 """
 from __future__ import annotations
 
@@ -46,6 +58,7 @@ import tracemalloc
 from repro.core import SimConfig
 from repro.core.engine_scalar import ScalarEventEngine
 from repro.core.multisim import MultiFunctionSimulator
+from repro.workloads import azure
 from repro.workloads.scenarios import get_scenario, make_policy
 
 REF_PATH = "benchmarks/ref_engine.json"
@@ -58,25 +71,42 @@ SMOKE_CFG = dict(width=250, base_rps=4.0, duration_s=10.0, max_gpus=96,
 # per-tick O(cluster) rescans dominate (>=10x measured on this shape)
 FULL_CFG = dict(width=1200, base_rps=5.0, duration_s=15.0, max_gpus=384,
                 seed=3)
+# the --full replay: two days of Azure-style long-tail traffic across
+# 2000 tenants (~14M requests), streamed metrics, no timeline retention,
+# 5s sweep cadence — wide engine only (the scalar reference would take
+# hours). base_rps is PER-FUNCTION here, unlike the shapes above where
+# the same value feeds every tenant's trace at azure_wide's burst mix.
+REPLAY_CFG = dict(width=2000, base_rps=0.04, duration_s=172800.0,
+                  max_gpus=640, seed=3)
 
 
 def build_sim(width: int, base_rps: float, duration_s: float,
               max_gpus: int, seed: int, engine_cls=None,
-              stream_metrics: bool = False) -> MultiFunctionSimulator:
+              stream_metrics: bool = False, replay: bool = False,
+              batched: bool = True) -> MultiFunctionSimulator:
     """An azure_wide-shaped simulator, built OUTSIDE the timed region
     (trace generation and prewarm placement are setup, not event-loop
     work). ``stream_metrics`` arms the constant-memory sink (wide
-    engine only; the scalar reference predates it)."""
+    engine only; the scalar reference predates it). ``replay`` swaps in
+    the vectorized multi-day trace builders plus the replay-scale
+    engine knobs (streamed metrics, no timeline retention, 5s sweeps).
+    ``batched=False`` disables the PR 10 batched decide path (the
+    legacy per-function sweep loop — the PR 9 baseline)."""
     sc = get_scenario("azure_wide").with_(width=width, max_gpus=max_gpus,
                                           sim_overrides=None)
+    if replay:
+        sc = sc.with_(trace=lambda d, r, s: azure.replay_workload(
+            duration_s=d, base_rps=r, seed=s))
     specs = sc.fn_specs()
     recon = sc.make_recon(None)
     kw = {}
-    if stream_metrics:
+    if stream_metrics or replay:
         kw.update(stream_metrics=True,
                   stream_slo_multipliers=tuple(sc.slo_multipliers))
+    if replay:
+        kw.update(record_timeline=False, autoscale_interval_s=5.0)
     cfg = SimConfig(duration_s=duration_s, whole_gpu_cost=False, seed=seed,
-                    **kw)
+                    batched_policy=batched, **kw)
     policies, arrs = {}, {}
     for i, spec in enumerate(specs):
         pol = make_policy("has", recon)
@@ -87,10 +117,22 @@ def build_sim(width: int, base_rps: float, duration_s: float,
     return MultiFunctionSimulator(specs, policies, recon, arrs, cfg, **ekw)
 
 
-def _run_timed(cfg: dict, engine_cls=None) -> dict:
+def _sweep_stats(engine) -> dict:
+    """Sweep-phase counters (wide engines only — the scalar reference
+    drives per-function timers, not sweeps)."""
+    secs = getattr(engine, "sweep_seconds", None)
+    if secs is None:
+        return {}
+    n = int(engine.n_sweeps)
+    return {"sweep_seconds": secs, "n_sweeps": n,
+            "sweeps_per_s": n / secs if secs > 0 else float("inf"),
+            "fast_ticks": int(engine.fast_ticks)}
+
+
+def _run_timed(cfg: dict, engine_cls=None, **build_kw) -> dict:
     """One timed engine run: events/s over the whole drain (the engines
     process identical event streams, so rates are comparable 1:1)."""
-    sim = build_sim(**cfg, engine_cls=engine_cls)
+    sim = build_sim(**cfg, engine_cls=engine_cls, **build_kw)
     tracemalloc.start()
     t0 = time.perf_counter()
     sim.engine.run()
@@ -99,7 +141,8 @@ def _run_timed(cfg: dict, engine_cls=None) -> dict:
     tracemalloc.stop()
     n = int(sim.engine.n_events)
     return {"events_per_s": n / dt if dt > 0 else float("inf"),
-            "n_events": n, "seconds": dt, "peak_mb": peak / 1e6}
+            "n_events": n, "seconds": dt, "peak_mb": peak / 1e6,
+            **_sweep_stats(sim.engine)}
 
 
 def _run_memory(cfg: dict, stream_metrics: bool) -> dict:
@@ -120,32 +163,43 @@ def _run_memory(cfg: dict, stream_metrics: bool) -> dict:
     return {"peak_mb": peak / 1e6, "n_completed": n_comp}
 
 
-def run(smoke: bool = False) -> dict:
+def run(smoke: bool = False, replay: bool = False) -> dict:
     cfg = SMOKE_CFG if smoke else FULL_CFG
     results = []
     wide = _run_timed(cfg)
+    nobatch = _run_timed(cfg, batched=False)
     scalar = _run_timed(cfg, engine_cls=ScalarEventEngine)
-    if wide["n_events"] != scalar["n_events"]:
+    counts = {"wide": wide["n_events"], "nobatch": nobatch["n_events"],
+              "scalar": scalar["n_events"]}
+    if len(set(counts.values())) != 1:
         raise AssertionError(
-            f"engine event-count divergence: wide={wide['n_events']} "
-            f"scalar={scalar['n_events']} — the engines no longer "
-            f"process the same event stream")
+            f"engine event-count divergence: {counts} — the engine arms "
+            f"no longer process the same event stream")
     results.append({"name": "engine_wide", **wide})
+    results.append({"name": "engine_nobatch", **nobatch})
     results.append({"name": "engine_scalar", **scalar})
     results.append({"name": "mem_stream_wide",
                     **_run_memory(cfg, stream_metrics=True)})
     results.append({"name": "mem_exact_wide",
                     **_run_memory(cfg, stream_metrics=False)})
-    return {"schema": "bench_engine/v1", "smoke": smoke,
-            "config": dict(cfg), "results": results,
-            "speedup": wide["events_per_s"] / scalar["events_per_s"]}
+    report = {"schema": "bench_engine/v2", "smoke": smoke,
+              "config": dict(cfg), "results": results,
+              "speedup": wide["events_per_s"] / scalar["events_per_s"],
+              "sweep_speedup": (nobatch["sweep_seconds"]
+                                / max(wide["sweep_seconds"], 1e-12))}
+    if replay:
+        rep = _run_timed(REPLAY_CFG, replay=True)
+        results.append({"name": "engine_wide_replay",
+                        "config": dict(REPLAY_CFG), **rep})
+    return report
 
 
 CALIBRATION_ENTRY = "engine_scalar"
 
 
 def check(report: dict, ref_path: str, factor: float,
-          cal_factor: float = 10.0, min_speedup: float = 2.0) -> int:
+          cal_factor: float = 10.0, min_speedup: float = 2.0,
+          min_sweep_speedup: float = 2.0) -> int:
     """Fail on event-throughput regression vs the reference.
 
     Rates are normalized by each run's own scalar-engine throughput
@@ -153,8 +207,9 @@ def check(report: dict, ref_path: str, factor: float,
     offsets; the calibration entry itself gets the generous
     ``cal_factor`` gate (machine drift vs genuine shared-path
     regression). The measured wide-over-scalar speedup must also stay
-    above ``min_speedup`` — the absolute floor the PR's acceptance
-    criteria pin, independent of any reference file."""
+    above ``min_speedup`` and the batched-over-legacy sweep-phase
+    speedup above ``min_sweep_speedup`` — absolute floors the PRs'
+    acceptance criteria pin, independent of any reference file."""
     with open(ref_path) as f:
         ref = json.load(f)
     if report.get("smoke") != ref.get("smoke"):
@@ -194,6 +249,12 @@ def check(report: dict, ref_path: str, factor: float,
           f"(floor {min_speedup:.1f}x)")
     if sp < min_speedup:
         failures.append("speedup")
+    ssp = report.get("sweep_speedup", 0.0)
+    status = "FAIL" if ssp < min_sweep_speedup else "ok"
+    print(f"{status:>4}  {'sweep_speedup':<16} {ssp:>12.2f}x  "
+          f"(floor {min_sweep_speedup:.1f}x)")
+    if ssp < min_sweep_speedup:
+        failures.append("sweep_speedup")
     if failures:
         print(f"regression vs {ref_path}: {failures}", file=sys.stderr)
         return 1
@@ -204,6 +265,10 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
                     help="small fleet width for CI")
+    ap.add_argument("--full", action="store_true",
+                    help="also replay the multi-day Azure trace at "
+                         "width 2000 (wide engine only; minutes of "
+                         "wall time — the nightly lane)")
     ap.add_argument("--out", default="BENCH_engine.json")
     ap.add_argument("--check", metavar="REF",
                     help="fail on regression vs this reference")
@@ -214,20 +279,29 @@ def main(argv=None) -> int:
     ap.add_argument("--min-speedup", type=float, default=None,
                     help="wide-over-scalar events/s floor (default 2.0 "
                          "smoke, 10.0 full)")
+    ap.add_argument("--min-sweep-speedup", type=float, default=None,
+                    help="batched-over-legacy sweep-phase floor "
+                         "(default 2.0 smoke, 3.0 full)")
     ap.add_argument("--update-ref", action="store_true",
                     help=f"also write the report to {REF_PATH}")
     args = ap.parse_args(argv)
+    if args.smoke and args.full:
+        ap.error("--smoke and --full are mutually exclusive")
 
-    report = run(smoke=args.smoke)
+    report = run(smoke=args.smoke, replay=args.full)
     for r in report["results"]:
         if "events_per_s" in r:
-            print(f"{r['name']:<16} {r['events_per_s']:>12,.0f} events/s  "
-                  f"({r['n_events']} events, {r['seconds']:.2f}s, "
+            sweep = (f", sweep {r['sweep_seconds']:.2f}s"
+                     if "sweep_seconds" in r else "")
+            print(f"{r['name']:<18} {r['events_per_s']:>12,.0f} events/s  "
+                  f"({r['n_events']} events, {r['seconds']:.2f}s{sweep}, "
                   f"peak {r['peak_mb']:.1f} MB)")
         else:
-            print(f"{r['name']:<16} peak {r['peak_mb']:>8.1f} MB  "
+            print(f"{r['name']:<18} peak {r['peak_mb']:>8.1f} MB  "
                   f"({r['n_completed']} completions)")
-    print(f"speedup          {report['speedup']:>12.2f}x wide over scalar")
+    print(f"speedup            {report['speedup']:>12.2f}x wide over scalar")
+    print(f"sweep_speedup      {report['sweep_speedup']:>12.2f}x batched "
+          f"over legacy loop")
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
         f.write("\n")
@@ -241,8 +315,11 @@ def main(argv=None) -> int:
         floor = args.min_speedup
         if floor is None:
             floor = 2.0 if args.smoke else 10.0
+        sweep_floor = args.min_sweep_speedup
+        if sweep_floor is None:
+            sweep_floor = 2.0 if args.smoke else 3.0
         return check(report, args.check, args.factor, args.cal_factor,
-                     floor)
+                     floor, sweep_floor)
     return 0
 
 

@@ -48,10 +48,12 @@ import dataclasses
 import math
 from typing import Callable, Dict, List, Optional
 
+import numpy as np
+
 from repro.configs.gpus import DEFAULT_GPU_TYPE, GPUType
 from repro.core import capacity as capacity_mod
 from repro.core import modelstate as modelstate_mod
-from repro.core.kalman import KalmanPredictor
+from repro.core.kalman import BatchedKalman, KalmanPredictor
 from repro.core.perf_model import FnSpec
 from repro.core.reconfigurator import Reconfigurator
 from repro.core.scheduler import FleetPlacer
@@ -714,3 +716,156 @@ class HybridAutoScaler:
                 actions.append(ScalingAction(spec.fn_id, pod.pod_id, "vdown",
                                              f"q->{new_q:.2f}"))
         return actions
+
+
+# ---- batched sweep decide path (wide engine fast path) ----------------------
+#
+# The wide engine's autoscale sweep touches EVERY active function; at
+# azure_wide width the Python-per-function observe -> Kalman -> decide
+# loop dominates wall-clock even though almost every tick is a no-op
+# (the prediction sits inside the [beta, alpha] band and scale() returns
+# without acting). SweepDecider vectorizes exactly that common case:
+# one BatchedKalman update for the fleet plus one array comparison
+# against lattice-backed capacities classifies every slot into
+# no-op / scale-up / scale-down / bootstrap bands, and only the slots
+# that actually need action drop into the per-function scale() path.
+#
+# Correctness contract: for an ELIGIBLE slot, the batched classify plus
+# (for action slots) a direct ``scale(now, spec, predicted)`` call is
+# byte-identical to ``tick(now, spec, observed)`` — the filter lanes
+# reproduce KalmanPredictor bitwise, the band tests reuse scale()'s own
+# expressions, and a no-op tick's scale() call has no observable side
+# effects. Ineligible slots (spot router, active pre-warm forecasting,
+# non-Kalman predictors, HybridAutoScaler subclasses) always take the
+# full per-function tick().
+
+def fast_path_eligible(policy) -> bool:
+    """Whether ``policy``'s per-tick behavior is fully captured by the
+    batched decide path.
+
+    Requires exactly ``HybridAutoScaler`` (a subclass may override
+    anything), no spot router (``_rebalance_to_spot`` runs — and may
+    act — on every tick of a spot fleet), and no forecast-driven
+    pre-warming (``_maybe_prewarm`` reads consecutive predictions only
+    when a tracker is live AND ``prewarm_lead_s > 0``; otherwise its
+    only effect is `_prev_pred` bookkeeping nothing reads).
+    """
+    return (type(policy) is HybridAutoScaler
+            and not policy._spot_fleet
+            and (policy._tracker() is None
+                 or policy.cfg.prewarm_lead_s <= 0))
+
+
+class SweepDecider:
+    """Struct-of-arrays decide pass over the fleet's function slots.
+
+    Slots are adopted with :meth:`bind` (one per function, at engine
+    start); each sweep then calls :meth:`decide` once with the batched
+    observations to get per-slot predictions and an action mask. The
+    per-slot band tests mirror ``HybridAutoScaler.scale`` exactly:
+
+        up        = pred > C_f * alpha
+        down-cand = pred < C_f * beta  and  C_f > r_min
+                    and  now - last_scale_down >= cooldown_s
+        action    = up | down-cand | no-pods (bootstrap)
+
+    A fresh down-candidate routes to scale() even when scale() will end
+    up shedding nothing — the fast path only ever skips ticks that are
+    provably no-ops. But sterile down attempts REPEAT: scale() only
+    refreshes the cooldown clock when it actually sheds, so a function
+    pinned at its floor (single pod, quota at the SLO minimum)
+    re-candidates every sweep forever — the dominant tick class on
+    long-tail fleets. ``_scale_down``'s two shed gates are monotone in
+    ``delta = C_f - max(R, r_min)/alpha`` (a pod removable at delta is
+    removable at any larger delta; a quota step shed-blocked at delta
+    stays blocked at any smaller one), so one action-free call at
+    delta0 proves every retry with delta <= delta0 action-free while
+    the pod set is unchanged. ``sterile_delta`` memoizes that proof per
+    slot; the engine wipes it whenever the slot's pod set is refreshed
+    and suppresses proven-sterile down-candidates on the fast path.
+    """
+
+    def __init__(self, n_slots: int):
+        self.n = n_slots
+        self.kalman = BatchedKalman(n_slots)
+        self.eligible = np.zeros(n_slots, dtype=bool)
+        # alpha defaults to 1 (not 0) so the delta division is warning-
+        # free on unbound lanes — their results are masked out anyway
+        self.alpha = np.ones(n_slots)
+        self.beta = np.zeros(n_slots)
+        self.cooldown = np.zeros(n_slots)
+        self.r_min = np.zeros(n_slots)
+        self.last_down = np.full(n_slots, -1e18)
+        # largest scale-down delta proven action-free for the CURRENT
+        # pod set (-inf: no proof); see the class docstring
+        self.sterile_delta = np.full(n_slots, -np.inf)
+        # memoized policy.capacity(spec) per slot — C_f only changes
+        # when the slot's pod set / quotas / health flags do, so the
+        # engine invalidates it at the same points as sterile_delta
+        # (plus quarantine-set, which flips capacity without a refresh)
+        self.cap = np.zeros(n_slots)
+        self.cap_ok = [False] * n_slots
+        self._policies: list = [None] * n_slots
+        self._fids: list = [None] * n_slots
+
+    def bind(self, slot: int, policy, fn_id: str) -> bool:
+        """Adopt ``(policy, fn_id)`` into ``slot``; returns whether the
+        slot is eligible for the fast path. Creates (or adopts) the
+        policy's Kalman lane — a pre-seeded non-Kalman predictor (the
+        ablation swap) makes the slot ineligible."""
+        self._policies[slot] = policy
+        self._fids[slot] = fn_id
+        ok = fast_path_eligible(policy)
+        if ok:
+            pred = policy.kalman.setdefault(fn_id, KalmanPredictor())
+            ok = type(pred) is KalmanPredictor
+            if ok:
+                self.kalman.bind(slot, pred)
+                cfg = policy.cfg
+                self.alpha[slot] = cfg.alpha
+                self.beta[slot] = cfg.beta
+                self.cooldown[slot] = cfg.cooldown_s
+                self.r_min[slot] = cfg.r_min
+                self.last_down[slot] = policy.last_scale_down.get(
+                    fn_id, -1e18)
+        self.eligible[slot] = ok
+        return ok
+
+    def decide(self, now: float, obs: np.ndarray, cap: np.ndarray,
+               has_pods: np.ndarray, mask: np.ndarray):
+        """One batched observe -> predict -> classify pass.
+
+        ``mask`` selects the slots participating this sweep (active AND
+        eligible); other lanes keep their state and return stale
+        predictions that callers must ignore. Returns
+        ``(pred, action, sterile, down_band, delta)``:
+
+        - ``action`` flags masked slots needing a real ``scale()`` call;
+        - ``sterile`` flags down-candidates suppressed by a memoized
+          action-free proof (``delta <= sterile_delta``) — the engine
+          may fast-path them ONLY while the cluster has no empty chips
+          (so scale()'s trailing ``release_empty_gpus()`` would no-op);
+        - ``down_band`` / ``delta`` let the engine record a fresh proof
+          when a slow-path down-band scale() returns no actions.
+        """
+        pred = self.kalman.update(obs, mask)
+        up = pred > cap * self.alpha
+        down = ((pred < cap * self.beta) & (cap > self.r_min)
+                & (now - self.last_down >= self.cooldown))
+        # scale() evaluates the up band first, so the down band (and
+        # with it the sterility memo) only applies when up is False
+        down_band = down & ~up & has_pods
+        delta = cap - np.maximum(pred, self.r_min) / self.alpha
+        sterile = down_band & (delta <= self.sterile_delta)
+        action = mask & (up | down | ~has_pods) & ~sterile
+        return pred, action, mask & sterile, down_band, delta
+
+    def refresh_after_scale(self, slot: int) -> None:
+        """Re-read ``last_scale_down`` after a slow-path scale() call
+        (a shed refreshes the cooldown clock the band test reads)."""
+        self.last_down[slot] = self._policies[slot].last_scale_down.get(
+            self._fids[slot], -1e18)
+
+    def sync_back(self) -> None:
+        """Scatter filter lanes back into the per-policy predictors."""
+        self.kalman.sync_back()

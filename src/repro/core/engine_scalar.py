@@ -297,9 +297,13 @@ class ScalarEventEngine:
             self._dispatch(t, st)
             return
         self._shed(t, st)
-        observed = (st.observed_in_window(t)
-                    / max(min(t, OBS_WINDOW_S), 1e-9) if t > 0 else 0.0)
-        observed += len(st.queue) / OBS_WINDOW_S  # backlog drain demand
+        # both the arrival term and the backlog-drain term divide by
+        # the elapsed-horizon-clamped window (PR 10 fix: the backlog
+        # term used to divide by the full OBS_WINDOW_S even when
+        # t < OBS_WINDOW_S, undercounting backlog demand early on)
+        win = max(min(t, OBS_WINDOW_S), 1e-9) if t > 0 else OBS_WINDOW_S
+        observed = st.observed_in_window(t) / win if t > 0 else 0.0
+        observed += len(st.queue) / win  # backlog drain demand
         # snapshot quota VALUES before the policy mutates pods in place;
         # between autoscale events the pod set is immutable, so the
         # cached pod_order is the authoritative before-state

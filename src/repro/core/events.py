@@ -97,6 +97,7 @@ import dataclasses
 import heapq
 import itertools
 from collections import deque
+from time import perf_counter
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -163,6 +164,17 @@ class SimConfig:
     # per-function traces are independent of co-tenant scheduling.
     # Both knobs default off: legacy runs stay bitwise identical
     rng_isolation: bool = False
+    # ---- batched-sweep knobs (PR 10) ----
+    # vectorize the per-sweep policy path (batched shed/observe, one
+    # BatchedKalman update for the fleet, array band classification —
+    # see core/autoscaler.py::SweepDecider); slots the decider can't
+    # prove fast-path-safe, and every slot when False, take the legacy
+    # per-function tick() loop. Byte-identical either way
+    batched_policy: bool = True
+    # retain the per-function (t, observed, pods, quota) autoscale
+    # timeline; off for replay-scale runs where nothing reads it
+    # (RunMetrics never does) and the per-sweep appends dominate memory
+    record_timeline: bool = True
 
 
 @dataclasses.dataclass
@@ -232,6 +244,9 @@ class FunctionState:
         self._thpt_cache: Dict[tuple, float] = {}
         self._slo_base: Optional[float] = None
         self._svc_rng = None   # set by the engine (shared or per-slot)
+        # memoized (len(pod_order), quota-share sum) for timeline rows
+        # of fast-path no-op ticks; invalidated with pod_order
+        self._tl_cache: Optional[tuple] = None
 
     @property
     def fn_id(self) -> str:
@@ -256,6 +271,20 @@ class FunctionState:
         # lazy) is not pending work — only still-running batches count
         return any(rt.inflight and rt.busy_until > now
                    for rt in self.runtimes.values())
+
+
+def window_counts(m_t: np.ndarray, m_slot: np.ndarray, t: float,
+                  n_slots: int) -> np.ndarray:
+    """Per-slot arrival counts in ``[t - OBS_WINDOW_S, t]`` off the
+    merged sorted arrival arrays — one vectorized searchsorted pass
+    over the whole fleet replacing per-function ``observed_in_window``
+    calls. Exactly equal, slot by slot, to
+    ``FunctionState.observed_in_window(t)``: the stable merge preserves
+    each function's sorted subsequence, so the two searchsorted bounds
+    select the same multiset of arrivals per slot."""
+    lo = np.searchsorted(m_t, t - OBS_WINDOW_S, side="left")
+    hi = np.searchsorted(m_t, t, side="right")
+    return np.bincount(m_slot[lo:hi], minlength=n_slots)
 
 
 # per-function dispatch-throughput memo cap: vertical scaling
@@ -307,6 +336,17 @@ class EventEngine:
         self.peak_gpus = 0
         self.now = 0.0
         self.n_events = 0   # processed events (bench_engine events/s)
+        # sweep-phase instrumentation (bench_engine sweeps/s) and the
+        # count of per-function ticks served by the batched fast path
+        self.sweep_seconds = 0.0
+        self.n_sweeps = 0
+        self.fast_ticks = 0
+        # batched decide state, built in run() when cfg.batched_policy:
+        # the SweepDecider (core/autoscaler.py) plus the merged sorted
+        # arrival arrays retained in numpy form for window_counts
+        self._decider = None
+        self._m_t: Optional[np.ndarray] = None
+        self._m_slot: Optional[np.ndarray] = None
         self._heap: list = []
         self._seq = itertools.count()
         # constant-memory metrics sink (stream_metrics runs only);
@@ -346,6 +386,14 @@ class EventEngine:
             for t, _ in getattr(recon, "fleet", ()))
         self._reclaim_rng = np.random.default_rng([cfg.seed, 0x5EC1A13])
         self._reclaim_scheduled: set = set()   # chip uuids with a draw
+        if self._has_spot:
+            # prune the draw bookkeeping as chips leave the cluster
+            # (policy release, reclaim kill, or hard failure): uuids
+            # are never reused, so a dropped chip's entry can never be
+            # consulted again — without this the set grows without
+            # bound across a long spot replay
+            recon.drop_listeners.append(
+                lambda g: self._reclaim_scheduled.discard(g.uuid))
         self.preempt: Dict[str, int] = {
             "reclaims": 0, "drained_batches": 0, "killed_batches": 0,
             "requeued_requests": 0, "dropped_in_flight": 0}
@@ -472,6 +520,13 @@ class EventEngine:
                     r.completion = rt.busy_until
                 self._deliver(st, rt.inflight)
         st.pod_order = sorted(pods, key=lambda p: -self._thpt(st, p))
+        st._tl_cache = None
+        if self._decider is not None:
+            # the slot's pod set may have changed: any memoized
+            # "scale-down is action-free" proof and cached capacity
+            # are stale
+            self._decider.sterile_delta[st.slot] = -np.inf
+            self._decider.cap_ok[st.slot] = False
         st.maybe_idle = True
         if self._admit:
             # admission control's drain-capacity estimate: every pod
@@ -570,7 +625,40 @@ class EventEngine:
         intermediate value the scalar engine computed between
         same-timestamp ticks integrates over dt = 0, so only the
         post-sweep rate is observable. Returns whether any function's
-        timer is still live (i.e. the sweep chain continues)."""
+        timer is still live (i.e. the sweep chain continues).
+
+        With ``cfg.batched_policy`` the sweep is two passes instead of
+        one Python loop doing everything: a vectorized pre-pass (batched
+        shed + one ``window_counts`` call + one ``BatchedKalman`` update
+        + one array band classification — see ``_sweep_batched``), then
+        a slot-order pass where provably-no-op ticks take a light
+        epilogue and only slots needing action (or with a policy the
+        decider can't vectorize) run the full per-function path. Either
+        way the sweep is byte-identical to the legacy loop."""
+        t0 = perf_counter()
+        try:
+            if (self._decider is not None
+                    and not (self._injector is not None
+                             and self._injector.in_blackout(t))):
+                return self._sweep_batched(t)
+            return self._sweep_loop(t)
+        finally:
+            self.sweep_seconds += perf_counter() - t0
+            self.n_sweeps += 1
+
+    def _observed_window_s(self, t: float) -> float:
+        """The observed-rate normalization window at sweep time ``t``:
+        the trailing OBS_WINDOW_S, shrunk to the elapsed horizon on
+        early ticks. BOTH the arrival term and the backlog-drain term
+        divide by this — before PR 10 the backlog term divided by the
+        full window even when ``t < OBS_WINDOW_S``, systematically
+        undercounting backlog demand on early ticks."""
+        return max(min(t, OBS_WINDOW_S), 1e-9) if t > 0 else OBS_WINDOW_S
+
+    def _sweep_loop(self, t: float) -> bool:
+        """The legacy per-function sweep loop: blackout sweeps (the
+        policy is unreachable, so there is nothing to batch) and
+        ``batched_policy=False`` runs (the bench baseline)."""
         cfg = self.cfg
         chain = t + cfg.autoscale_interval_s <= cfg.duration_s
         active = self._active
@@ -595,6 +683,7 @@ class EventEngine:
                 scan += 1
             return scan < n_fl
 
+        win = self._observed_window_s(t)
         for st in self.fn_list:
             if not active[st.slot]:
                 continue
@@ -612,9 +701,8 @@ class EventEngine:
                 self._dispatch(t, st)
                 continue
             self._shed(t, st)
-            observed = (st.observed_in_window(t)
-                        / max(min(t, OBS_WINDOW_S), 1e-9) if t > 0 else 0.0)
-            observed += len(st.queue) / OBS_WINDOW_S  # backlog drain demand
+            observed = st.observed_in_window(t) / win if t > 0 else 0.0
+            observed += len(st.queue) / win  # backlog drain demand
             # snapshot quota VALUES before the policy mutates pods in
             # place; between autoscale events the pod set is immutable,
             # so the cached pod_order is the authoritative before-state
@@ -622,16 +710,159 @@ class EventEngine:
             st.policy.tick(t, st.spec, observed)
             self._refresh_pods(st)
             self._count_actions(t, st, before)
-            st.timeline.append(
-                (t, observed, len(st.pod_order),
-                 sum((p.sm / (p.gpu_type.sm_total if p.gpu_type else 8.0))
-                     * p.quota for p in st.pod_order)))
+            if cfg.record_timeline:
+                st.timeline.append(
+                    (t, observed, len(st.pod_order),
+                     sum((p.sm / (p.gpu_type.sm_total if p.gpu_type else 8.0))
+                         * p.quota for p in st.pod_order)))
             if track_peak and recon.n_used_gpus > self.peak_gpus:
                 # intermediate per-function peaks matter: a later
                 # function's tick may release what this one just used
                 self.peak_gpus = recon.n_used_gpus
             if not (chain or work_ahead()):
                 active[st.slot] = False
+            self._schedule_reclaims(t)
+            self._schedule_faults(t)
+            if self._outages:
+                self._close_recovered_outages(t)
+            self._dispatch(t, st)
+        self._cost_rates = self.cost.rates(recon)
+        self._frag_rate = recon.fragmentation()
+        return bool(active.any())
+
+    def _sweep_batched(self, t: float) -> bool:
+        """The vectorized sweep. Pass 1 hoists the order-free per-slot
+        work out of the policy loop: shed/age (touches only the slot's
+        own queue), the observed rate (arrival counts off the merged
+        arrays via ``window_counts`` + the backlog term — no slot's
+        policy can change another slot's queue within a sweep, so
+        observing up front is value-preserving), capacity/pod gathers
+        for decider-eligible slots (a policy only ever mutates its own
+        function's pods, so these are stable across the sweep too), and
+        one ``SweepDecider.decide`` call (batched Kalman + band
+        classification). Pass 2 walks active slots in slot order:
+
+          * fast path (eligible, classified no-op): the tick is provably
+            action-free — skip the policy call, the pod refresh/diff and
+            the reclaim/fault rescans (no new chips or pods can have
+            appeared), keep the timeline row (memoized pod summary),
+            the peak check, the chain check and dispatch;
+          * eligible slots needing action call ``scale()`` directly with
+            the batched prediction (byte-identical to ``tick()`` — the
+            filter lane already did the update);
+          * ineligible slots run the full legacy ``tick()`` path.
+        """
+        cfg = self.cfg
+        chain = t + cfg.autoscale_interval_s <= cfg.duration_s
+        active = self._active
+        recon = self.recon
+        track_peak = self.track_peak
+        dec = self._decider
+        fl = self.fn_list
+        n_fl = len(fl)
+        scan = 0
+
+        def work_ahead() -> bool:
+            nonlocal scan
+            while scan < n_fl and not fl[scan].work_left(t):
+                scan += 1
+            return scan < n_fl
+
+        idx = np.nonzero(active)[0].tolist()
+        if not idx:
+            self._cost_rates = self.cost.rates(recon)
+            self._frag_rate = recon.fragmentation()
+            return False
+        # ---- pass 1: batched shed + observe + decide ----
+        # (scalar indexing into numpy arrays is ~100ns a pop; the hot
+        # loops stay on Python lists and convert once per sweep)
+        win = self._observed_window_s(t)
+        if t > 0 and self._m_t is not None:
+            arr_l = (window_counts(self._m_t, self._m_slot, t, n_fl)
+                     / win).tolist()
+        else:
+            arr_l = [0.0] * n_fl
+        el = dec.eligible.tolist()
+        cap_ok = dec.cap_ok
+        cap = dec.cap
+        obs_l = [0.0] * n_fl
+        hp_l = [False] * n_fl
+        mask_l = [False] * n_fl
+        for i in idx:
+            st = fl[i]
+            self._shed(t, st)
+            obs_l[i] = arr_l[i] + len(st.queue) / win
+            if el[i]:
+                mask_l[i] = True
+                if not cap_ok[i]:
+                    cap[i] = st.policy.capacity(st.spec)
+                    cap_ok[i] = True
+                hp_l[i] = bool(st.pod_order)
+        obs = np.array(obs_l)
+        mask = np.array(mask_l)
+        pred, action, sterile, down_band, delta = dec.decide(
+            t, obs, cap, np.array(hp_l), mask)
+        pred_l = pred.tolist()
+        action_l = action.tolist()
+        sterile_l = sterile.tolist()
+        down_l = down_band.tolist()
+        delta_l = delta.tolist()
+        # ---- pass 2: slot-order epilogues ----
+        for i in idx:
+            st = fl[i]
+            self.n_events += 1
+            fast = mask_l[i] and not action_l[i]
+            if fast and sterile_l[i] and len(recon.gpus) != recon.n_used_gpus:
+                # the sterility proof covers scale()'s shed loop but its
+                # trailing release_empty_gpus() is only a no-op while no
+                # empty chips exist — some do, so run the real call
+                fast = False
+            if fast:
+                # fast path: a provably action-free tick
+                self.fast_ticks += 1
+                if cfg.record_timeline:
+                    cache = st._tl_cache
+                    if cache is None:
+                        cache = st._tl_cache = (
+                            len(st.pod_order),
+                            sum((p.sm / (p.gpu_type.sm_total
+                                         if p.gpu_type else 8.0))
+                                * p.quota for p in st.pod_order))
+                    st.timeline.append((t, obs_l[i]) + cache)
+                if track_peak and recon.n_used_gpus > self.peak_gpus:
+                    self.peak_gpus = recon.n_used_gpus
+                if not (chain or work_ahead()):
+                    active[i] = False
+                if self._outages:
+                    self._close_recovered_outages(t)
+                self._dispatch(t, st)
+                continue
+            before = {p.pod_id: p.quota for p in st.pod_order}
+            acts = None
+            if mask_l[i]:
+                # eligible slot needing action: the filter lane already
+                # ran the Kalman update, hand scale() the prediction
+                acts = st.policy.scale(t, st.spec, pred_l[i])
+                dec.refresh_after_scale(i)
+            else:
+                st.policy.tick(t, st.spec, obs_l[i])
+            self._refresh_pods(st)
+            if mask_l[i] and down_l[i] and not acts:
+                # an action-free down-band call: memoize the proof (the
+                # refresh above wiped any prior one) so future retries
+                # with delta <= this one fast-path until the pod set
+                # changes
+                dec.sterile_delta[i] = delta_l[i]
+            self._count_actions(t, st, before)
+            if cfg.record_timeline:
+                st.timeline.append(
+                    (t, obs_l[i], len(st.pod_order),
+                     sum((p.sm / (p.gpu_type.sm_total if p.gpu_type else 8.0))
+                         * p.quota for p in st.pod_order)))
+            if track_peak and recon.n_used_gpus > self.peak_gpus:
+                self.peak_gpus = recon.n_used_gpus
+            if not (chain or work_ahead()):
+                active[i] = False
             self._schedule_reclaims(t)
             self._schedule_faults(t)
             if self._outages:
@@ -930,6 +1161,11 @@ class EventEngine:
         self.touched_fns.add(st.fid)
         self.fault_counts["quarantines"] += 1
         self.recon.set_quarantined(pod.pod_id, True)
+        if self._decider is not None:
+            # quarantine zeroes the pod in the capacity model without a
+            # pod-set refresh — drop the slot's cached C_f (the sterile
+            # proof survives: _scale_down's arithmetic ignores the flag)
+            self._decider.cap_ok[st.slot] = False
         self._health.reset(pod.pod_id)
         self._push(t + self._res.quarantine_duration_s, QUAR_LIFT,
                    (st.fid, pod.pod_id))
@@ -1043,12 +1279,27 @@ class EventEngine:
                 [np.arange(len(st.arrivals), dtype=np.int64)
                  for st in fn_list if len(st.arrivals)])
             order = np.argsort(m_t, kind="stable")
-            m_tl = m_t[order].tolist()     # plain floats/ints: the hot
-            m_sl = m_slot[order].tolist()  # loop stays out of numpy
-            m_pl = m_pos[order].tolist()   # scalar-indexing overhead
+            # the sorted numpy form is retained for the batched sweep's
+            # window_counts pass; the list copies keep the cursor loop
+            # out of numpy scalar-indexing overhead
+            self._m_t = m_t[order]
+            self._m_slot = m_slot[order]
+            m_tl = self._m_t.tolist()
+            m_sl = self._m_slot.tolist()
+            m_pl = m_pos[order].tolist()
         else:
             m_tl, m_sl, m_pl = [], [], []
         n_arr, mc = len(m_tl), 0
+        # ---- batched decide state ----
+        # one SweepDecider slot per function: eligible slots (plain
+        # HybridAutoScaler with a Kalman predictor, no spot router, no
+        # pre-warm forecasting) take the vectorized fast path; the rest
+        # keep the per-function tick() loop
+        if cfg.batched_policy:
+            from repro.core.autoscaler import SweepDecider
+            self._decider = SweepDecider(len(fn_list))
+            for st in fn_list:
+                self._decider.bind(st.slot, st.policy, st.fid)
         # ---- autoscale sweep state ----
         # every function ticks on the same grid (seeded at t=0, stepped
         # by autoscale_interval_s); the per-slot active mask replaces
@@ -1155,6 +1406,11 @@ class EventEngine:
         return self.frag_integral / horizon if horizon > 0 else 0.0
 
     def _flush(self) -> None:
+        if self._decider is not None:
+            # scatter the batched filter lanes back into the per-policy
+            # KalmanPredictor objects so post-run introspection sees the
+            # same filter state a scalar run would leave behind
+            self._decider.sync_back()
         for st in self.fns.values():
             for rt in st.runtimes.values():
                 for r in rt.inflight:

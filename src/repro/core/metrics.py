@@ -140,6 +140,20 @@ class StreamingQuantiles:
         else:
             np.add.at(self._counts, self._bin_of(arr), 1)
 
+    def add_one(self, x: float) -> None:
+        """Single-sample fast path (the dominant delivery shape on
+        long-tail fleets: one completion per batch). Exact mode appends
+        in pure Python — bit-identical to ``add_many([x])``; sketch
+        mode delegates to the array path so the bin arithmetic (and any
+        platform quirk of numpy's log) stays identical to it."""
+        if self._counts is None:
+            self.n += 1
+            self._exact.append(float(x))
+            if len(self._exact) > self.exact_limit:
+                self._spill()
+        else:
+            self.add_many((x,))
+
     def percentiles(self) -> Dict[str, float]:
         """p50/p90/p95/p99 in the ``slo.percentiles`` shape: exact below
         the limit, bin-midpoint answers (rel err <= ``rel_err_bound``)
@@ -183,6 +197,21 @@ class RunStreamStats:
     def fold(self, slo_baseline_s: float, reqs) -> None:
         """Fold one batch of completed requests measured against the
         owning function's SLO baseline (seconds)."""
+        if len(reqs) == 1:
+            # scalar fast path: skip the array ceremony for the
+            # single-completion deliveries that dominate long-tail
+            # replays. Float division and comparison are IEEE-identical
+            # to the one-element array ops below.
+            lat = reqs[0].latency
+            if lat is None:
+                return
+            self.n += 1
+            self.quantiles.add_one(lat)
+            norm = lat / slo_baseline_s
+            for m in self.multipliers:
+                if norm > m:
+                    self.viol[m] += 1
+            return
         lats = np.asarray([r.latency for r in reqs
                            if r.latency is not None], dtype=float)
         if lats.size == 0:

@@ -87,6 +87,13 @@ class Reconfigurator:
         # spot-reclaim notice times (appended by mark_doomed): the
         # hybrid router's reclaim-pressure signal reads the tail
         self.reclaim_log: List[float] = []
+        # chip-drop listeners, the cluster-level sibling of
+        # VirtualGPU.remove_listeners: fired with the chip as it leaves
+        # the cluster (_drop_gpu), whatever the removal path — policy
+        # release, spot reclaim kill, or chip hard-failure. The event
+        # engine uses this to prune per-chip bookkeeping (uuids are
+        # never reused, so a dropped chip's entries are dead weight)
+        self.drop_listeners: List[Callable[[VirtualGPU], None]] = []
         # ---- hot-path indexes ----
         self._pods: Dict[str, PodAlloc] = {}          # pod_id -> pod
         self._pod_gpu: Dict[str, str] = {}            # pod_id -> gpu uuid
@@ -199,6 +206,8 @@ class Reconfigurator:
         slot = int(g.node.rsplit("-", 1)[1])
         self._node_counts[slot] -= 1
         del self.gpus[g.uuid]
+        for listener in self.drop_listeners:
+            listener(g)
 
     # ---- spot reclaims -----------------------------------------------------
     def mark_doomed(self, uuid: str, kill_at: float,

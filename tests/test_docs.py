@@ -65,6 +65,23 @@ def test_scenarios_doc_mentions_each_fleet():
                     f"docs/scenarios.md")
 
 
+def test_full_replay_doc_drift():
+    """docs/scenarios.md must document the ``--full`` multi-day Azure
+    replay and name the pieces it is built from (the vectorized trace
+    builders and the bench entry the run lands in)."""
+    from repro.workloads.azure import replay_workload  # noqa: F401
+
+    text = SCENARIOS_MD.read_text()
+    assert "### The `--full` replay" in text
+    section = text.split("### The `--full` replay", 1)[1]
+    section = section.split("\n## ", 1)[0]
+    for needle in ("replay_workload", "rate_series_fast",
+                   "arrivals_fast", "engine_wide_replay",
+                   "bench_engine --full", "streaming"):
+        assert needle in section, (
+            f"{needle!r} missing from the --full replay doc")
+
+
 def test_cold_start_lifecycle_doc_drift():
     """architecture.md's "life of a cold start" section must exist and
     stay in sync with the code: every registered device type appears in
@@ -140,7 +157,13 @@ def test_wide_engine_doc_drift():
                    "benchmarks/ref_engine.json",
                    "tests/test_engine_parity.py",
                    "tests/test_streaming_metrics.py",
-                   "tests/test_wide_engine.py"):
+                   "tests/test_wide_engine.py",
+                   # PR 10: the batched decide path and its bugfixes
+                   "window_counts", "BatchedKalman", "SweepDecider",
+                   "batched_policy", "sterile-down", "sweep_speedup",
+                   "OBS_WINDOW_S", "normalization",
+                   "_reclaim_scheduled", "drop_listeners", "--full",
+                   "tests/test_batched_sweep.py"):
         assert needle in section, (
             f"{needle!r} missing from the wide-engine section")
     assert (REPO / "benchmarks" / "ref_engine.json").exists(), (

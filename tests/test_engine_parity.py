@@ -26,8 +26,22 @@ import pytest
 
 from repro.core import FaultModel, ResilienceConfig
 from repro.core.engine_scalar import ScalarEventEngine
+from repro.core.events import EventEngine
 from repro.workloads import azure, generators
 from repro.workloads.scenarios import LIFECYCLE_CACHED, Scenario
+
+
+class NoBatchEngine(EventEngine):
+    """Wide engine with the batched decide path disabled: every sweep
+    takes the legacy per-function loop. The third arm of the diff —
+    the vectorized sweep must be byte-identical to both this and the
+    frozen scalar reference."""
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        # replace, don't mutate: the SimConfig may be shared with the
+        # simulator that built us
+        self.cfg = dataclasses.replace(self.cfg, batched_policy=False)
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -84,7 +98,8 @@ ARCH_SETS = (("olmo-1b",), ("mamba2-2.7b",),
 
 def run_both(trace, archs, rps, dur, policy, fleet_key, fault_key,
              lifecycle, width, seed):
-    """One differential run: (wide RunMetrics JSON, scalar ditto)."""
+    """One differential run: (wide RunMetrics, scalar ditto, wide with
+    the batched decide path off)."""
     faults, resilience = FAULTS[fault_key]
     sc = Scenario(
         name="fuzz", description="differential-fuzz config",
@@ -96,14 +111,18 @@ def run_both(trace, archs, rps, dur, policy, fleet_key, fault_key,
     wide = sc.run(policy, seed=seed).metrics
     scalar = sc.run(policy, seed=seed,
                     engine_cls=ScalarEventEngine).metrics
-    return wide, scalar
+    nobatch = sc.run(policy, seed=seed, engine_cls=NoBatchEngine).metrics
+    return wide, scalar, nobatch
 
 
-def assert_parity(wide, scalar):
+def assert_parity(wide, scalar, nobatch=None):
     # diff() first for a readable field-by-field failure, then the
     # byte-level pin the goldens rely on
     assert wide.diff(scalar, rel=0.0, abs_tol=0.0) == []
     assert wide.to_json() == scalar.to_json()
+    if nobatch is not None:
+        assert wide.diff(nobatch, rel=0.0, abs_tol=0.0) == []
+        assert wide.to_json() == nobatch.to_json()
 
 
 # a fixed sample spanning the feature matrix: every trace family, every
@@ -130,8 +149,8 @@ FALLBACK_CASES = [
                               for c in FALLBACK_CASES])
 def test_parity_seeded_fallback(case):
     """Always-on differential sample (no hypothesis required)."""
-    wide, scalar = run_both(*case)
-    assert_parity(wide, scalar)
+    wide, scalar, nobatch = run_both(*case)
+    assert_parity(wide, scalar, nobatch)
     # the runs must carry signal, not vacuous empty traces
     assert wide.n_arrived > 20
 
@@ -151,8 +170,8 @@ def test_parity_random_sample():
                 rng.random() < 0.5,
                 rng.choice([1, 1, 4]),
                 rng.randrange(10_000))
-        wide, scalar = run_both(*case)
-        assert_parity(wide, scalar)
+        wide, scalar, nobatch = run_both(*case)
+        assert_parity(wide, scalar, nobatch)
 
 
 if HAVE_HYPOTHESIS:
@@ -169,9 +188,10 @@ if HAVE_HYPOTHESIS:
     def test_parity_hypothesis(trace, archs, rps, policy, fleet_key,
                                fault_key, lifecycle, width, seed):
         """hypothesis-driven differential fuzz over the same space."""
-        wide, scalar = run_both(trace, archs, rps, 9.0, policy, fleet_key,
-                                fault_key, lifecycle, width, seed)
-        assert_parity(wide, scalar)
+        wide, scalar, nobatch = run_both(trace, archs, rps, 9.0, policy,
+                                         fleet_key, fault_key, lifecycle,
+                                         width, seed)
+        assert_parity(wide, scalar, nobatch)
 
 
 def test_scalar_reference_is_frozen():
